@@ -1,0 +1,63 @@
+"""Measured collective bytes of the actual TPU engines (lowered HLO).
+
+Standalone (sets the fake-device flag before importing jax — run as
+``python benchmarks/measure_comm.py`` or via benchmarks.run which spawns it
+as a subprocess so the main process keeps seeing one device).
+
+Measures, per engine x mesh, the per-device collective wire bytes of one
+block-sparse multiplication, and validates the paper's two claims on the
+real compiled programs:
+  * PTP (cannon) == OS1 (onesided) A/B volume     [Table 2]
+  * 2.5D volume drops vs L=1 and obeys Eq. (7)    [Fig. 3]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=64 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.engine import lower_multiply  # noqa: E402
+from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
+from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
+
+NB, BS = 16, 8
+
+
+def measure(mesh, engine, **kw) -> float:
+    lowered = lower_multiply(mesh, NB, BS, engine=engine, **kw)
+    rep = analyze_hlo(lowered.compile().as_text(), default_group=mesh.size)
+    return rep.collective_wire_bytes
+
+
+def main() -> None:
+    rows = []
+    for p in (2, 4):
+        mesh = make_spgemm_mesh(p=p)
+        vols = {e: measure(mesh, e) for e in ("cannon", "onesided", "gather")}
+        for e, v in vols.items():
+            rows.append((f"measured/{e}/p{p}/bytes_per_dev", round(v), ""))
+        assert 0.7 < vols["onesided"] / vols["cannon"] <= 1.01, vols
+
+    base = measure(make_spgemm_mesh(p=4), "onesided")
+    for l in (2, 4):
+        v = measure(make_spgemm_mesh(p=4, l=l), "twofive", c_layout="scatter")
+        rows.append(
+            (
+                f"measured/twofive_L{l}/p4/bytes_per_dev",
+                round(v),
+                f"vs L=1 {base:.0f}: x{v / base:.2f}",
+            )
+        )
+        assert v < base, (l, v, base)
+
+    for name, val, note in rows:
+        print(f"{name},{val},{note}")
+
+
+if __name__ == "__main__":
+    main()

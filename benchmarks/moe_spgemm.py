@@ -1,0 +1,70 @@
+"""Beyond-paper carry-over: MoE expert compute as block-sparse SpGEMM.
+
+The (token-block x expert) dispatch structure of an MoE layer IS a
+block-sparse matrix: block row = a contiguous block of tokens, block col =
+an expert, occupied iff any token in the block routes to that expert.  The
+paper's on-the-fly filtering (skip products below a norm threshold) maps to
+skipping (token-block, expert) pairs with no routed tokens — exactly what
+the Pallas ``block_spgemm`` kernel's ``@pl.when`` predication does on the
+MXU.
+
+This benchmark measures the occupancy of that dispatch matrix for the
+assigned MoE archs (top-k over E experts, realistic router entropy) and the
+fraction of block products the filter removes — the FLOP savings the
+SpGEMM view buys on TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+
+
+def dispatch_occupancy(
+    n_tokens: int, n_experts: int, top_k: int, token_block: int, key
+) -> float:
+    """Occupancy of the (token-block x expert) block mask under uniform-ish
+    routing (worst case for filtering: balanced load)."""
+    top_e = jax.random.randint(key, (n_tokens, top_k), 0, n_experts)
+    nb = n_tokens // token_block
+    blocks = top_e[: nb * token_block].reshape(nb, token_block * top_k)
+    onehot = jax.nn.one_hot(blocks, n_experts).max(axis=1)  # (nb, E)
+    return float(onehot.mean())
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cases = {
+        "llama4_maverick_400b_a17b": None,  # 128e top-1
+        "deepseek_moe_16b": None,  # 64e top-6
+        "jamba_v0_1_52b": None,  # 16e top-2
+    }
+    for aid in cases:
+        cfg = get_arch(aid)
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        for tb in (64, 256):
+            occ = dispatch_occupancy(4096, e, k, tb, jax.random.key(0))
+            rows.append(
+                (
+                    f"moe_spgemm/{aid}/tb{tb}/occupancy",
+                    round(occ, 3),
+                    f"E={e} top{k}; filter skips {1 - occ:.0%} of block products",
+                )
+            )
+    return rows
+
+
+def check() -> None:
+    # top-1 of 128 experts with small token blocks is very sparse; the
+    # filter removes most products — the SpGEMM view pays off most there
+    occ_sparse = dispatch_occupancy(4096, 128, 1, 64, jax.random.key(0))
+    occ_dense = dispatch_occupancy(4096, 16, 2, 256, jax.random.key(0))
+    assert occ_sparse < 0.5
+    assert occ_dense > occ_sparse
+
+
+if __name__ == "__main__":
+    check()
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

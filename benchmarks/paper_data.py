@@ -1,0 +1,88 @@
+"""Published reference numbers from the paper (PASC '17) used as oracles.
+
+Table 2: DBCSR total communicated data per process (GB) for the strong
+scaling runs, and the grid/L layout per node count.  Fig. 3 ratio inputs
+(measured S_C / S_{A,B}) are in configs/dbcsr_benchmarks.SC_OVER_SAB.
+"""
+from __future__ import annotations
+
+# node count -> (P_R, P_C) process grid. 200 nodes is the paper's
+# non-square example (virtual topology V = lcm = 20); the rest are square.
+GRIDS = {
+    200: (10, 20),
+    400: (20, 20),
+    729: (27, 27),
+    1296: (36, 36),
+    2704: (52, 52),
+}
+
+# node count -> L values reported in Table 2 (besides L=1).  Non-square 200
+# forces L=2 (= mx/mn); square grids allow square L with sqrt(L) | P_R.
+TABLE2_L = {
+    200: (2,),
+    400: (4,),
+    729: (9,),
+    1296: (4, 9),
+    2704: (4,),
+}
+
+# Table 2, "DBCSR total communicated data per process (GB)":
+# benchmark -> {nodes: {L: GB}}; L=1 covers both PTP and OS1 (equal volume).
+COMM_GB = {
+    "h2o_dft_ls": {
+        200: {1: 640, 2: 491},
+        400: {1: 318, 4: 228},
+        729: {1: 236, 9: 145},
+        1296: {1: 177, 4: 108, 9: 96},
+        2704: {1: 122, 4: 70},
+    },
+    "s_e": {
+        200: {1: 856, 2: 630},
+        400: {1: 445, 4: 286},
+        729: {1: 329, 9: 200},
+        1296: {1: 247, 4: 140, 9: 125},
+        2704: {1: 171, 4: 93},
+    },
+    "dense": {
+        200: {1: 51, 2: 38},
+        400: {1: 26, 4: 15},
+        729: {1: 20, 9: 10},
+        1296: {1: 15, 4: 8, 9: 6},
+        2704: {1: 10, 4: 5},
+    },
+}
+
+# Table 2, DBCSR execution time (seconds), PTP vs best OSL per node count
+EXEC_S = {
+    "h2o_dft_ls": {
+        200: {"ptp": 325, "os1": 298, "best": 260},
+        400: {"ptp": 212, "os1": 184, "best": 148},
+        729: {"ptp": 155, "os1": 137, "best": 117},
+        1296: {"ptp": 136, "os1": 120, "best": 85},
+        2704: {"ptp": 99, "os1": 85, "best": 55},
+    },
+    "s_e": {
+        200: {"ptp": 558, "os1": 500, "best": 459},
+        400: {"ptp": 390, "os1": 310, "best": 310},
+        729: {"ptp": 310, "os1": 246, "best": 246},
+        1296: {"ptp": 282, "os1": 205, "best": 199},
+        2704: {"ptp": 249, "os1": 178, "best": 172},
+    },
+    "dense": {
+        200: {"ptp": 42.8, "os1": 43.0, "best": 42.8},
+        400: {"ptp": 22.1, "os1": 21.9, "best": 21.9},
+        729: {"ptp": 13.3, "os1": 13.3, "best": 13.3},
+        1296: {"ptp": 11.2, "os1": 10.9, "best": 10.5},
+        2704: {"ptp": 10.8, "os1": 10.0, "best": 9.7},
+    },
+}
+
+# paper headline: best OSL speedup 1.80x (H2O-DFT-LS at 2704 nodes)
+BEST_SPEEDUP = 1.80
+
+# §4: fraction of DBCSR time in mpi_waitall for A/B at 2704 nodes
+WAITALL_FRAC_2704 = {
+    "h2o_dft_ls": {"ptp": 0.57, "os1": 0.50},
+    "s_e": {"ptp": 0.32, "os1": 0.05},
+    "dense": {"ptp": 0.41, "os1": 0.37},
+}

@@ -1,0 +1,98 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch, shape, mesh): the three terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and per-device memory.  Also ranks cells for the
+§Perf hillclimb selection (worst roofline fraction / most collective-bound).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        name = os.path.basename(path)[: -len(".json")]
+        parts = name.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        cells.append(d)
+    return cells
+
+
+def rows(cells) -> list[tuple[str, float, str]]:
+    out = []
+    for c in cells:
+        cid = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c.get("skipped"):
+            out.append((f"roofline/{cid}", 0.0, "SKIP: " + c["skip_reason"][:60]))
+            continue
+        if not c.get("ok"):
+            out.append((f"roofline/{cid}", -1.0, "FAIL: " + c.get("error", "")[:80]))
+            continue
+        r = c["roofline"]
+        dom = r["dominant"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        mem_gb = r["memory"]["peak_bytes"] / 2**30
+        out.append(
+            (
+                f"roofline/{cid}",
+                round(frac, 3),
+                f"dom={dom} comp={r['compute_s']*1e3:.1f}ms "
+                f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+                f"useful={r['useful_flops_ratio']:.2f} hbm={mem_gb:.1f}GiB",
+            )
+        )
+    return out
+
+
+def ranking(cells) -> list[tuple[str, float, str]]:
+    live = [c for c in cells if c.get("ok") and not c.get("skipped")]
+
+    def frac(c):
+        r = c["roofline"]
+        b = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        return r["compute_s"] / b if b else 0.0
+
+    def coll_share(c):
+        r = c["roofline"]
+        t = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        return r["collective_s"] / t if t else 0.0
+
+    out = []
+    worst = sorted(live, key=frac)[:3]
+    for c in worst:
+        out.append(
+            (f"ranking/worst_roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+             round(frac(c), 3), "hillclimb candidate")
+        )
+    collbound = sorted(live, key=coll_share, reverse=True)[:3]
+    for c in collbound:
+        out.append(
+            (f"ranking/most_collective/{c['arch']}/{c['shape']}/{c['mesh']}",
+             round(coll_share(c), 3), "hillclimb candidate")
+        )
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    cells = load_cells()
+    if not cells:
+        return [("roofline/no_artifacts", -1.0,
+                 "run PYTHONPATH=src python -m repro.launch.dryrun first")]
+    return rows(cells) + ranking(cells)
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

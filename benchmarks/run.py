@@ -1,0 +1,80 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+
+Prints ``name,value,notes`` CSV.  Each module's ``check()`` asserts the
+paper-claim validation (Table 2 within 2x on all 39 cells, Fig. 2/3/4
+scaling laws, Fig. 1 bounds); ``run()`` emits the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from benchmarks import (
+    fig1_speedups,
+    fig2_message_sizes,
+    fig3_comm_ratios,
+    fig4_weak_scaling,
+    moe_spgemm,
+    roofline_report,
+    table1_matrices,
+    table2_strong_scaling,
+)
+
+MODULES = [
+    ("table1", table1_matrices, False),
+    ("table2", table2_strong_scaling, True),
+    ("fig1", fig1_speedups, True),
+    ("fig2", fig2_message_sizes, True),
+    ("fig3", fig3_comm_ratios, True),
+    ("fig4", fig4_weak_scaling, True),
+    ("moe_spgemm", moe_spgemm, True),
+    ("roofline", roofline_report, False),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip the 64-fake-device HLO measurement subprocess")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name, mod, has_check in MODULES:
+        if args.only and name not in args.only:
+            continue
+        try:
+            if has_check:
+                mod.check()
+            for row_name, val, note in mod.run():
+                print(f"{row_name},{val},{note}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name}/CHECK_FAILED,-1,{e!r}", flush=True)
+
+    if not args.skip_measured and (not args.only or "measured" in args.only):
+        # HLO-measured engine collective bytes need fake devices -> subprocess
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        proc = subprocess.run(
+            [sys.executable, os.path.join(root, "benchmarks", "measure_comm.py")],
+            capture_output=True, text=True, timeout=900,
+        )
+        if proc.returncode != 0:
+            failures.append(("measured", proc.stderr[-500:]))
+            print(f"measured/CHECK_FAILED,-1,{proc.stderr[-200:]!r}")
+        else:
+            sys.stdout.write(proc.stdout)
+
+    if failures:
+        print(f"\n{len(failures)} benchmark module(s) FAILED", file=sys.stderr)
+        for n, e in failures:
+            print(f"  {n}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

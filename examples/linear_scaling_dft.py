@@ -1,0 +1,73 @@
+"""End-to-end driver: linear-scaling DFT density-matrix purification.
+
+    python examples/linear_scaling_dft.py
+
+The paper's driving application (CP2K): compute the density matrix
+P = 1/2 (I - sign(H - mu I)) of a sparse model Hamiltonian WITHOUT
+diagonalization, via the Newton-Schulz sign iteration (Eq. (3)) — two
+filtered block-sparse multiplications per iteration on the 2.5D engine.
+
+Validates the physics observable trace(P) == number of occupied states
+against a dense eigendecomposition, and reports the occupancy trajectory
+(the sparsity the filtering maintains — the paper's premise).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bsm as B
+from repro.core.signiter import density_matrix, trace
+from repro.launch.mesh import make_spgemm_mesh
+
+
+def main() -> None:
+    # sparse model Hamiltonian: banded block structure (near-sighted
+    # operator), symmetric, ~10% block occupancy — H2O-DFT-LS-like
+    h = B.random_bsm(
+        jax.random.key(42), nb=12, bs=8, occupancy=0.10,
+        pattern="banded", bandwidth=2, symmetric=True,
+    )
+    n = h.shape[0]
+    dense_h = np.asarray(h.to_dense(), np.float64)
+    w = np.linalg.eigvalsh(dense_h)
+    mu = float(np.median(w))  # half filling
+    n_occ = int((w < mu).sum())
+    print(f"H: {n}x{n}, block occupancy {float(h.occupancy()):.1%}, "
+          f"{n_occ} states below mu={mu:.4f}")
+
+    mesh = make_spgemm_mesh(p=2, l=2)  # the 2.5D engine, L=2
+    t0 = time.time()
+    p, stats = density_matrix(
+        h, mu, mesh=mesh, engine="twofive",
+        threshold=1e-9, filter_eps=1e-8, max_iter=100, tol=1e-6,
+    )
+    dt = time.time() - t0
+
+    tr = float(trace(p))
+    print(f"sign iteration: {stats.iterations} iterations "
+          f"({stats.multiplications} multiplications, 2/iter per Eq. (3)), "
+          f"converged={stats.converged}, {dt:.1f}s")
+    print(f"trace(P) = {tr:.4f}  (want {n_occ} occupied states)")
+    print(f"occupancy trajectory: "
+          f"{[f'{o:.0%}' for o in stats.occupancy_trace[:8]]}...")
+
+    pd = np.asarray(p.to_dense(), np.float64)
+    idem = np.abs(pd @ pd - pd).max()
+    print(f"idempotency |P^2 - P|_max = {idem:.2e} (projector check)")
+    assert abs(tr - n_occ) < 0.05, (tr, n_occ)
+    assert idem < 5e-3
+    print("linear_scaling_dft OK")
+
+
+if __name__ == "__main__":
+    main()

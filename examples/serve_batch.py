@@ -1,0 +1,59 @@
+"""Example: batched serving with prefill + decode against a KV cache.
+
+    python examples/serve_batch.py
+
+Drives the ServingEngine (slot-based batching, greedy + temperature
+sampling, EOS early-exit) with a reduced qwen-family model, and verifies
+decode consistency: the engine's greedy continuation equals teacher-forced
+argmax over a full forward pass.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving.engine import GenerationConfig, ServingEngine
+
+
+def main() -> None:
+    cfg = get_arch("qwen1.5-4b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+
+    engine = ServingEngine(
+        cfg, params, batch=4, max_len=128,
+        gen=GenerationConfig(max_new_tokens=12, temperature=0.0),
+    )
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+               for _ in range(4)]
+
+    t0 = time.time()
+    outs = engine.generate(prompts)
+    dt = time.time() - t0
+    print(f"4 requests x 12 tokens in {dt:.1f}s (incl. compile)")
+    for i, o in enumerate(outs):
+        print(f"  req{i}: {o}")
+
+    # consistency oracle: greedy engine output == teacher-forced argmax
+    full = np.concatenate([prompts[0], np.asarray(outs[0][:-1], np.int32)])
+    x, _ = T.forward(cfg, params, jnp.asarray(full[None]))
+    logits = L.logits_matmul(
+        cfg, params["embed"], L.apply_norm(cfg, params["final_norm"], x))
+    greedy = np.asarray(jnp.argmax(logits[0, len(prompts[0]) - 1 :], -1))
+    match = int((greedy[: len(outs[0])] == np.asarray(outs[0])).sum())
+    print(f"teacher-forced consistency: {match}/{len(outs[0])} tokens match")
+    assert match >= len(outs[0]) - 1  # allow one borderline tie flip
+    print("serve_batch OK")
+
+
+if __name__ == "__main__":
+    main()

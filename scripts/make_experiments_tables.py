@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/make_experiments_tables.py [tag]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(tag: str = "") -> dict[tuple, dict]:
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        parts = os.path.basename(path)[: -len(".json")].split("__")
+        if tag and (len(parts) != 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        cells[(parts[0], parts[1], parts[2])] = d
+    return cells
+
+
+def fmt_cell(d: dict) -> str:
+    if d.get("skipped"):
+        return "— (skip)"
+    if not d.get("ok"):
+        return "**FAIL**"
+    r = d["roofline"]
+    mem_gib = r["memory"]["peak_bytes"] / 2**30
+    return (f"ok, {d['compile_s']:.0f}s compile, {mem_gib:.1f} GiB/dev")
+
+
+def dryrun_table(cells) -> str:
+    archs = sorted({k[0] for k in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    out = ["| arch | " + " | ".join(f"{s} (single / multi)" for s in shapes) + " |",
+           "|---" * (len(shapes) + 1) + "|"]
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            single = cells.get((a, s, "single"))
+            multi = cells.get((a, s, "multi"))
+            f = lambda d: ("—" if d is None else
+                           ("skip" if d.get("skipped") else
+                            ("OK" if d.get("ok") else "FAIL")))
+            row.append(f"{f(single)} / {f(multi)}")
+        out.append("| " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(cells, mesh="single") -> str:
+    hdr = ("| arch / shape | comp (s) | mem (s) | mem-kern (s) | coll (s) | "
+           "dominant | useful | HBM GiB/dev | fits 16G |")
+    out = [hdr, "|---" * 9 + "|"]
+    for (a, s, m), d in sorted(cells.items()):
+        if m != mesh or d.get("skipped") or not d.get("ok"):
+            continue
+        r = d["roofline"]
+        gib = r["memory"]["peak_bytes"] / 2**30
+        mk = r.get("memory_s_kernel", r["memory_s"])
+        out.append(
+            f"| {a}/{s} | {r['compute_s']:.2f} | {r['memory_s']:.2f} | "
+            f"{mk:.2f} | {r['collective_s']:.2f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {gib:.1f} | "
+            f"{'yes' if gib <= 16 else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def summary(cells) -> str:
+    ok = sum(1 for d in cells.values() if d.get("ok") and not d.get("skipped"))
+    skip = sum(1 for d in cells.values() if d.get("skipped"))
+    fail = sum(1 for d in cells.values() if not d.get("ok"))
+    fits = sum(1 for d in cells.values()
+               if d.get("ok") and not d.get("skipped")
+               and d["roofline"]["memory"]["peak_bytes"] / 2**30 <= 16)
+    return f"{ok} ok ({fits} fit 16 GiB HBM), {skip} documented skips, {fail} failures"
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    cells = load(tag)
+    print(f"## cells (tag={tag or 'baseline'}): {summary(cells)}\n")
+    print(dryrun_table(cells))
+    print()
+    for mesh in ("single", "multi"):
+        print(f"### roofline — {mesh} pod\n")
+        print(roofline_table(cells, mesh))
+        print()

@@ -1,0 +1,50 @@
+"""Quick dev smoke: forward + loss + grad + decode for every reduced arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer as T
+
+which = sys.argv[1:] or ARCH_IDS
+
+for aid in which:
+    cfg = get_arch(aid).reduced()
+    key = jax.random.key(0)
+    params = T.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    b, s = 2, 64
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab),
+        "targets": jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.ones((b, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = jnp.ones(
+            (b, cfg.encoder.n_frames, cfg.d_model), jnp.float32
+        )
+
+    loss, metrics = jax.jit(lambda p, ba: T.loss_fn(cfg, p, ba))(params, batch)
+    grads = jax.jit(jax.grad(lambda p, ba: T.loss_fn(cfg, p, ba)[0]))(params, batch)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(loss)), aid
+    assert np.isfinite(float(gn)), aid
+
+    # decode 3 tokens
+    cache = T.init_cache(cfg, b, 128)
+    logits, cache = jax.jit(lambda p, t, c: T.prefill(cfg, p, t, c,
+        frame_embeds=batch.get("frame_embeds"), patch_embeds=batch.get("patch_embeds")))(
+        params, batch["tokens"], cache)
+    assert logits.shape == (b, 1, cfg.vocab), (aid, logits.shape)
+    pos = jnp.asarray(s, jnp.int32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for i in range(3):
+        logits, cache = jax.jit(lambda p, t, c, po: T.decode_step(cfg, p, t, c, po))(
+            params, tok, cache, pos + i)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), aid
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    print(f"{aid:30s} OK  loss={float(loss):.3f} gnorm={float(gn):.3f} params={n_params:,}")
+print("ALL OK")

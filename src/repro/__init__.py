@@ -1,0 +1,4 @@
+"""repro — 2.5D communication-reducing block-sparse SpGEMM (DBCSR, PASC'17)
+re-built as a TPU-native JAX framework, plus the multi-arch LM stack that
+integrates the paper's distribution technique."""
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""repro.checkpoint — sharded, atomic, keep-k checkpointing with cross-mesh
+restore (elastic shrink/grow)."""
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,58 @@
+"""repro.core — the paper's contribution: block-sparse matrix format and
+communication-reducing distributed multiplication engines."""
+from repro.core.bsm import (
+    BlockSparseMatrix,
+    add,
+    block_norms,
+    filter_bsm,
+    from_dense,
+    identity,
+    make_bsm,
+    permute,
+    random_bsm,
+    scale,
+)
+from repro.core.commvolume import (
+    memory_factor,
+    mesh25d_volume,
+    osl_volume,
+    ptp_volume,
+    volume_ratio_os1_over_osl,
+)
+from repro.core.engine import ENGINES, lower_multiply, multiply, multiply_reference
+from repro.core.signiter import density_matrix, sign_iteration, trace
+from repro.core.topology import (
+    Topology,
+    make_topology,
+    simulate_algorithm2,
+    validate_l,
+)
+
+__all__ = [
+    "BlockSparseMatrix",
+    "ENGINES",
+    "Topology",
+    "add",
+    "block_norms",
+    "density_matrix",
+    "filter_bsm",
+    "from_dense",
+    "identity",
+    "lower_multiply",
+    "make_bsm",
+    "make_topology",
+    "memory_factor",
+    "mesh25d_volume",
+    "multiply",
+    "multiply_reference",
+    "osl_volume",
+    "permute",
+    "ptp_volume",
+    "random_bsm",
+    "scale",
+    "sign_iteration",
+    "simulate_algorithm2",
+    "trace",
+    "validate_l",
+    "volume_ratio_os1_over_osl",
+]

@@ -1,0 +1,96 @@
+"""Communication-volume and memory model of the paper (Eq. (6), (7)).
+
+All quantities are *per process*, per multiplication, in units of the panel
+sizes ``s_a``, ``s_b``, ``s_c`` (bytes or elements — caller's choice).
+
+Paper Eq. (7): total requested data per process
+
+    (V / sqrt(L)) * (S_A + S_B)   +   (L - 1) * S_C
+
+giving O(1/sqrt(P*L)) scaling for the communicated volume, while the memory
+footprint grows by O(L) (Eq. (6)).
+
+These analytic values are cross-checked in the benchmarks against the
+*measured* collective bytes of the lowered shard_map programs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.topology import Topology, make_topology
+
+
+@dataclass(frozen=True)
+class VolumeReport:
+    engine: str
+    p_r: int
+    p_c: int
+    l: int
+    ticks: int
+    ab_volume: float  # A+B panel traffic per process
+    c_volume: float  # partial-C reduction traffic per process
+    total: float
+
+
+def ptp_volume(topo: Topology, s_a: float, s_b: float) -> VolumeReport:
+    """Cannon + point-to-point (Algorithm 1): V shifts of A and B panels,
+    plus the pre-shift (2 extra panel transfers)."""
+    v = topo.v
+    ab = v * (s_a + s_b) + (s_a + s_b)  # ticks + pre-shift
+    return VolumeReport("ptp", topo.p_r, topo.p_c, 1, v, ab, 0.0, ab)
+
+
+def osl_volume(topo: Topology, s_a: float, s_b: float, s_c: float) -> VolumeReport:
+    """One-sided 2.5D (Algorithm 2), paper Eq. (7). L=1 gives OS1 (no
+    pre-shift, same tick volume as PTP)."""
+    v, l = topo.v, topo.l
+    ab = (v / math.sqrt(l)) * (s_a + s_b)
+    c = (l - 1) * s_c
+    return VolumeReport(
+        f"os{l}", topo.p_r, topo.p_c, l, v // l, ab, c, ab + c
+    )
+
+
+def memory_factor(topo: Topology, s_a: float, s_b: float, s_c: float) -> float:
+    """Eq. (6): temporary-buffer memory growth of OSL relative to OS1."""
+    l = topo.l
+    if l == 1:
+        return 1.0
+    base = s_c / (3.0 * (s_a + s_b)) * l
+    if topo.square:
+        return base + (math.isqrt(l) + 4.0) / 6.0
+    return base + 1.0
+
+
+def volume_ratio_os1_over_osl(
+    topo: Topology, s_a: float, s_b: float, s_c: float
+) -> float:
+    """Figure 3 of the paper: OS1 volume / OSL volume (>1 == OSL wins)."""
+    os1 = osl_volume(make_topology(topo.p_r, topo.p_c, 1), s_a, s_b, s_c)
+    osl = osl_volume(topo, s_a, s_b, s_c)
+    return os1.total / osl.total
+
+
+def scaling_per_process(p: int, l: int, n_elems: float) -> float:
+    """O(1/sqrt(P*L)) communicated-volume scaling law (for plots): the
+    communicated A+B volume per process for an n x n matrix on P processes
+    re-factored with depth L (square topology)."""
+    return 2.0 * n_elems / math.sqrt(p * l)
+
+
+def mesh25d_volume(
+    s: int, l: int, s_a: float, s_b: float, s_c: float
+) -> VolumeReport:
+    """Volume model for the *mesh formulation* used by the JAX engine
+    (`repro.core.twofive`): an (L, s, s) device mesh where every layer runs
+    s/L Cannon ticks over its k-slice and partial C is reduce-scattered over
+    the L axis.  Panel sizes here are the (N/s)^2-block panels.
+
+    Equivalent asymptotics to Eq. (7): AB volume = (s/L)(S_A+S_B) panels =
+    2 N^2 / (s L) elements = O(1/sqrt(P L)) with P = L s^2.
+    """
+    ticks = s // l
+    ab = (ticks - 1 + 1) * (s_a + s_b) + (s_a + s_b)  # ticks + pre-shift
+    c = (l - 1) / l * s_c  # reduce-scatter bytes over the depth axis
+    return VolumeReport(f"mesh25d-l{l}", s, s, l, ticks, ab, c, ab + c)

@@ -1,0 +1,122 @@
+"""Engine dispatcher: the public ``multiply`` entry point.
+
+Engines (paper terminology in parentheses):
+
+  cannon    — 2D Cannon, ring point-to-point shifts (PTP, Algorithm 1)
+  onesided  — 2D pull-from-home streaming, no pre-shift (OS1, Alg. 2, L=1)
+  gather    — 2D pull-from-home via fused all-gather (TPU-native OS1)
+  twofive   — 2.5D with depth axis L (OSL, Algorithm 2)
+
+A single-device reference (`multiply_reference`) implements the identical
+filtered semantics without any mesh — the oracle for every engine test.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bsm import BlockSparseMatrix, block_norms, filter_bsm
+from repro.core.cannon import multiply_2d
+from repro.core.gather import multiply_gather
+from repro.core.local_mm import local_filtered_mm
+from repro.core.twofive import multiply_25d
+
+ENGINES = ("cannon", "onesided", "gather", "twofive")
+
+
+@partial(jax.jit, static_argnames=("threshold", "backend"))
+def multiply_reference(
+    a: BlockSparseMatrix,
+    b: BlockSparseMatrix,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+) -> BlockSparseMatrix:
+    """Single-device filtered block multiply (oracle)."""
+    cb, cm = local_filtered_mm(
+        a.blocks,
+        a.mask,
+        a.norms,
+        b.blocks,
+        b.mask,
+        b.norms,
+        threshold=threshold,
+        backend=backend,
+    )
+    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+
+
+def multiply(
+    a: BlockSparseMatrix,
+    b: BlockSparseMatrix,
+    mesh=None,
+    *,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    filter_eps: float | None = None,
+    backend: str = "jnp",
+    c_layout: str = "2d",
+) -> BlockSparseMatrix:
+    """Distributed filtered C = A . B.
+
+    threshold  — on-the-fly filter: skip block products with
+                 norm(A_ik) * norm(B_kj) <= threshold.
+    filter_eps — post-multiplication filter: drop result blocks with
+                 norm <= filter_eps (defaults to ``threshold``).
+    """
+    if mesh is None:
+        c = multiply_reference(a, b, threshold=threshold, backend=backend)
+    elif engine in ("cannon", "onesided"):
+        c = multiply_2d(
+            a, b, mesh, engine=engine, threshold=threshold, backend=backend
+        )
+    elif engine == "gather":
+        c = multiply_gather(a, b, mesh, threshold=threshold, backend=backend)
+    elif engine == "twofive":
+        c = multiply_25d(
+            a, b, mesh, threshold=threshold, backend=backend, c_layout=c_layout
+        )
+    else:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    eps = threshold if filter_eps is None else filter_eps
+    if eps > 0.0:
+        c = filter_bsm(c, eps)
+    return c
+
+
+def lower_multiply(
+    mesh,
+    nb: int,
+    bs: int,
+    *,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    dtype=jnp.float32,
+    c_layout: str = "2d",
+):
+    """Lower (without executing) one multiplication for HLO inspection —
+    the source of the measured collective bytes in the benchmarks."""
+    from repro.core import cannon as _cannon
+    from repro.core import gather as _gather
+    from repro.core import twofive as _twofive
+
+    if engine in ("cannon", "onesided"):
+        fn = {
+            "cannon": _cannon.cannon_shardmap,
+            "onesided": _cannon.onesided_shardmap,
+        }[engine](mesh, threshold=threshold, backend=backend)
+    elif engine == "gather":
+        fn = _gather.gather_shardmap(mesh, threshold=threshold, backend=backend)
+    elif engine == "twofive":
+        fn = _twofive.twofive_shardmap(
+            mesh, threshold=threshold, backend=backend, c_layout=c_layout
+        )
+    else:
+        raise ValueError(engine)
+
+    blk = jax.ShapeDtypeStruct((nb, nb, bs, bs), dtype)
+    m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)
+    m2f = jax.ShapeDtypeStruct((nb, nb), jnp.float32)
+    return jax.jit(fn).lower(blk, m2b, m2f, blk, m2b, m2f)

@@ -1,0 +1,122 @@
+"""Matrix-sign iteration — the paper's driving application (linear-scaling
+DFT density-matrix purification, Eqs. (1)-(3)).
+
+    sign(A) = A (A^2)^{-1/2};   X_{n+1} = 1/2 X_n (3 I - X_n^2)
+
+Each iteration is two block-sparse multiplications with on-the-fly and
+post-multiplication filtering — exactly the workload DBCSR is built for
+(SpGEMM > 80% of CP2K linear-scaling runtime).
+
+``density_matrix`` then evaluates P = 1/2 (I - sign(mu I - H)) — the
+simplified (S = I, orthonormal basis) form of paper Eq. (1); the eigenvalue
+counting identity trace(P) = #{eigenvalues < mu} is used as the convergence
+observable in tests and examples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core import bsm as B
+from repro.core.engine import multiply
+
+
+@dataclass
+class SignIterStats:
+    iterations: int
+    converged: bool
+    residual: float
+    occupancy_trace: list[float]
+    multiplications: int
+
+
+def _scale_to_unit_spectrum(x: B.BlockSparseMatrix) -> B.BlockSparseMatrix:
+    """Scale X0 so its spectrum lies in [-1, 1] (Frobenius bound)."""
+    nrm = x.frobenius_norm()
+    return B.scale(x, 1.0 / jnp.maximum(nrm, 1e-30))
+
+
+def sign_iteration(
+    x0: B.BlockSparseMatrix,
+    *,
+    mesh=None,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    max_iter: int = 50,
+    tol: float = 1e-6,
+    scale_input: bool = True,
+) -> tuple[B.BlockSparseMatrix, SignIterStats]:
+    """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0)."""
+    nb, bs = x0.nb_r, x0.bs_r
+    ident = B.identity(nb, bs, x0.dtype)
+    x = _scale_to_unit_spectrum(x0) if scale_input else x0
+    occ = []
+    n_mults = 0
+    converged = False
+    residual = float("inf")
+    it = 0
+    for it in range(1, max_iter + 1):
+        x2 = multiply(
+            x, x, mesh, engine=engine, threshold=threshold, filter_eps=filter_eps
+        )
+        n_mults += 1
+        # 3I - X^2
+        y = B.add(B.scale(x2, -1.0), B.scale(ident, 3.0))
+        xn = multiply(
+            x, y, mesh, engine=engine, threshold=threshold, filter_eps=filter_eps
+        )
+        xn = B.scale(xn, 0.5)
+        n_mults += 1
+        # convergence: || X_{n+1} - X_n ||_F / || X_n ||_F
+        diff = B.add(xn, B.scale(x, -1.0))
+        residual = float(diff.frobenius_norm() / jnp.maximum(xn.frobenius_norm(), 1e-30))
+        occ.append(float(xn.occupancy()))
+        x = xn
+        if residual < tol:
+            converged = True
+            break
+    stats = SignIterStats(
+        iterations=it,
+        converged=converged,
+        residual=residual,
+        occupancy_trace=occ,
+        multiplications=n_mults,
+    )
+    return x, stats
+
+
+def density_matrix(
+    h: B.BlockSparseMatrix,
+    mu: float,
+    *,
+    mesh=None,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    max_iter: int = 60,
+    tol: float = 1e-6,
+) -> tuple[B.BlockSparseMatrix, SignIterStats]:
+    """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I)."""
+    nb, bs = h.nb_r, h.bs_r
+    ident = B.identity(nb, bs, h.dtype)
+    shifted = B.add(h, B.scale(ident, -mu))
+    sgn, stats = sign_iteration(
+        shifted,
+        mesh=mesh,
+        engine=engine,
+        threshold=threshold,
+        filter_eps=filter_eps,
+        max_iter=max_iter,
+        tol=tol,
+    )
+    p = B.scale(B.add(ident, B.scale(sgn, -1.0)), 0.5)
+    return p, stats
+
+
+def trace(m: B.BlockSparseMatrix) -> jnp.ndarray:
+    diag_blocks = m.blocks[jnp.arange(m.nb_r), jnp.arange(m.nb_c)]
+    diag_mask = m.mask[jnp.arange(m.nb_r), jnp.arange(m.nb_c)]
+    tr = jnp.trace(diag_blocks, axis1=-2, axis2=-1)
+    return jnp.sum(tr * diag_mask)

@@ -1,0 +1,159 @@
+"""2.5D communication-reducing SpGEMM engine (the paper's OSL, Algorithm 2)
+as a shard_map program over an (l, r, c) device mesh.
+
+TPU-native formulation of the paper's scheme (see DESIGN.md §2):
+
+  * the 2D block data layout of A, B, C is *retained* (sharded over (r, c));
+    A and B are replicated over the depth axis ``l`` — the analogue of
+    exposing the panels in MPI windows that every layer can rget from;
+  * layer ``l`` runs a Cannon schedule over only its 1/L slice of the
+    k-range (pre-shift offset ``l * s/L``, then s/L ticks) — the paper's
+    "each process computes the partial multiplications for L different C
+    panels" re-expressed per layer;
+  * the partial C panels are combined with one reduce-scatter (psum_scatter)
+    or psum over ``l`` — the paper's L-1 partial-panel sends + accumulation,
+    fused into the ICI-native collective; it overlaps with the final tick
+    under XLA's latency-hiding scheduler (the paper overlaps the same way).
+
+Per-device communicated volume: (s/L)(S_A+S_B) panels + (L-1)/L S_C
+==  2 N^2/(s L) + N^2 (L-1)/(s^2 L)  ==  O(1/sqrt(P L)) with P = L s^2
+— Eq. (7) of the paper in mesh coordinates (see commvolume.mesh25d_volume).
+
+Validity: L must divide the layer-grid side s (slightly wider than the
+paper's square-integer rule; topology.py keeps the paper's rule for the
+fidelity tests and comm model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bsm import BlockSparseMatrix, block_norms
+from repro.core.local_mm import local_filtered_mm
+
+_AXES = ("l", "r", "c")
+
+
+def _flat_perm3(l_size: int, p: int, fn) -> list[tuple[int, int]]:
+    """Static permutation over the flattened (l, r, c) axis.
+
+    fn(l, i, j) -> (dl, di, dj); index = (l * p + i) * p + j.
+    """
+    perm = []
+    for l in range(l_size):
+        for i in range(p):
+            for j in range(p):
+                dl, di, dj = fn(l, i, j)
+                perm.append(((l * p + i) * p + j, (dl * p + di) * p + dj))
+    return perm
+
+
+def twofive_shardmap(
+    mesh,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    c_layout: str = "2d",
+):
+    """Returns the shard_map'd multiply body for the 2.5D engine.
+
+    c_layout:
+      "2d"      — C replicated over l (psum), sharded (r, c): the paper's
+                  layout (C lives on the 2D grid).
+      "scatter" — C reduce-scattered over l along block rows: keeps the
+                  result distributed over all P devices (cheaper reduction,
+                  (L-1)/L instead of 2(L-1)/L traffic).
+    """
+    l_size = mesh.shape["l"]
+    p = mesh.shape["r"]
+    assert mesh.shape["c"] == p, "2.5D engine requires square layer grids"
+    assert p % l_size == 0, f"L={l_size} must divide the layer-grid side {p}"
+    ticks = p // l_size
+
+    blk_in = P("r", "c", None, None)  # replicated over the unmentioned 'l'
+    m2_in = P("r", "c")
+    if c_layout == "2d":
+        blk_out, m2_out = P("r", "c", None, None), P("r", "c")
+    else:
+        # psum_scatter splits each (r)-row panel over l: r-major, l-minor
+        blk_out, m2_out = P(("r", "l"), "c", None, None), P(("r", "l"), "c")
+
+    def body(ab, am, an, bb, bm, bn):
+        # --- pre-shift with layer offset: A_ij <- A_{i, (j + i + l*ticks)},
+        #     B_ij <- B_{(i + j + l*ticks), j}; one static flattened perm.
+        pre_a = _flat_perm3(
+            l_size, p, lambda l, i, j: (l, i, (j - i - l * ticks) % p)
+        )
+        pre_b = _flat_perm3(
+            l_size, p, lambda l, i, j: (l, (i - j - l * ticks) % p, j)
+        )
+        ab, am, an = (lax.ppermute(x, _AXES, pre_a) for x in (ab, am, an))
+        bb, bm, bn = (lax.ppermute(x, _AXES, pre_b) for x in (bb, bm, bn))
+
+        cb = jnp.zeros(
+            (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
+        )
+        cm = jnp.zeros((ab.shape[0], bb.shape[1]), bool)
+        cb = lax.pcast(cb, _AXES, to="varying")
+        cm = lax.pcast(cm, _AXES, to="varying")
+
+        def shift1(x, axis):
+            perm = [(s, (s - 1) % p) for s in range(p)]
+            return lax.ppermute(x, axis, perm)
+
+        def tick(carry, _):
+            ab, am, an, bb, bm, bn, cb, cm = carry
+            dcb, dcm = local_filtered_mm(
+                ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
+            )
+            cb, cm = cb + dcb, cm | dcm
+            ab, am, an = (shift1(x, "c") for x in (ab, am, an))
+            bb, bm, bn = (shift1(x, "r") for x in (bb, bm, bn))
+            return (ab, am, an, bb, bm, bn, cb, cm), None
+
+        if ticks > 1:
+            (ab, am, an, bb, bm, bn, cb, cm), _ = lax.scan(
+                tick, (ab, am, an, bb, bm, bn, cb, cm), None, length=ticks - 1
+            )
+        dcb, dcm = local_filtered_mm(
+            ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
+        )
+        cb, cm = cb + dcb, cm | dcm
+
+        # --- partial-C reduction over the depth axis (the L-1 sends)
+        cmi = cm.astype(jnp.int32)
+        if c_layout == "2d":
+            return lax.psum(cb, "l"), lax.psum(cmi, "l") > 0
+        cb = lax.psum_scatter(cb, "l", scatter_dimension=0, tiled=True)
+        cmi = lax.psum_scatter(cmi, "l", scatter_dimension=0, tiled=True)
+        return cb, cmi > 0
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        # check_vma=False: the pallas backend's pallas_call builds plain
+        # ShapeDtypeStructs (no vma annotation); engine outputs are
+        # oracle-tested instead (tests/_dist.py::check_engines)
+        check_vma=False,
+        in_specs=(blk_in, m2_in, m2_in, blk_in, m2_in, m2_in),
+        out_specs=(blk_out, m2_out),
+    )
+
+
+def multiply_25d(
+    a: BlockSparseMatrix,
+    b: BlockSparseMatrix,
+    mesh,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    c_layout: str = "2d",
+) -> BlockSparseMatrix:
+    """Distributed C = A . B on an (l, r, c) mesh with the 2.5D engine."""
+    fn = twofive_shardmap(
+        mesh, threshold=threshold, backend=backend, c_layout=c_layout
+    )
+    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
+    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))

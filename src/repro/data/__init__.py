@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic token pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLMData, make_global_batch
+
+__all__ = ["DataConfig", "SyntheticLMData", "make_global_batch"]

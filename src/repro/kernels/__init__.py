@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+block_spgemm — DBCSR's filtered batched block GEMM (the paper's hot spot)
+flash_attention — online-softmax attention for the LM stack
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+tests sweep shapes/dtypes in interpret mode (CPU) against the oracle.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.block_spgemm import block_spgemm
+from repro.kernels.flash_attention import flash_attention_single
+
+__all__ = ["ops", "ref", "block_spgemm", "flash_attention_single"]

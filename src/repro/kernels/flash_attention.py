@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-tiled).
+
+Used by the LM stack on real TPU hardware for train/prefill attention; the
+pure-jnp chunked path (models/attention.py) is the CPU/dry-run route.  The
+kernel supports the features the assigned architectures need: causal
+masking, sliding windows (gemma2 local layers), logit soft-capping (gemma2)
+and an sm scale.
+
+Single-head kernel over q (sq, d), k/v (skv, d); batch/head dims are vmapped
+in ops.flash_attention (pallas_call composes with vmap by prepending grid
+dims).  Grid (nq, nkv), kv innermost; m/l/acc scratch persists across the kv
+sweep (TPU grid steps execute sequentially on a core).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    bq: int,
+    bkv: int,
+    nkv: int,
+):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bkv
+
+    # block-level skip: on hardware a predicated-off step issues no MXU work
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window is not None:
+        # newest key this block could need: q_end; oldest: q_start - window + 1
+        run = jnp.logical_and(run, k_start + bkv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v_ref.dtype).astype(jnp.float32),
+            v_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bkv", "interpret"),
+)
+def flash_attention_single(
+    q: jax.Array,  # (sq, d)
+    k: jax.Array,  # (skv, d)
+    v: jax.Array,  # (skv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    sq, d = q.shape
+    skv = k.shape[0]
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    if scale is None:
+        scale = float(1.0 / (d**0.5))
+    nq, nkv = sq // bq, skv // bkv
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq,
+        bkv=bkv,
+        nkv=nkv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, nkv),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (validation mode — the kernel
+body executes in Python) and False on TPU (compiled Mosaic kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_spgemm import block_spgemm as _block_spgemm
+from repro.kernels.flash_attention import flash_attention_single
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_spgemm(a_blocks, b_blocks, pair_ok, *, interpret: bool | None = None):
+    """Filtered block-sparse matmul (see kernels/block_spgemm.py)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _block_spgemm(a_blocks, b_blocks, pair_ok, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bkv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (b, h, sq, d)
+    k: jax.Array,  # (b, hkv, skv, d)
+    v: jax.Array,  # (b, hkv, skv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched multi-head flash attention with GQA (hkv | h)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    fn = functools.partial(
+        flash_attention_single,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+        bq=bq,
+        bkv=bkv,
+        interpret=interpret,
+    )
+    return jax.vmap(jax.vmap(fn))(q, k, v)
+
+
+__all__ = ["block_spgemm", "flash_attention", "ref"]

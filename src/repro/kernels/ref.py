@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_spgemm_ref(
+    a_blocks: jax.Array,  # (ni, nk, bs, bs)
+    b_blocks: jax.Array,  # (nk, nj, bs, bs)
+    pair_ok: jax.Array,  # (ni, nk, nj) bool — on-the-fly filter mask
+) -> jax.Array:
+    """Filtered block-sparse matmul: C_ij = sum_k ok[i,k,j] * A_ik @ B_kj.
+
+    Accumulates in f32 (matching the kernel's MXU accumulator), result cast
+    back to the input dtype.
+    """
+    okf = pair_ok.astype(jnp.float32)
+    c = jnp.einsum(
+        "ikj,ikab,kjbc->ijac",
+        okf,
+        a_blocks.astype(jnp.float32),
+        b_blocks.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return c.astype(a_blocks.dtype)
+
+
+def attention_ref(
+    q: jax.Array,  # (sq, d)
+    k: jax.Array,  # (skv, d)
+    v: jax.Array,  # (skv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Single-head attention oracle with causal/sliding-window masking and
+    logit soft-capping (gemma2-style tanh cap).
+
+    q_offset: absolute position of q[0] relative to k[0] (for decode where
+    the query block sits at the end of the KV range).
+    """
+    sq, d = q.shape
+    skv = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = (
+        jnp.einsum("qd,kd->qk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    p = jnp.where(jnp.any(mask, -1, keepdims=True), p, 0.0)
+    return jnp.einsum("qk,kd->qd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""repro.launch — production mesh, step builders, dry-run, train/serve
+drivers, elastic restart."""

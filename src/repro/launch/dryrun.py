@@ -1,0 +1,238 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must
+succeed on the production meshes — single-pod (16, 16) = 256 chips and
+multi-pod (2, 16, 16) = 512 chips — for every assigned architecture and
+input shape.  Failures (sharding mismatch, OOM at compile, unsupported
+collective) are bugs in the system, not in the dry-run.
+
+Each cell writes one JSON artifact (memory analysis, cost analysis,
+collective-byte breakdown, three-term roofline) to ``artifacts/dryrun/``;
+re-runs skip complete cells unless ``--force``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi \
+        --arch qwen2-72b --shape train_4k --force
+    PYTHONPATH=src python -m repro.launch.dryrun --options remat=full
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first init):
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import roofline as RL  # noqa: E402
+from repro.config import SHAPES, shape_applicable  # noqa: E402
+from repro.configs import ARCH_IDS, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    StepOptions,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+
+MESHES = ("single", "multi")
+
+
+def cell_id(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    suffix = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh}{suffix}"
+
+
+def parse_options(kvs: list[str]) -> StepOptions:
+    kwargs = {}
+    for kv in kvs:
+        k, v = kv.split("=", 1)
+        field = {f.name: f for f in dataclasses.fields(StepOptions)}[k]
+        if v.lower() == "none":
+            kwargs[k] = None
+        elif field.type in ("bool", bool):
+            kwargs[k] = v.lower() in ("1", "true", "yes")
+        elif field.type in ("int", int):
+            kwargs[k] = int(v)
+        elif field.type in ("float", float):
+            kwargs[k] = float(v)
+        else:
+            kwargs[k] = v
+    return StepOptions(**kwargs)
+
+
+def _flash_kernel_bytes(cfg, shape, mesh) -> float:
+    """Per-device HBM traffic of the Pallas flash kernel replacing the
+    chunked-attention oracle: Q/K/V/O streamed once per pass, ~3 passes
+    (fwd + bwd recompute + bwd grads).  Used for the kernel-adjusted memory
+    term (roofline.analyze docstring)."""
+    if shape.kind == "decode":
+        return 0.0
+    axes = dict(mesh.shape)
+    m = axes.get("model", 1)
+    dsz = axes.get("data", 1) * axes.get("pod", 1)
+    b_local = max(shape.global_batch // dsz, 1)
+    h_local = cfg.n_heads // m if cfg.n_heads % m == 0 else cfg.n_heads
+    kv_local = cfg.n_kv_heads // m if cfg.n_kv_heads % m == 0 else cfg.n_kv_heads
+    kinds = cfg.layer_kinds()
+    reps = cfg.n_layers // len(kinds)
+    n_attn = sum(1 for k in kinds if k["mixer"] == "attention") * reps
+    if cfg.encoder is not None:
+        n_attn += cfg.encoder.n_layers + cfg.n_layers  # self + cross
+    per_layer = (2 * h_local + 2 * kv_local) * b_local * shape.seq_len * cfg.hd * 2
+    return 3.0 * n_attn * per_layer
+
+
+def run_cell(
+    arch_id: str,
+    shape_id: str,
+    mesh_kind: str,
+    options: StepOptions,
+    *,
+    verbose: bool = True,
+    moe_impl: str | None = None,
+) -> dict:
+    cfg = get_arch(arch_id)
+    if moe_impl and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl=moe_impl))
+    shape = SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+
+    record: dict = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": mesh_kind,
+        "mesh_shape": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": n_chips,
+        "options": dataclasses.asdict(options),
+        "ok": False,
+    }
+
+    applicable, reason = shape_applicable(cfg, shape)
+    if not applicable:
+        record.update(skipped=True, skip_reason=reason, ok=True)
+        return record
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step, (p_sds, o_sds, b_sds) = build_train_step(
+            cfg, mesh, shape, options=options
+        )
+        args = (p_sds, o_sds, b_sds)
+    elif shape.kind == "prefill":
+        step, (p_sds, c_sds, b_sds) = build_prefill_step(
+            cfg, mesh, shape, options=options
+        )
+        args = (p_sds, c_sds, b_sds)
+    else:  # decode
+        step, (p_sds, c_sds, b_sds) = build_serve_step(
+            cfg, mesh, shape, options=options
+        )
+        args = (p_sds, c_sds, b_sds["tokens"], b_sds["position"])
+
+    # `step` is already jitted with in/out shardings; lower against the SDSs
+    lowered = step.lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    report = RL.analyze(
+        compiled,
+        n_chips=n_chips,
+        model_flops_total=RL.model_flops(cfg, shape),
+        flash_kernel_bytes=_flash_kernel_bytes(cfg, shape, mesh),
+    )
+    record.update(
+        ok=True,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        roofline=report.to_json(),
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    if verbose:
+        mem_gb = report.memory["peak_bytes"] / 2**30
+        print(
+            f"  lower {t_lower:6.1f}s  compile {t_compile:6.1f}s  "
+            f"mem/dev {mem_gb:6.2f} GiB  dominant={report.dominant}  "
+            f"comp={report.compute_s*1e3:.2f}ms mem={report.memory_s*1e3:.2f}ms "
+            f"coll={report.collective_s*1e3:.2f}ms",
+            flush=True,
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", nargs="*", default=None, help="arch ids (default all)")
+    ap.add_argument("--shape", nargs="*", default=None, help="shape ids (default all)")
+    ap.add_argument("--mesh", nargs="*", default=None, choices=MESHES)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    ap.add_argument(
+        "--options", nargs="*", default=[], help="StepOptions overrides k=v"
+    )
+    ap.add_argument("--moe-impl", default=None, choices=[None, "tp", "ep", "dense"],
+                    help="override MoEConfig.impl for MoE archs")
+    args = ap.parse_args()
+
+    archs = args.arch or list(ARCH_IDS)
+    shapes = args.shape or list(SHAPES)
+    meshes = args.mesh or list(MESHES)
+    options = parse_options(args.options)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for mesh_kind in meshes:
+        for arch_id in archs:
+            arch_id = arch_id.replace("-", "_").replace(".", "_")
+            for shape_id in shapes:
+                cid = cell_id(arch_id, shape_id, mesh_kind, args.tag)
+                path = os.path.join(args.out, cid + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            print(f"[skip] {cid} (done)", flush=True)
+                            continue
+                print(f"[cell] {cid}", flush=True)
+                try:
+                    record = run_cell(arch_id, shape_id, mesh_kind, options,
+                                      moe_impl=args.moe_impl)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    record = {
+                        "arch": arch_id,
+                        "shape": shape_id,
+                        "mesh": mesh_kind,
+                        "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures.append(cid)
+                    print(f"  FAILED: {record['error'][:300]}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(record, f, indent=1)
+                jax.clear_caches()  # bound RAM across 64+ big compiles
+
+    print(f"\ndone; {len(failures)} failures", flush=True)
+    for cid in failures:
+        print(f"  FAIL {cid}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

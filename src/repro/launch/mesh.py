@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Functions (not module-level constants) so importing never touches jax
+device state; the dry-run sets XLA_FLAGS for 512 fake devices before any
+jax import, everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests / scaled-down runs)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_spgemm_mesh(*, p: int, l: int = 1):
+    """(l, r, c) mesh for the 2.5D SpGEMM engine: l layers of p x p."""
+    if l == 1:
+        return jax.make_mesh((p, p), ("r", "c"))
+    return jax.make_mesh((l, p, p), ("l", "r", "c"))

@@ -1,0 +1,314 @@
+"""Step builders shared by train.py, serve.py and dryrun.py.
+
+``build_train_step`` / ``build_serve_step`` return (jitted fn, abstract
+input trees with shardings attached) so the dry-run can ``.lower`` against
+ShapeDtypeStructs while the real drivers call the same function with data.
+
+Perf knobs (the §Perf hillclimb levers) are carried in ``StepOptions`` so
+one flag flips a schedule for re-lowering:
+
+  remat          — activation-checkpoint policy inside the layer scan
+  fsdp_axis      — which mesh axes shard the non-TP weight dim
+  seq_parallel   — shard the residual stream's sequence dim over `model`
+  loss_chunk     — vocab-matmul chunking of the CE (memory lever)
+  head_2p5d      — claim the pod axis as the paper's 2.5D depth L for the
+                   LM-head matmul (multi-pod only)
+  compress_grads — bf16 DP gradient sync with fp32 error feedback
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig, input_specs
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import compress_grads as _compress
+from repro.optim.compress import init_compress_state
+from repro.parallel.ctx import sharding_rules
+from repro.parallel.sharding import (
+    activation_rules,
+    batch_spec,
+    cache_specs,
+    param_specs,
+)
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    remat: str = "dots"  # none | full | dots
+    fsdp_axis: Any = "data"
+    seq_parallel: bool = False
+    loss_chunk: int = 1024
+    head_2p5d: bool = False
+    compress_grads: bool = False
+    bf16_reduce: bool = False  # bf16 partials for TP-contracted matmuls
+    microbatch: int = 1  # gradient-accumulation steps (activation memory / k)
+    zero1: bool = False  # shard ONLY optimizer state over fsdp_axis (params
+    # stay TP-sharded, data-replicated) — avoids per-microbatch weight
+    # all-gathers; requires params/TP to fit HBM (not the 400B MoE)
+    aux_coef: float = 0.01
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def abstract_state(cfg: ArchConfig, mesh, opt: AdamWConfig | None, options: StepOptions):
+    """(params SDS+sharding, opt_state SDS+sharding, spec trees)."""
+    p_shape = jax.eval_shape(functools.partial(T.init_params, cfg), jax.random.key(0))
+    p_fsdp = None if options.zero1 else options.fsdp_axis
+    p_spec = param_specs(cfg, p_shape, mesh, fsdp_axis=p_fsdp,
+                         head_2p5d=options.head_2p5d)
+    p_sh = _named(mesh, p_spec)
+    p_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), p_shape, p_sh
+    )
+    if opt is None:
+        return p_sds, None, p_spec, None
+    # ZeRO-1: moments keep the full FSDP sharding even when params don't
+    m_spec = param_specs(cfg, p_shape, mesh, fsdp_axis=options.fsdp_axis,
+                         head_2p5d=options.head_2p5d)
+    o_shape = jax.eval_shape(functools.partial(adamw_init, opt), p_shape)
+    o_spec = {
+        "mu": m_spec,
+        "nu": m_spec,
+        "step": P(),
+    }
+    if options.compress_grads:
+        o_shape = dict(
+            o_shape,
+            efb=jax.eval_shape(init_compress_state, p_shape),
+        )
+        o_spec = dict(o_spec, efb=p_spec)
+    o_sh = _named(mesh, o_spec)
+    o_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), o_shape, o_sh
+    )
+    return p_sds, o_sds, p_spec, o_spec
+
+
+def batch_sds(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model-input ShapeDtypeStructs with shardings attached."""
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        if sds.ndim == 0:
+            spec = P()
+        else:
+            spec = batch_spec(mesh, sds.shape[0], *sds.shape[1:])
+        out[name] = jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    opt: AdamWConfig | None = None,
+    options: StepOptions = StepOptions(),
+):
+    """Returns (jitted train_step, (params_sds, opt_sds, batch_sds))."""
+    if opt is None:
+        opt = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+    rules = activation_rules(
+        cfg, mesh, batch=shape.global_batch, seq_parallel=options.seq_parallel,
+        head_2p5d=options.head_2p5d,
+        reduce_dtype=jnp.bfloat16 if options.bf16_reduce else None,
+    )
+
+    def grad_fn(params, batch):
+        with sharding_rules(rules):
+            def lf(p):
+                return T.loss_fn(
+                    cfg,
+                    p,
+                    batch,
+                    aux_coef=options.aux_coef,
+                    remat=options.remat,
+                    loss_chunk=options.loss_chunk,
+                )
+
+            return jax.value_and_grad(lf, has_aux=True)(params)
+
+    # gradient/accumulator sharding: the ZeRO (moment) layout.  Without an
+    # explicit constraint GSPMD settles the scan carry REPLICATED and
+    # all-gathers every microbatch's weight grads to full f32 (measured
+    # 640 x 970MB on qwen2-72b, EXPERIMENTS §Perf iteration 6); with it the
+    # per-microbatch grads reduce-scatter into the sharded accumulator.
+    _, _, _, o_spec_for_grads = abstract_state(cfg, mesh, opt, options)
+    g_sharding = _named(mesh, o_spec_for_grads["mu"]) if o_spec_for_grads else None
+
+    def train_step(params, opt_state, batch):
+        k = options.microbatch
+        if k > 1:
+            # gradient accumulation: scan over k microbatches; activation
+            # memory drops ~k-fold, FLOPs/collective volume unchanged, the
+            # optimizer (and any DP grad sync) runs once on the accumulated
+            # mean — the standard big-model memory/HBM-fit lever
+            mb = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:])
+                if getattr(x, "ndim", 0) >= 1 else x,
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), s
+                ),
+                params,
+                g_sharding,
+            )
+
+            def mb_step(acc, b):
+                acc_g, acc_loss, acc_ce, acc_aux = acc
+                (loss, metrics), g = grad_fn(params, b)
+                g = jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                    g, g_sharding,
+                )
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / k, acc_g, g
+                )
+                return (
+                    acc_g,
+                    acc_loss + loss / k,
+                    acc_ce + metrics["ce"] / k,
+                    acc_aux + metrics["moe_aux"] / k,
+                ), None
+
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                mb_step,
+                (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                 jnp.zeros((), jnp.float32)),
+                mb,
+            )
+            metrics = {"ce": ce, "moe_aux": aux}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        residual = None
+        if options.compress_grads:
+            # bf16 payload + fp32 error feedback; the residual rides in
+            # opt_state["efb"] (created by abstract_state / init_opt_state)
+            grads, residual = _compress(grads, opt_state["efb"])
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        core = {k: opt_state[k] for k in ("mu", "nu", "step")}
+        params, core, om = adamw_update(opt, params, grads, core)
+        opt_state = dict(core, efb=residual) if residual is not None else core
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    p_sds, o_sds, p_spec, o_spec = abstract_state(cfg, mesh, opt, options)
+    b_sds = batch_sds(cfg, shape, mesh)
+    shardings = lambda t: jax.tree.map(lambda x: x.sharding, t)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(shardings(p_sds), shardings(o_sds), shardings(b_sds)),
+        out_shardings=(
+            shardings(p_sds),
+            shardings(o_sds),
+            None,
+        ),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (p_sds, o_sds, b_sds)
+
+
+# ---------------------------------------------------------------------------
+# serve (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(
+    cfg: ArchConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    options: StepOptions = StepOptions(),
+):
+    """Decode one token against a seq_len-deep cache (the decode_* cells).
+
+    Returns (jitted decode fn, (params_sds, cache_sds, batch_sds))."""
+    rules = activation_rules(cfg, mesh, batch=shape.global_batch)
+    b = shape.global_batch
+
+    def serve_step(params, cache, tokens, position):
+        with sharding_rules(rules):
+            return T.decode_step(cfg, params, tokens, cache, position)
+
+    p_sds, _, p_spec, _ = abstract_state(cfg, mesh, None, options)
+    # lambda of no args: batch/seq_len are static shape ints, not tracers
+    c_shape = jax.eval_shape(lambda: T.init_cache(cfg, b, shape.seq_len))
+    c_spec = cache_specs(cfg, c_shape, mesh, batch=b)
+    c_sh = _named(mesh, c_spec)
+    c_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), c_shape, c_sh
+    )
+    b_sds = batch_sds(cfg, shape, mesh)
+    shardings = lambda t: jax.tree.map(lambda x: x.sharding, t)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(
+            shardings(p_sds),
+            shardings(c_sds),
+            b_sds["tokens"].sharding,
+            b_sds["position"].sharding,
+        ),
+        out_shardings=(None, shardings(c_sds)),
+        donate_argnums=(1,),
+    )
+    return jitted, (p_sds, c_sds, b_sds)
+
+
+def build_prefill_step(
+    cfg: ArchConfig,
+    mesh,
+    shape: ShapeConfig,
+    *,
+    options: StepOptions = StepOptions(),
+):
+    """Prefill the cache from a full prompt (the prefill_* cells)."""
+    rules = activation_rules(cfg, mesh, batch=shape.global_batch)
+    b = shape.global_batch
+
+    def prefill_step(params, cache, batch):
+        with sharding_rules(rules):
+            return T.prefill(
+                cfg,
+                params,
+                batch["tokens"],
+                cache,
+                patch_embeds=batch.get("patch_embeds"),
+                frame_embeds=batch.get("frame_embeds"),
+            )
+
+    p_sds, _, _, _ = abstract_state(cfg, mesh, None, options)
+    c_shape = jax.eval_shape(lambda: T.init_cache(cfg, b, shape.seq_len))
+    c_spec = cache_specs(cfg, c_shape, mesh, batch=b)
+    c_sh = _named(mesh, c_spec)
+    c_sds = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), c_shape, c_sh
+    )
+    b_sds = batch_sds(cfg, shape, mesh)
+    shardings = lambda t: jax.tree.map(lambda x: x.sharding, t)
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(shardings(p_sds), shardings(c_sds), shardings(b_sds)),
+        out_shardings=(None, shardings(c_sds)),
+        donate_argnums=(1,),
+    )
+    return jitted, (p_sds, c_sds, b_sds)

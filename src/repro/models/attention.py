@@ -1,0 +1,204 @@
+"""Attention: GQA projections + chunked (memory-efficient) attention.
+
+Paths:
+  * train/prefill — online-softmax double scan (q chunks x kv chunks): the
+    pure-JAX analogue of the flash kernel; bounded memory at any seq_len,
+    compile-friendly (two nested lax.scan = O(1) HLO).  On TPU hardware the
+    Pallas kernel (kernels/flash_attention.py) replaces it (use_pallas).
+  * decode — single-token query against a KV cache (serving.py drives it,
+    including the sequence-sharded flash-decode variant).
+
+Features per the assigned archs: GQA (kv groups), qkv bias (qwen),
+sliding window + logit softcap (gemma2), rope on/off (whisper uses
+sinusoidal absolute embeddings instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key, dtype, cross: bool = False):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def qkv_proj(cfg: ArchConfig, p, x: jax.Array, positions=None):
+    """x (B, S, d) -> q (B, h, S, hd), k/v (B, hkv, S, hd)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd).swapaxes(1, 2)
+    k = k.reshape(b, s, hkv, hd).swapaxes(1, 2)
+    v = v.reshape(b, s, hkv, hd).swapaxes(1, 2)
+    if cfg.rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(cfg: ArchConfig, p, attn: jax.Array) -> jax.Array:
+    from repro.parallel.ctx import tp_reduce_dtype
+
+    b, h, s, hd = attn.shape
+    x = attn.swapaxes(1, 2).reshape(b, s, h * hd)
+    dt = tp_reduce_dtype()
+    if dt is not None:
+        # bf16 partials -> the TP all-reduce over `model` moves half the bytes
+        return jnp.einsum("bsk,kd->bsd", x, p["wo"], preferred_element_type=dt)
+    return x @ p["wo"]
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax chunked attention (f32 accumulators).
+
+    Non-divisible sequence lengths (e.g. whisper's 1500 encoder frames) are
+    zero-padded up to the chunk size; padded KV positions are masked out and
+    padded query rows sliced off the result.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    if scale is None:
+        scale = d**-0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    sq_orig, skv_orig = sq, skv
+    pad_q = (-sq) % q_chunk
+    pad_kv = (-skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        sq += pad_q
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        skv += pad_kv
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+
+    # (nq, B, Hkv, G, cq, D) — GQA grouped, no kv repetition
+    qs = (
+        q.reshape(b, hkv, g, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    )
+    ks = k.reshape(b, hkv, nkv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nkv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx  # (B,Hkv,G,cq,D), scalar chunk index
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+
+        def kv_step(carry, kv_and_idx):
+            m, l, acc = carry
+            ki, vi, ik = kv_and_idx
+            s_ = jnp.einsum(
+                "bhgqd,bhkd->bhgqk",
+                qi.astype(jnp.float32),
+                ki.astype(jnp.float32),
+            ) * scale
+            if softcap is not None:
+                s_ = jnp.tanh(s_ / softcap) * softcap
+            qpos = iq * q_chunk + q_offset + jnp.arange(q_chunk)
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.broadcast_to(
+                kpos[None, :] < skv_orig, (q_chunk, kv_chunk)
+            )  # exclude zero-padded KV
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s_ = jnp.where(msk[None, None, None], s_, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_, -1, keepdims=True))
+            p = jnp.exp(s_ - m_new)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, -1, keepdims=True)
+            acc = acc * corr + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0), (ks, vs, jnp.arange(nkv))
+        )
+        safe = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / safe).astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs (nq, B, Hkv, G, cq, D) -> (B, H, Sq, D)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, d)
+    return out[:, :, :sq_orig] if pad_q else out
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, 1, D)
+    k_cache: jax.Array,  # (B, Hkv, Smax, D)
+    v_cache: jax.Array,
+    length: jax.Array,  # scalar: number of valid cache positions
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-step decode attention over a (masked) KV cache."""
+    b, h, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    smax = k_cache.shape[2]
+    if scale is None:
+        scale = d**-0.5
+    qg = q.reshape(b, hkv, g, d)
+    # keep K/V in cache dtype with f32 MXU accumulation: pre-casting the
+    # cache to f32 materializes a full-cache f32 copy in HBM (measured 2-3x
+    # decode HBM blow-up, EXPERIMENTS §Perf iteration 8)
+    s_ = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        s_ = jnp.tanh(s_ / softcap) * softcap
+    kpos = jnp.arange(smax)
+    msk = kpos < length
+    if window is not None:
+        msk &= kpos > length - 1 - window
+    s_ = jnp.where(msk[None, None, None], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, 1, d).astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Shared model primitives: norms, rope, MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.zeros((d,), jnp.float32)}  # gemma-style (1 + w)
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * lax.rsqrt(var + 1e-6) * (1.0 + p["w"])
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            y = y * p["w"] + p["b"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, hd), positions (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # broadcast ang over leading dims of x
+    while ang.ndim < x.ndim:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d**-0.5
+    scale_out = ff**-0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, ff)) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (ff, d)) * scale_out).astype(dtype),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (d, ff)) * scale_in).astype(dtype)
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    from repro.parallel.ctx import tp_reduce_dtype
+
+    h = x @ p["w_in"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    dt = tp_reduce_dtype()
+    if dt is not None:
+        # down-proj contracts over the model-sharded d_ff: bf16 partials
+        # halve the TP all-reduce payload
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"], preferred_element_type=dt)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["out"] = (
+            jax.random.normal(k2, (cfg.vocab, cfg.d_model)) * cfg.d_model**-0.5
+        ).astype(dtype)
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    return p["tok"][tokens]
+
+
+def logits_matmul(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    w = p.get("out", p["tok"])
+    logits = x @ w.T
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def chunked_cross_entropy(
+    cfg: ArchConfig,
+    p_embed,
+    x: jax.Array,  # (B, S, d) final hidden states
+    targets: jax.Array,  # (B, S)
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) f32 logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside the
+    (remat'd) scan body — the memory-roofline lever for 100k-256k vocabs.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)  # (n, B, chunk, d)
+    tc = targets.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, xt):
+        from repro.parallel.ctx import shard_act
+
+        xi, ti = xt
+        xi = shard_act(xi, "ce_in")  # head_2p5d: d over the pod (depth) axis
+        logits = logits_matmul(cfg, p_embed, xi).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    return total / (b * s)

@@ -1,0 +1,161 @@
+"""Mamba (S6 selective state space) mixer — the jamba hybrid's workhorse.
+
+Faithful S6 structure (Gu & Dao 2023, as configured by jamba-v0.1):
+  in_proj (d -> 2*di), depthwise causal conv (d_conv), x_proj (di -> dt_rank
+  + 2*d_state), dt_proj (dt_rank -> di), diagonal selective recurrence
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t, y_t = C_t h_t + D x_t, gated by
+  silu(z), out_proj (di -> d).
+
+Scan strategy (TPU adaptation): the recurrence is chunked — an outer
+``lax.scan`` over sequence chunks carries the (di, d_state) state, an inner
+``associative_scan`` parallelizes within the chunk.  Memory is
+O(chunk * di * d_state) instead of O(seq * di * d_state); the chunk size is
+the remat/VMEM lever (hillclimb knob).  Decode is the O(1) single-token
+recurrence on the carried state — the reason jamba runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig, MambaConfig
+
+
+def mamba_dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    m = cfg.mamba or MambaConfig()
+    di = m.expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return di, m.d_state, m.d_conv, dt_rank
+
+
+def init_mamba(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    di, n, dc, dtr = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    # S4D-real initialization of A (negative reals), dt bias for softplus
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (di,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": (jax.random.normal(ks[1], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (dc, di)) * dc**-0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[3], (di, dtr + 2 * n)) * di**-0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[4], (dtr, di)) * dtr**-0.5).astype(dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "a_log": jnp.log(a_init),  # (di, n) f32; A = -exp(a_log)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di**-0.5).astype(dtype),
+    }
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype):
+    """(conv tail (B, d_conv-1, di), ssm state (B, di, n)) — f32 ssm state."""
+    di, n, dc, _ = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def _ssm_coeffs(cfg: ArchConfig, p, xc: jax.Array):
+    """Per-token SSM coefficients from the conv output xc (..., di).
+
+    Returns (da (..., di, n) decay, db (..., di, n) input matrix, c (..., n)).
+    """
+    di, n, _, dtr = mamba_dims(cfg)
+    proj = xc @ p["x_proj"]  # (..., dtr + 2n)
+    dt_r, b, c = jnp.split(proj.astype(jnp.float32), [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])  # (di, n)
+    da = jnp.exp(dt[..., None] * a)  # (..., di, n)
+    db = dt[..., None] * b[..., None, :]  # (..., di, n)
+    return da, db, c
+
+
+def _chunk_scan(da, dbx, h0):
+    """Within-chunk associative scan of h_t = da_t h_{t-1} + dbx_t.
+
+    da/dbx: (T, B, di, n); h0: (B, di, n).  Returns (h (T,B,di,n), h_T)."""
+    a, b = lax.associative_scan(
+        lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (da, dbx), axis=0
+    )
+    h = a * h0[None] + b
+    return h, h[-1]
+
+
+def apply_mamba(cfg: ArchConfig, p, x: jax.Array, state=None):
+    """x (B, S, d) -> (y (B, S, d), final state).  Chunked selective scan."""
+    m = cfg.mamba or MambaConfig()
+    di, n, dc, _ = mamba_dims(cfg)
+    b, s, d = x.shape
+    chunk = min(m.chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+
+    if state is None:
+        state = init_mamba_state(cfg, b, x.dtype)
+
+    # depthwise causal conv over the sequence, seeded by the carried tail
+    xpad = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    conv = p["conv_b"].astype(jnp.float32) + sum(
+        xpad[:, i : i + s].astype(jnp.float32)
+        * p["conv_w"][i].astype(jnp.float32)
+        for i in range(dc)
+    )
+    xc = jax.nn.silu(conv).astype(x.dtype)  # (B, S, di)
+    new_conv = xpad[:, -(dc - 1) :] if dc > 1 else state["conv"]
+
+    da, db, c = _ssm_coeffs(cfg, p, xc)  # (B,S,di,n), (B,S,di,n), (B,S,n)
+    dbx = db * xc.astype(jnp.float32)[..., None]
+
+    # outer scan over chunks (carries h), inner associative scan
+    def to_chunks(t):  # (B, S, ...) -> (nchunks, chunk, B, ...)
+        return t.reshape((b, nchunks, chunk) + t.shape[2:]).swapaxes(0, 1).swapaxes(1, 2)
+
+    da_c, dbx_c, c_c, xc_c = map(to_chunks, (da, dbx, c, xc))
+
+    def step(h, inputs):
+        da_i, dbx_i, c_i, xc_i = inputs
+        h_all, h_next = _chunk_scan(da_i, dbx_i, h)
+        y = jnp.einsum("tbdn,tbn->tbd", h_all, c_i)  # (chunk, B, di)
+        y = y + p["d_skip"] * xc_i.astype(jnp.float32)
+        return h_next, y
+
+    h_final, ys = lax.scan(step, state["ssm"], (da_c, dbx_c, c_c, xc_c))
+    # ys (nchunks, chunk, B, di) -> (B, S, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, s, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": h_final}
+
+
+def decode_mamba(cfg: ArchConfig, p, x: jax.Array, state):
+    """Single-token decode: x (B, 1, d) with carried state; O(1) per token."""
+    di, n, dc, _ = mamba_dims(cfg)
+    b = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+
+    window = jnp.concatenate([state["conv"].astype(xi.dtype), xi[:, None]], axis=1)
+    conv = p["conv_b"].astype(jnp.float32) + jnp.einsum(
+        "btd,td->bd", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    xc = jax.nn.silu(conv).astype(x.dtype)  # (B, di)
+
+    da, db, c = _ssm_coeffs(cfg, p, xc)
+    h = state["ssm"] * da + db * xc.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c) + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "ssm": h}

@@ -1,0 +1,223 @@
+"""Mixture-of-Experts layer (llama4 / deepseek-moe / jamba).
+
+Three dispatch implementations, selectable via ``MoEConfig.impl``:
+
+* ``dense``   — every expert processes every token, gated combine.  Exact
+  (no capacity drops); FLOPs scale with n_experts, so it is the smoke-test
+  and oracle path, scanned over experts to bound memory.
+* ``tp``      — capacity-based scatter dispatch local to each data shard;
+  expert weights sharded over ``model`` on the d_expert dim (tensor
+  parallel within every expert).  No token all-to-all at all — the design
+  point that mirrors the paper's "retain the 2D data layout, never
+  redistribute" argument (DESIGN.md §3).
+* ``ep``      — expert parallelism: the dispatched buffer is resharded so
+  experts live on ``model`` shards (GSPMD inserts the all-to-all); each
+  device runs only its resident experts with *unsharded* per-expert
+  weights.  The hillclimb comparison point.
+
+The capacity dispatch is scatter/gather based (never materializes the
+(tokens, experts, capacity) one-hot): tokens get (expert, slot) coordinates
+from a capped cumulative count, are scattered into an (experts, capacity,
+d_model) buffer, and gathered back with their router weights after the
+batched expert matmuls.  Buffer size is top_k * capacity_factor * input —
+the memory the technique inherently trades.
+
+The (token-block x expert) structure is block-sparse: the paper's SpGEMM
+view of MoE is benchmarked in benchmarks/moe_spgemm.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig, MoEConfig
+
+
+def moe_dims(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_experts, d_expert) resolved against the arch."""
+    moe = cfg.moe
+    assert moe is not None
+    return moe.n_experts, moe.d_expert or cfg.d_ff
+
+
+def init_moe(cfg: ArchConfig, key, dtype):
+    """Router + routed expert bank + optional shared experts."""
+    moe = cfg.moe
+    d = cfg.d_model
+    e, de = moe_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s_in, s_out = d**-0.5, de**-0.5
+    glu = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d, de)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, de, d)) * s_out).astype(dtype),
+    }
+    if glu:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, de)) * s_in).astype(dtype)
+    if moe.n_shared:
+        ds = de * moe.n_shared  # fused shared experts (deepseek: 2 shared)
+        p["shared_in"] = (jax.random.normal(ks[4], (d, ds)) * s_in).astype(dtype)
+        p["shared_out"] = (jax.random.normal(ks[5], (ds, d)) * de**-0.5).astype(dtype)
+        if glu:
+            p["shared_gate"] = (jax.random.normal(ks[6], (d, ds)) * s_in).astype(dtype)
+    return p
+
+
+def _expert_ffn(cfg: ArchConfig, p, xb: jax.Array) -> jax.Array:
+    """Batched per-expert FFN: xb (..., E, C, d) -> (..., E, C, d)."""
+    from repro.parallel.ctx import tp_reduce_dtype
+
+    h = jnp.einsum("...ecd,edf->...ecf", xb, p["w_in"])
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", xb, p["w_gate"])) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", xb, p["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    dt = tp_reduce_dtype()
+    kw = {"preferred_element_type": dt} if dt is not None else {}
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w_out"], **kw)
+
+
+def _one_expert_ffn(cfg: ArchConfig, p_e, x: jax.Array) -> jax.Array:
+    """Single expert on all tokens: x (..., d), p_e un-stacked weights."""
+    h = x @ p_e["w_in"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p_e["w_gate"]) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p_e["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p_e["w_out"]
+
+
+def _shared_ffn(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    h = x @ p["shared_in"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["shared_gate"]) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["shared_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["shared_out"]
+
+
+def router_probs(moe: MoEConfig, logits32: jax.Array):
+    """Top-k routing: returns (weights (..., k), expert ids (..., k), probs)."""
+    probs = jax.nn.softmax(logits32, axis=-1)
+    top_w, top_e = lax.top_k(probs, moe.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    return top_w, top_e, probs
+
+
+def load_balance_loss(probs: jax.Array, top_e: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e (1.0 == balanced)."""
+    pe = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    counts = jnp.zeros((n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    fe = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    return n_experts * jnp.sum(fe * pe)
+
+
+# ---------------------------------------------------------------------------
+# dispatch paths
+# ---------------------------------------------------------------------------
+
+
+def _apply_dense(cfg: ArchConfig, p, x: jax.Array, top_w, top_e):
+    """Scan over experts; every expert sees every token (exact, no drops)."""
+    e, _ = moe_dims(cfg)
+    k = cfg.moe.top_k
+
+    def body(acc, ep):
+        eid, pe = ep
+        y = _one_expert_ffn(cfg, pe, x)  # (..., d)
+        w = jnp.sum(jnp.where(top_e == eid, top_w, 0.0), axis=-1)  # (...,)
+        return acc + y * w[..., None].astype(y.dtype), None
+
+    stacked = {k_: v for k_, v in p.items() if k_.startswith("w_")}
+    acc0 = jnp.zeros_like(x)
+    acc, _ = lax.scan(body, acc0, (jnp.arange(e), stacked))
+    return acc
+
+
+def _dispatch_indices(top_e: jax.Array, n_experts: int, capacity: int):
+    """(T, K) expert ids -> (slot positions (T, K), keep mask (T, K)).
+
+    Slot p of token t in expert e = number of earlier (t', k') choices of e,
+    capped at capacity (Switch dispatch without the (T, E, C) one-hot).
+    """
+    t, k = top_e.shape
+    flat = top_e.reshape(-1)  # (T*K,) in (t-major, k-minor) priority order
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position within expert
+    slot = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return slot.reshape(t, k), keep.reshape(t, k)
+
+
+def _apply_capacity(cfg: ArchConfig, p, x: jax.Array, top_w, top_e, *, ep: bool):
+    """Capacity scatter dispatch. x (B, S, d); B is the data-sharded dim."""
+    moe = cfg.moe
+    e, _ = moe_dims(cfg)
+    b, s, d = x.shape
+    k = moe.top_k
+    capacity = max(int(s * k * moe.capacity_factor / e), 1)
+
+    def row(xr, er, wr):  # (S, d), (S, K), (S, K): one batch row
+        slot, keep = _dispatch_indices(er, e, capacity)
+        wr = wr * keep.astype(wr.dtype)
+        # scatter tokens into the (E, C, d) buffer (dropped -> clipped slot,
+        # masked out of the combine by `keep`; slot C-1 collisions are
+        # overwritten, which is safe because their gather weight is zero)
+        buf = jnp.zeros((e, capacity, d), x.dtype)
+        es = er.reshape(-1)
+        ss = jnp.clip(slot.reshape(-1), 0, capacity - 1)
+        xe = jnp.repeat(xr, k, axis=0)  # (S*K, d) token copies per choice
+        msk = keep.reshape(-1, 1).astype(x.dtype)
+        buf = buf.at[es, ss].add(xe * msk, mode="drop")
+        return buf, slot, keep
+
+    buf, slot, keep = jax.vmap(row)(x, top_e, top_w)  # (B, E, C, d)
+    if ep:
+        # reshard: experts -> model shards (GSPMD all-to-all), tokens stay.
+        # named rule (NamedSharding) so it works under jit without a mesh
+        # context; no-op when no rule set is active (single-device tests)
+        from repro.parallel.ctx import shard_act
+
+        buf = shard_act(buf, "moe_dispatch")
+    yb = _expert_ffn(cfg, p, buf)  # (B, E, C, d)
+    if ep:
+        from repro.parallel.ctx import shard_act
+
+        yb = shard_act(yb, "moe_combine")
+
+    def combine(ybr, er, sr, kr, wr):  # (E, C, d), (S,K), (S,K), (S,K), (S,K)
+        sr = jnp.clip(sr, 0, capacity - 1)
+        y = ybr[er, sr]  # (S, K, d)
+        w = (wr * kr.astype(wr.dtype)).astype(y.dtype)
+        return jnp.sum(y * w[..., None], axis=1)
+
+    return jax.vmap(combine)(yb, top_e, slot, keep, top_w)
+
+
+def apply_moe(cfg: ArchConfig, p, x: jax.Array):
+    """x (B, S, d) -> (y (B, S, d), aux load-balance loss)."""
+    moe = cfg.moe
+    e, _ = moe_dims(cfg)
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    top_w, top_e, probs = router_probs(moe, logits)
+    aux = load_balance_loss(probs, top_e, e)
+    top_w = top_w.astype(x.dtype)
+
+    if moe.impl == "dense":
+        y = _apply_dense(cfg, p, x, top_w, top_e)
+    elif moe.impl in ("tp", "ep"):
+        y = _apply_capacity(cfg, p, x, top_w, top_e, ep=(moe.impl == "ep"))
+    else:
+        raise ValueError(f"unknown moe impl {moe.impl!r}")
+
+    if moe.n_shared:
+        y = y + _shared_ffn(cfg, p, x)
+    return y, aux

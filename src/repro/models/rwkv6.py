@@ -1,0 +1,196 @@
+"""RWKV-6 "Finch" mixer (arXiv:2404.05892) — attention-free, data-dependent
+per-channel decay.
+
+Time-mix (the attention replacement), per head of size hd:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state S (hd, hd))
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+where r, k, v, g are projections of token-shift-interpolated inputs, the
+decay w_t = exp(-exp(wd_t)) is *data dependent* (LoRA on the shifted input —
+Finch's contribution over Eagle), and u is the per-channel "bonus" for the
+current token.  Channel-mix is the squared-relu token-shift MLP.
+
+Scan strategy mirrors mamba.py: outer lax.scan over sequence chunks carrying
+(token-shift tail, per-head state), inner step-scan within the chunk (the
+state update is a rank-1 non-diagonal recurrence, so the associative-scan
+trick does not apply; the chunk keeps live memory bounded).  Decode carries
+(last token, state) — O(1) per token, which is why rwkv6 runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig, RWKVConfig
+
+
+def rwkv_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    r = cfg.rwkv or RWKVConfig()
+    assert cfg.d_model % r.head_dim == 0
+    return cfg.d_model // r.head_dim, r.head_dim, r.decay_lora
+
+
+def init_rwkv(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    h, hd, lora = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    s = d**-0.5
+    mk = lambda i, shape, sc=s: (jax.random.normal(ks[i], shape) * sc).astype(dtype)
+    return {
+        # token-shift interpolation factors (static part; x-dependent LoRA)
+        "mu_rkvg": jnp.full((4, d), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": mk(0, (d, d)),
+        "wk": mk(1, (d, d)),
+        "wv": mk(2, (d, d)),
+        "wg": mk(3, (d, d)),
+        "wo": mk(4, (d, d)),
+        # data-dependent decay LoRA: wd_t = base + tanh(x W1) W2
+        "decay_base": jnp.full((d,), -2.0, jnp.float32),
+        "decay_w1": mk(5, (d, lora)),
+        "decay_w2": (jax.random.normal(ks[6], (lora, d)) * lora**-0.5).astype(dtype),
+        "bonus_u": jnp.zeros((h, hd), jnp.float32),
+        "ln_x_w": jnp.ones((d,), jnp.float32),  # per-head group norm gain
+        # channel mix
+        "mu_c": jnp.full((2, d), 0.5, jnp.float32),
+        "ck": mk(7, (d, cfg.d_ff)),
+        "cv": (jax.random.normal(ks[8], (cfg.d_ff, d)) * cfg.d_ff**-0.5).astype(dtype),
+        "cr": mk(9, (d, d)),
+    }
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype):
+    h, hd, _ = rwkv_dims(cfg)
+    return {
+        "shift_t": jnp.zeros((batch, cfg.d_model), dtype),  # time-mix tail
+        "shift_c": jnp.zeros((batch, cfg.d_model), dtype),  # channel-mix tail
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def _group_norm(x: jax.Array, h: int, hd: int, gain) -> jax.Array:
+    """Per-head LayerNorm of the time-mix output (RWKV's ln_x)."""
+    xs = x.reshape(x.shape[:-1] + (h, hd)).astype(jnp.float32)
+    mu = jnp.mean(xs, -1, keepdims=True)
+    var = jnp.var(xs, -1, keepdims=True)
+    y = (xs - mu) * lax.rsqrt(var + 1e-5)
+    return (y.reshape(x.shape) * gain).astype(x.dtype)
+
+
+def _time_mix_projections(cfg: ArchConfig, p, x: jax.Array, x_prev: jax.Array):
+    """Shifted interpolation + r/k/v/g/decay projections.
+
+    x, x_prev: (..., S, d) current tokens and previous-token values.
+    """
+    h, hd, _ = rwkv_dims(cfg)
+    mu = p["mu_rkvg"]  # (4, d)
+    xr = x + (x_prev - x) * mu[0].astype(x.dtype)
+    xk = x + (x_prev - x) * mu[1].astype(x.dtype)
+    xv = x + (x_prev - x) * mu[2].astype(x.dtype)
+    xg = x + (x_prev - x) * mu[3].astype(x.dtype)
+    xw = x + (x_prev - x) * p["mu_w"].astype(x.dtype)
+
+    shp = x.shape[:-1] + (h, hd)
+    r = (xr @ p["wr"]).reshape(shp)
+    k = (xk @ p["wk"]).reshape(shp)
+    v = (xv @ p["wv"]).reshape(shp)
+    g = jax.nn.silu(xg @ p["wg"])
+    wd = p["decay_base"] + (
+        jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wd.reshape(shp).astype(jnp.float32)))  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_step(s, rkvw):
+    """One-token state update. s (B,h,hd,hd); r/k/v (B,h,hd); w (B,h,hd)."""
+    r, k, v, w, u = rkvw
+    kv = k[..., :, None] * v[..., None, :]  # (B,h,hd,hd) outer product
+    out = jnp.einsum("bhi,bhij->bhj", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., :, None] * s + kv
+    return s_new, out
+
+
+def apply_rwkv_time_mix(cfg: ArchConfig, p, x: jax.Array, state):
+    """Time mix over a sequence. x (B, S, d) -> (y, new state)."""
+    r_cfg = cfg.rwkv or RWKVConfig()
+    h, hd, _ = rwkv_dims(cfg)
+    b, s, d = x.shape
+    chunk = min(r_cfg.chunk, s)
+    assert s % chunk == 0
+    nchunks = s // chunk
+
+    x_prev = jnp.concatenate([state["shift_t"][:, None].astype(x.dtype), x[:, :-1]], 1)
+    r, k, v, g, w = _time_mix_projections(cfg, p, x, x_prev)
+    kf = k.astype(jnp.float32) * hd**-0.5
+    rf = r.astype(jnp.float32) * hd**-0.5
+    vf = v.astype(jnp.float32)
+    u = p["bonus_u"]
+
+    def to_chunks(t):  # (B, S, ...) -> (nchunks, chunk, B, ...)
+        return t.reshape((b, nchunks, chunk) + t.shape[2:]).swapaxes(0, 1).swapaxes(1, 2)
+
+    rc, kc, vc, wc = map(to_chunks, (rf, kf, vf, w))
+
+    def chunk_step(s0, inputs):
+        rc_i, kc_i, vc_i, wc_i = inputs
+
+        def tok(s_, t):
+            return _wkv_step(s_, (rc_i[t], kc_i[t], vc_i[t], wc_i[t], u))
+
+        s1, outs = lax.scan(tok, s0, jnp.arange(rc_i.shape[0]))
+        return s1, outs
+
+    s_final, ys = lax.scan(chunk_step, state["wkv"], (rc, kc, vc, wc))
+    # ys (nchunks, chunk, B, h, hd) -> (B, S, d)
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(b, s, d)
+    y = _group_norm(y.astype(x.dtype), h, hd, p["ln_x_w"]) * g
+    out = y @ p["wo"]
+    new_state = dict(state, shift_t=x[:, -1], wkv=s_final)
+    return out, new_state
+
+
+def apply_rwkv_channel_mix(cfg: ArchConfig, p, x: jax.Array, state):
+    """Squared-relu channel mix with token shift. x (B, S, d)."""
+    x_prev = jnp.concatenate([state["shift_c"][:, None].astype(x.dtype), x[:, :-1]], 1)
+    mu = p["mu_c"]
+    xk = x + (x_prev - x) * mu[0].astype(x.dtype)
+    xr = x + (x_prev - x) * mu[1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    y = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    return y, dict(state, shift_c=x[:, -1])
+
+
+def decode_rwkv_time_mix(cfg: ArchConfig, p, x: jax.Array, state):
+    """Single-token time mix: x (B, 1, d)."""
+    h, hd, _ = rwkv_dims(cfg)
+    xt = x[:, 0]
+    x_prev = state["shift_t"].astype(x.dtype)
+    r, k, v, g, w = _time_mix_projections(cfg, p, xt, x_prev)
+    s_new, out = _wkv_step(
+        state["wkv"],
+        (
+            r.astype(jnp.float32) * hd**-0.5,
+            k.astype(jnp.float32) * hd**-0.5,
+            v.astype(jnp.float32),
+            w,
+            p["bonus_u"],
+        ),
+    )
+    y = out.reshape(xt.shape[0], -1)
+    y = _group_norm(y.astype(x.dtype), h, hd, p["ln_x_w"]) * g
+    out = (y @ p["wo"])[:, None]
+    return out, dict(state, shift_t=xt, wkv=s_new)
+
+
+def decode_rwkv_channel_mix(cfg: ArchConfig, p, x: jax.Array, state):
+    xt = x[:, 0]
+    x_prev = state["shift_c"].astype(x.dtype)
+    mu = p["mu_c"]
+    xk = xt + (x_prev - xt) * mu[0].astype(x.dtype)
+    xr = xt + (x_prev - xt) * mu[1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    y = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    return y[:, None], dict(state, shift_c=xt)

@@ -1,0 +1,518 @@
+"""Composable multi-architecture LM stack (all 10 assigned architectures).
+
+One parameter/pytree layout, three entry points:
+
+  * ``forward``       — train/prefill hidden states (scan over layer groups)
+  * ``loss_fn``       — forward + chunked cross-entropy (+ MoE aux loss)
+  * ``init_cache`` / ``decode_step`` — single-token serving against a KV
+    cache (attention), carried recurrent state (mamba/rwkv6), or both
+    (jamba hybrid)
+
+Layer heterogeneity (gemma2 local/global alternation, jamba 1:7
+mamba:attention with every-other-layer MoE, rwkv6 attention-free) is
+expressed as a *pattern period*: ``cfg.layer_kinds()`` gives the static
+per-position spec within one period, parameters are stacked over the
+``n_layers / period`` repetitions, and a single ``lax.scan`` runs the
+repeats — O(1) HLO size for 80-layer models, which keeps the 512-device
+dry-run compile tractable.
+
+Sharding: model code is mesh-agnostic; activation constraints are injected
+via ``repro.parallel.ctx.shard_act`` (no-op without an active rule set).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MoE
+from repro.models import rwkv6 as R
+from repro.parallel.ctx import shard_act
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, kind: dict, key, dtype, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_norm(cfg, cfg.d_model)}
+    if kind["mixer"] == "attention":
+        p["attn"] = A.init_attention(cfg, ks[0], dtype)
+    elif kind["mixer"] == "mamba":
+        p["mamba"] = M.init_mamba(cfg, ks[0], dtype)
+    elif kind["mixer"] == "rwkv6":
+        p["rwkv"] = R.init_rwkv(cfg, ks[0], dtype)
+        p["rwkv_ln2"] = L.init_norm(cfg, cfg.d_model)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        p["post_ln1"] = L.init_norm(cfg, cfg.d_model)
+    if cross:
+        p["xattn"] = A.init_attention(cfg, ks[1], dtype, cross=True)
+        p["ln_x"] = L.init_norm(cfg, cfg.d_model)
+    if kind["mixer"] != "rwkv6":  # rwkv6 channel-mix replaces the MLP
+        p["ln2"] = L.init_norm(cfg, cfg.d_model)
+        if kind["moe"]:
+            p["moe"] = MoE.init_moe(cfg, ks[2], dtype)
+        else:
+            p["mlp"] = L.init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.post_norm:
+            p["post_ln2"] = L.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    """Full parameter pytree; per-period blocks stacked over repetitions."""
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    period = len(kinds)
+    reps = cfg.n_layers // period
+    k_embed, k_blocks, k_enc = jax.random.split(key, 3)
+
+    params: Params = {"embed": L.init_embed(cfg, k_embed, dtype)}
+    blocks = []
+    cross = cfg.encoder is not None
+    for i, kind in enumerate(kinds):
+        kk = jax.random.fold_in(k_blocks, i)
+        init_one = functools.partial(_init_block, cfg, kind, dtype=dtype, cross=cross)
+        blocks.append(jax.vmap(init_one)(jax.random.split(kk, reps)))
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = L.init_norm(cfg, cfg.d_model)
+
+    if cfg.encoder is not None:
+        enc_kind = {"mixer": "attention", "window": None, "moe": False}
+        init_enc = functools.partial(
+            _init_block, cfg, enc_kind, dtype=dtype, cross=False
+        )
+        params["encoder"] = {
+            "blocks": (
+                jax.vmap(init_enc)(jax.random.split(k_enc, cfg.encoder.n_layers)),
+            ),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Decode-time state, stacked (reps, ...) per pattern position."""
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    reps = cfg.n_layers // len(kinds)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    caches = []
+    for kind in kinds:
+        if kind["mixer"] == "attention":
+            c = {
+                "k": jnp.zeros((reps, batch, hkv, max_len, hd), dtype),
+                "v": jnp.zeros((reps, batch, hkv, max_len, hd), dtype),
+            }
+            if cfg.encoder is not None:
+                c["xk"] = jnp.zeros(
+                    (reps, batch, hkv, cfg.encoder.n_frames, hd), dtype
+                )
+                c["xv"] = jnp.zeros(
+                    (reps, batch, hkv, cfg.encoder.n_frames, hd), dtype
+                )
+        elif kind["mixer"] == "mamba":
+            c = jax.tree.map(
+                lambda x: jnp.zeros((reps,) + x.shape, x.dtype),
+                M.init_mamba_state(cfg, batch, dtype),
+            )
+        else:  # rwkv6
+            c = jax.tree.map(
+                lambda x: jnp.zeros((reps,) + x.shape, x.dtype),
+                R.init_rwkv_state(cfg, batch, dtype),
+            )
+        caches.append(c)
+    return {"blocks": tuple(caches)}
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _norm_res(cfg, p, name, post_name, x, sub):
+    """Pre-norm residual, with gemma2-style sandwich post-norm.
+
+    The norm output is constrained to full-seq ("btd_full"): under sequence
+    parallelism this is the Megatron-SP g-operator — an activation all-gather
+    here instead of weight-sized dW all-reduces at every TP matmul.
+    """
+    y = sub(shard_act(L.apply_norm(cfg, p[name], x), "btd_full"))
+    # Megatron-SP g-bar: the projection output is constrained back to the
+    # seq-sharded residual layout BEFORE the add, so the TP contraction
+    # lowers to a reduce-scatter (half the wire bytes of all-reduce + slice)
+    y = shard_act(y, "btd")
+    if cfg.post_norm:
+        y = L.apply_norm(cfg, p[post_name], y)
+    return x + y, None
+
+
+def _apply_attn_train(cfg, p, kind, x, positions, *, causal=True):
+    q, k, v = A.qkv_proj(cfg, p, x, positions if cfg.rope else None)
+    q = shard_act(q, "bhsd")
+    k = shard_act(k, "bksd")
+    v = shard_act(v, "bksd")
+    o = A.chunked_attention(
+        q, k, v,
+        causal=causal,
+        window=kind.get("window"),
+        softcap=cfg.attn_softcap,
+    )
+    return A.out_proj(cfg, p, o)
+
+
+def _apply_block_train(cfg, kind, p, x, positions, enc_out=None):
+    """Train/prefill body for one layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind["mixer"] == "attention":
+        def sub(xn):
+            return _apply_attn_train(cfg, p["attn"], kind, xn, positions)
+
+        x, _ = _norm_res(cfg, p, "ln1", "post_ln1", x, sub)
+        if enc_out is not None:  # whisper cross-attention
+            def xsub(xn):
+                q, _, _ = A.qkv_proj(cfg, p["xattn"], xn, None)
+                _, ek, ev = A.qkv_proj(cfg, p["xattn"], enc_out, None)
+                o = A.chunked_attention(q, ek, ev, causal=False)
+                return A.out_proj(cfg, p["xattn"], o)
+
+            x = x + xsub(L.apply_norm(cfg, p["ln_x"], x))
+    elif kind["mixer"] == "mamba":
+        y, _ = M.apply_mamba(
+            cfg, p["mamba"], shard_act(L.apply_norm(cfg, p["ln1"], x), "btd_full")
+        )
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln1"], y)
+        x = x + y
+    else:  # rwkv6: time mix + channel mix (its own pair of residuals)
+        st = R.init_rwkv_state(cfg, x.shape[0], x.dtype)
+        y, _ = R.apply_rwkv_time_mix(
+            cfg, p["rwkv"], shard_act(L.apply_norm(cfg, p["ln1"], x), "btd_full"), st
+        )
+        x = x + y
+        y, _ = R.apply_rwkv_channel_mix(
+            cfg, p["rwkv"], shard_act(L.apply_norm(cfg, p["rwkv_ln2"], x), "btd_full"), st
+        )
+        return x + y, aux
+
+    x = shard_act(x, "btd")
+    if kind["moe"]:
+        def msub(xn):
+            y, a = MoE.apply_moe(cfg, p["moe"], xn)
+            return y, a
+
+        xn = shard_act(L.apply_norm(cfg, p["ln2"], x), "btd_full")
+        y, aux = msub(xn)
+        y = shard_act(y, "btd")
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln2"], y)
+        x = x + y
+    else:
+        x, _ = _norm_res(
+            cfg, p, "ln2", "post_ln2", x, lambda xn: L.apply_mlp(cfg, p["mlp"], xn)
+        )
+    return shard_act(x, "btd"), aux
+
+
+def _update_kv(cache_k, cache_v, k, v, position):
+    """Write new K/V at `position` (decode) or [0, S) (prefill)."""
+    ck = lax.dynamic_update_slice(cache_k, k, (0, 0, position, 0))
+    cv = lax.dynamic_update_slice(cache_v, v, (0, 0, position, 0))
+    return ck, cv
+
+
+def _apply_block_decode(cfg, kind, p, x, cache, position, enc_out=None):
+    """Single-token decode body. Returns (x, new_cache)."""
+    if kind["mixer"] == "attention":
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        pos = jnp.full((1,), position)
+        q, k, v = A.qkv_proj(cfg, p["attn"], xn, pos if cfg.rope else None)
+        ck, cv = _update_kv(cache["k"], cache["v"], k, v, position)
+        o = A.decode_attention(
+            q, ck, cv, position + 1,
+            window=kind.get("window"),
+            softcap=cfg.attn_softcap,
+        )
+        y = A.out_proj(cfg, p["attn"], o)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln1"], y)
+        x = x + y
+        new_cache = dict(cache, k=ck, v=cv)
+        if "xk" in cache:  # whisper cross-attention against cached encoder KV
+            xn = L.apply_norm(cfg, p["ln_x"], x)
+            q, _, _ = A.qkv_proj(cfg, p["xattn"], xn, None)
+            o = A.decode_attention(q, cache["xk"], cache["xv"], cache["xk"].shape[2])
+            x = x + A.out_proj(cfg, p["xattn"], o)
+    elif kind["mixer"] == "mamba":
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        y, new_cache = M.decode_mamba(cfg, p["mamba"], xn, cache)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln1"], y)
+        x = x + y
+    else:  # rwkv6
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        y, cache = R.decode_rwkv_time_mix(cfg, p["rwkv"], xn, cache)
+        x = x + y
+        xn = L.apply_norm(cfg, p["rwkv_ln2"], x)
+        y, new_cache = R.decode_rwkv_channel_mix(cfg, p["rwkv"], xn, cache)
+        return x + y, new_cache
+
+    if kind["moe"]:
+        xn = L.apply_norm(cfg, p["ln2"], x)
+        y, _ = MoE.apply_moe(cfg, p["moe"], xn)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln2"], y)
+        x = x + y
+    else:
+        x, _ = _norm_res(
+            cfg, p, "ln2", "post_ln2", x, lambda xn: L.apply_mlp(cfg, p["mlp"], xn)
+        )
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ArchConfig, params: Params, frame_embeds: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, n_frames, d)."""
+    enc = params["encoder"]
+    x = frame_embeds + L.sinusoidal_positions(
+        frame_embeds.shape[1], cfg.d_model
+    ).astype(frame_embeds.dtype)
+    kind = {"mixer": "attention", "window": None, "moe": False}
+
+    def body(x, p):
+        def sub(xn):
+            return _apply_attn_train(cfg, p["attn"], kind, xn, None, causal=False)
+
+        x, _ = _norm_res(cfg, p, "ln1", "post_ln1", x, sub)
+        x, _ = _norm_res(
+            cfg, p, "ln2", "post_ln2", x, lambda xn: L.apply_mlp(cfg, p["mlp"], xn)
+        )
+        return x, None
+
+    x, _ = lax.scan(body, x, enc["blocks"][0])
+    return L.apply_norm(cfg, enc["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, tokens, patch_embeds=None):
+    x = L.embed_tokens(params["embed"], tokens)
+    if cfg.frontend == "vision" and patch_embeds is not None:
+        # early fusion stub: image patch embeddings occupy the prefix
+        npatch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, npatch:]], axis=1)
+    if not cfg.rope:
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    return shard_act(x, "btd")
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S)
+    *,
+    patch_embeds: jax.Array | None = None,
+    frame_embeds: jax.Array | None = None,
+    remat: str = "none",  # none | full | dots
+) -> tuple[jax.Array, jax.Array]:
+    """Train/prefill forward. Returns (hidden (B, S, d), moe aux loss)."""
+    x = _embed_inputs(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = None
+    if cfg.encoder is not None and frame_embeds is not None:
+        enc_out = encode(cfg, params, frame_embeds)
+
+    kinds = cfg.layer_kinds()
+
+    def group(x, block_params):
+        aux = jnp.zeros((), jnp.float32)
+        for kind, p in zip(kinds, block_params):
+            x, a = _apply_block_train(cfg, kind, p, x, positions, enc_out)
+            aux = aux + a
+        return x, aux
+
+    if remat == "full":
+        group = jax.checkpoint(group, policy=None)
+    elif remat == "dots":
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    def body(carry, block_params):
+        x, aux = carry
+        x, a = group(x, block_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: Params,
+    batch: dict[str, jax.Array],
+    *,
+    aux_coef: float = 0.01,
+    remat: str = "none",
+    loss_chunk: int = 512,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Causal-LM loss (chunked CE over the vocab) + MoE load-balance aux."""
+    x, aux = forward(
+        cfg,
+        params,
+        batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        frame_embeds=batch.get("frame_embeds"),
+        remat=remat,
+    )
+    ce = L.chunked_cross_entropy(
+        cfg, params["embed"], x, batch["targets"], chunk=loss_chunk
+    )
+    loss = ce + aux_coef * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, S)
+    cache: Params,
+    *,
+    patch_embeds=None,
+    frame_embeds=None,
+) -> tuple[jax.Array, Params]:
+    """Run the prompt, fill the cache, return last-position logits.
+
+    Attention K/V for the full prompt are written to the cache; recurrent
+    states (mamba/rwkv) are advanced through the prompt.
+    """
+    x = _embed_inputs(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = None
+    if cfg.encoder is not None and frame_embeds is not None:
+        enc_out = encode(cfg, params, frame_embeds)
+    kinds = cfg.layer_kinds()
+
+    def body(x, scanned):
+        block_params, block_caches = scanned
+        new_caches = []
+        for kind, p, c in zip(kinds, block_params, block_caches):
+            x, nc = _prefill_block(cfg, kind, p, x, c, positions, enc_out)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_matmul(cfg, params["embed"], x[:, -1:])
+    return logits, {"blocks": new_blocks}
+
+
+def _prefill_block(cfg, kind, p, x, cache, positions, enc_out=None):
+    if kind["mixer"] == "attention":
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        q, k, v = A.qkv_proj(cfg, p["attn"], xn, positions if cfg.rope else None)
+        ck, cv = _update_kv(cache["k"], cache["v"], k, v, 0)
+        o = A.chunked_attention(
+            q, k, v, causal=True, window=kind.get("window"), softcap=cfg.attn_softcap
+        )
+        y = A.out_proj(cfg, p["attn"], o)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln1"], y)
+        x = x + y
+        new_cache = dict(cache, k=ck, v=cv)
+        if enc_out is not None and "xk" in cache:
+            xn = L.apply_norm(cfg, p["ln_x"], x)
+            q, ek, ev = None, None, None
+            q, _, _ = A.qkv_proj(cfg, p["xattn"], xn, None)
+            _, ek, ev = A.qkv_proj(cfg, p["xattn"], enc_out, None)
+            o = A.chunked_attention(q, ek, ev, causal=False)
+            x = x + A.out_proj(cfg, p["xattn"], o)
+            new_cache = dict(new_cache, xk=ek, xv=ev)
+    elif kind["mixer"] == "mamba":
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        y, new_cache = M.apply_mamba(cfg, p["mamba"], xn, cache)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln1"], y)
+        x = x + y
+    else:  # rwkv6
+        xn = L.apply_norm(cfg, p["ln1"], x)
+        y, cache = R.apply_rwkv_time_mix(cfg, p["rwkv"], xn, cache)
+        x = x + y
+        xn = L.apply_norm(cfg, p["rwkv_ln2"], x)
+        y, new_cache = R.apply_rwkv_channel_mix(cfg, p["rwkv"], xn, cache)
+        return x + y, new_cache
+
+    if kind["moe"]:
+        xn = L.apply_norm(cfg, p["ln2"], x)
+        y, _ = MoE.apply_moe(cfg, p["moe"], xn)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg, p["post_ln2"], y)
+        x = x + y
+    else:
+        x, _ = _norm_res(
+            cfg, p, "ln2", "post_ln2", x, lambda xn: L.apply_mlp(cfg, p["mlp"], xn)
+        )
+    return x, new_cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,  # (B, 1)
+    cache: Params,
+    position: jax.Array,  # scalar int32: write offset == cache fill level
+) -> tuple[jax.Array, Params]:
+    """One serving step: (logits (B, 1, V), updated cache)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    if not cfg.rope:
+        # absolute sinusoidal at the current position (whisper)
+        d = cfg.d_model
+        pos = position.astype(jnp.float32)
+        div = jnp.exp(
+            jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d)
+        )
+        pe = jnp.zeros((d,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(pos * div)).at[1::2].set(jnp.cos(pos * div))
+        x = x + pe.astype(x.dtype)
+    x = shard_act(x, "btd")
+    kinds = cfg.layer_kinds()
+
+    def body(x, scanned):
+        block_params, block_caches = scanned
+        new_caches = []
+        for kind, p, c in zip(kinds, block_params, block_caches):
+            x, nc = _apply_block_decode(cfg, kind, p, x, c, position)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_matmul(cfg, params["embed"], x)
+    return logits, {"blocks": new_blocks}

@@ -1,0 +1,23 @@
+"""repro.optim — AdamW, LR schedules, gradient clipping, and compressed
+gradient synchronization with error feedback."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compress import (
+    CompressState,
+    compress_grads,
+    compressed_allreduce_shardmap,
+    init_compress_state,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "CompressState",
+    "adamw_init",
+    "adamw_update",
+    "compress_grads",
+    "compressed_allreduce_shardmap",
+    "cosine_schedule",
+    "global_norm",
+    "init_compress_state",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,82 @@
+"""AdamW with configurable moment dtype and global-norm clipping.
+
+Pure pytree-in / pytree-out functions (no optax dependency — the container
+is offline).  Moment dtype is per-arch config: fp32 default, bf16 for the
+400B MoE where fp32 moments would not fit HBM (DESIGN.md §5); master params
+stay in the model dtype with fp32 update math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: dict[str, Any],
+    lr_scale: jax.Array | float = 1.0,
+) -> tuple[Any, dict[str, Any], dict[str, jax.Array]]:
+    """One update. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        nu32 = nu.astype(jnp.float32) * cfg.b2 + jnp.square(g32) * (1 - cfg.b2)
+        mhat = mu32 / b1c
+        nhat = nu32 / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    # three passes (params trees may legitimately contain tuple nodes, so a
+    # tuple-leaf unzip is unsafe); XLA CSE dedups the shared subexpressions
+    p_new = jax.tree.map(lambda *a: upd(*a)[0], params, grads, state["mu"], state["nu"])
+    mu_new = jax.tree.map(lambda *a: upd(*a)[1], params, grads, state["mu"], state["nu"])
+    nu_new = jax.tree.map(lambda *a: upd(*a)[2], params, grads, state["mu"], state["nu"])
+    new_state = {"mu": mu_new, "nu": nu_new, "step": step}
+    return p_new, new_state, {"grad_norm": gn}

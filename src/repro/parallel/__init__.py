@@ -1,0 +1,20 @@
+"""repro.parallel — sharding rules, activation-constraint context, the 2.5D
+LM matmul (the paper's technique applied to the LM's biggest matmuls), and a
+scan-based pipeline schedule for >2-pod meshes."""
+from repro.parallel.ctx import ShardingRules, shard_act, sharding_rules
+from repro.parallel.sharding import (
+    batch_spec,
+    cache_specs,
+    input_specs_sharded,
+    param_specs,
+)
+
+__all__ = [
+    "ShardingRules",
+    "batch_spec",
+    "cache_specs",
+    "input_specs_sharded",
+    "param_specs",
+    "shard_act",
+    "sharding_rules",
+]

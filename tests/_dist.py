@@ -1,0 +1,410 @@
+"""Multi-device checks, run in a subprocess so the fake-device XLA flag never
+leaks into the main pytest process (smoke tests must see 1 device).
+
+Usage:  python -m tests._dist <check> [<check> ...]
+Each check raises on failure; exit code 0 == all passed.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=64 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def check_engines():
+    """All distributed engines == single-device filtered oracle."""
+    from repro.core import bsm as B
+    from repro.core.engine import multiply, multiply_reference
+    from repro.launch.mesh import make_spgemm_mesh
+
+    key = jax.random.key(0)
+    a = B.random_bsm(key, nb=8, bs=8, occupancy=0.4, pattern="decay")
+    b = B.random_bsm(jax.random.key(1), nb=8, bs=8, occupancy=0.4, pattern="decay")
+
+    for threshold in (0.0, 0.35):
+        ref = multiply_reference(a, b, threshold=threshold)
+        rd = np.asarray(ref.to_dense())
+        mesh2 = make_spgemm_mesh(p=2)
+        for eng in ("cannon", "onesided", "gather"):
+            c = multiply(a, b, mesh2, engine=eng, threshold=threshold)
+            np.testing.assert_allclose(
+                np.asarray(c.to_dense()), rd, rtol=1e-5, atol=1e-5,
+                err_msg=f"{eng} t={threshold}")
+            np.testing.assert_array_equal(
+                np.asarray(c.mask), np.asarray(ref.mask), err_msg=eng)
+        for l in (2,):
+            mesh3 = make_spgemm_mesh(p=2, l=l)
+            for layout in ("2d", "scatter"):
+                c = multiply(a, b, mesh3, engine="twofive",
+                             threshold=threshold, c_layout=layout)
+                np.testing.assert_allclose(
+                    np.asarray(c.to_dense()), rd, rtol=1e-5, atol=1e-5,
+                    err_msg=f"twofive {layout} t={threshold}")
+    # pallas backend through the distributed gather engine
+    mesh2 = make_spgemm_mesh(p=2)
+    ref = multiply_reference(a, b)
+    c = multiply(a, b, mesh2, engine="gather", backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(c.to_dense()), np.asarray(ref.to_dense()), rtol=1e-4, atol=1e-4)
+    print("engines OK")
+
+
+def check_engines_rectangular():
+    """gather engine on non-square grids (paper's non-ideal topologies)."""
+    from repro.core import bsm as B
+    from repro.core.engine import multiply, multiply_reference
+
+    a = B.random_bsm(jax.random.key(2), nb=8, bs=4, occupancy=0.5)
+    b = B.random_bsm(jax.random.key(3), nb=8, bs=4, occupancy=0.5)
+    ref = np.asarray(multiply_reference(a, b).to_dense())
+    for shape in ((2, 4), (4, 2), (1, 8)):
+        mesh = jax.make_mesh(shape, ("r", "c"))
+        c = multiply(a, b, mesh, engine="gather")
+        np.testing.assert_allclose(np.asarray(c.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5, err_msg=str(shape))
+    print("engines_rectangular OK")
+
+
+def check_comm_volume():
+    """Measured HLO collective bytes track the paper's volume model:
+
+    * cannon and onesided (PTP vs OS1) move identical A/B volume (Table 2);
+    * the 2.5D engine's A/B traffic drops ~L-fold in tick count (the mesh
+      formulation's Eq. (7) analogue) while adding the (L-1)/L C reduction.
+    """
+    from repro.core.engine import lower_multiply
+    from repro.launch.mesh import make_spgemm_mesh
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    nb, bs = 16, 8
+
+    def coll(mesh, engine, **kw):
+        lowered = lower_multiply(mesh, nb, bs, engine=engine, **kw)
+        txt = lowered.compile().as_text()
+        return analyze_hlo(txt, default_group=mesh.size)
+
+    mesh2 = make_spgemm_mesh(p=4)
+    r_cannon = coll(mesh2, "cannon")
+    r_onesided = coll(mesh2, "onesided")
+    r_gather = coll(mesh2, "gather")
+
+    # PTP == OS1 volume up to the pre-shift (a small constant)
+    ratio = r_onesided.collective_wire_bytes / r_cannon.collective_wire_bytes
+    assert 0.7 < ratio <= 1.01, ratio
+    # gather moves the same panel volume as the streaming engines (+-20%)
+    ratio_g = r_gather.collective_wire_bytes / r_onesided.collective_wire_bytes
+    assert 0.5 < ratio_g < 1.5, ratio_g
+
+    mesh25_l1 = make_spgemm_mesh(p=4)  # L=1 == onesided ticks
+    mesh25_l4 = make_spgemm_mesh(p=4, l=4)
+    r_l1 = coll(mesh25_l1, "onesided")
+    r_l4 = coll(mesh25_l4, "twofive", c_layout="scatter")
+    # per-device A/B traffic: 4 ticks -> 1 tick; plus the C reduce-scatter.
+    # net must be well below L=1 (the communication reduction of the paper)
+    assert r_l4.collective_wire_bytes < 0.7 * r_l1.collective_wire_bytes, (
+        r_l4.collective_wire_bytes, r_l1.collective_wire_bytes)
+    print("comm_volume OK:",
+          f"cannon={r_cannon.collective_wire_bytes:.3g}",
+          f"os1={r_onesided.collective_wire_bytes:.3g}",
+          f"l4={r_l4.collective_wire_bytes:.3g}")
+
+
+def check_train_steps():
+    """build_train_step executes on a (2,2) mesh: loss finite + decreasing,
+    donated buffers update, gradient compression preserves learning."""
+    from repro.configs import get_arch
+    from repro.data.pipeline import DataConfig, SyntheticLMData, make_global_batch
+    from repro.launch.steps import StepOptions, build_train_step
+    from repro.optim import AdamWConfig
+    from repro.config import ShapeConfig
+    from repro.models import transformer as T
+    from repro.parallel.sharding import batch_spec
+
+    cfg = get_arch("olmo_1b").reduced()
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train")
+
+    for compress in (False, True):
+        options = StepOptions(remat="full", compress_grads=compress, loss_chunk=64)
+        step, (p_sds, o_sds, b_sds) = build_train_step(
+            cfg, mesh, shape, opt=AdamWConfig(lr=5e-3, weight_decay=0.0),
+            options=options)
+
+        params = jax.jit(
+            lambda k: T.init_params(cfg, k),
+            out_shardings=jax.tree.map(lambda s: s.sharding, p_sds),
+        )(jax.random.key(0))
+        opt_state = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype,
+                                device=s.sharding), o_sds)
+
+        data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                          global_batch=8))
+        spec = batch_spec(mesh, 8, 64)
+        losses = []
+        for i in range(5):
+            batch = make_global_batch(data, i, mesh, spec)
+            params, opt_state, metrics = step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            assert np.isfinite(loss), (compress, i)
+            losses.append(loss)
+        assert losses[-1] < losses[0], (compress, losses)
+        print(f"train_steps compress={compress} OK {losses[0]:.3f}->{losses[-1]:.3f}")
+
+
+def check_serve_steps():
+    """build_serve_step + build_prefill_step execute on a (2,2) mesh and
+    match the single-device decode."""
+    from repro.configs import get_arch
+    from repro.config import ShapeConfig
+    from repro.launch.steps import StepOptions, build_prefill_step, build_serve_step
+    from repro.models import transformer as T
+
+    cfg = get_arch("olmo_1b").reduced()
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    b, s = 4, 32
+    shape_d = ShapeConfig("d", seq_len=s, global_batch=b, kind="decode")
+    shape_p = ShapeConfig("p", seq_len=s, global_batch=b, kind="prefill")
+
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+
+    # single-device oracle
+    cache0 = T.init_cache(cfg, b, s)
+    logits_ref, cache_ref = T.prefill(cfg, params, toks, cache0)
+    tok = jnp.argmax(logits_ref[:, -1], -1)[:, None].astype(jnp.int32)
+    logits_ref2, _ = T.decode_step(cfg, params, tok, cache_ref,
+                                   jnp.asarray(s, jnp.int32))
+
+    pstep, (p_sds, c_sds, b_sds) = build_prefill_step(cfg, mesh, shape_p,
+                                                      options=StepOptions())
+    put = lambda tree, sds: jax.tree.map(
+        lambda x, s_: jax.device_put(x, s_.sharding), tree, sds)
+    params_sh = put(params, p_sds)
+    cache_sh = put(T.init_cache(cfg, b, s), c_sds)
+    logits, cache_sh = pstep(params_sh, cache_sh, {"tokens": jax.device_put(
+        toks, b_sds["tokens"].sharding)})
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(logits_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+    dstep, (p_sds2, c_sds2, b_sds2) = build_serve_step(cfg, mesh, shape_d,
+                                                       options=StepOptions())
+    logits2, _ = dstep(put(params, p_sds2),
+                       jax.tree.map(lambda x, s_: jax.device_put(
+                           np.asarray(x), s_.sharding), cache_sh, c_sds2),
+                       jax.device_put(tok, b_sds2["tokens"].sharding),
+                       jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits2, np.float32),
+                               np.asarray(logits_ref2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    print("serve_steps OK")
+
+
+def check_checkpoint_cross_mesh():
+    """Save sharded on (4,1), restore onto (2,2) — the elastic path."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    import tempfile
+
+    mesh_a = jax.make_mesh((4, 1), ("data", "model"))
+    mesh_b = jax.make_mesh((2, 2), ("data", "model"))
+    x = jnp.arange(64.0).reshape(8, 8)
+    xa = jax.device_put(x, NamedSharding(mesh_a, P("data", None)))
+    tree = {"w": xa, "step": jnp.asarray(3)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree, mesh=mesh_a)
+        shardings = {
+            "w": NamedSharding(mesh_b, P("data", "model")),
+            "step": NamedSharding(mesh_b, P()),
+        }
+        r = restore_checkpoint(d, 1, jax.eval_shape(lambda: tree),
+                               shardings=shardings)
+        np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(x))
+        assert r["w"].sharding.spec == P("data", "model")
+    print("checkpoint_cross_mesh OK")
+
+
+def check_data_global_batch():
+    from repro.data.pipeline import DataConfig, SyntheticLMData, make_global_batch
+    from repro.parallel.sharding import batch_spec
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    d = SyntheticLMData(DataConfig(vocab=64, seq_len=16, global_batch=8))
+    spec = batch_spec(mesh, 8, 16)
+    gb = make_global_batch(d, 2, mesh, spec)
+    want = d.batch_numpy(2)
+    np.testing.assert_array_equal(np.asarray(gb["tokens"]), want["tokens"])
+    np.testing.assert_array_equal(np.asarray(gb["targets"]), want["targets"])
+    assert gb["tokens"].sharding.spec[0] == "data"
+    print("data_global_batch OK")
+
+
+def check_matmul_2p5d():
+    """The paper's 2.5D schedule on the LM-head matmul: exact vs x @ w."""
+    from repro.parallel.matmul_2p5d import matmul_2p5d_shardmap, plan_2p5d
+
+    mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"))
+    t, dm, v = 16, 32, 64
+    x = jax.random.normal(jax.random.key(0), (t, dm))
+    w = jax.random.normal(jax.random.key(1), (dm, v))
+    want = np.asarray(x @ w)
+    for reduce in ("scatter", "psum"):
+        fn = matmul_2p5d_shardmap(mesh, reduce=reduce)
+        out = fn(x, w)
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4,
+                                   err_msg=reduce)
+    plan = plan_2p5d(tokens=2048, d_model=4096, vocab=128256, l=2, tp=16)
+    assert plan.bytes_2p5d > 0 and plan.bytes_baseline > 0
+    print("matmul_2p5d OK")
+
+
+def check_compressed_allreduce():
+    from repro.optim.compress import (
+        compressed_allreduce_shardmap,
+        init_compress_state,
+    )
+
+    mesh = jax.make_mesh((4,), ("data",))
+    fn = compressed_allreduce_shardmap(mesh, axis="data")
+    g = jax.random.normal(jax.random.key(0), (4, 64)) * 1e-2
+    r0 = jnp.zeros((4, 64), jnp.float32)
+    synced, resid = fn({"w": g}, {"w": r0})
+    want = np.asarray(jnp.mean(g.astype(jnp.bfloat16).astype(jnp.float32), 0))
+    for row in np.asarray(synced["w"]):
+        np.testing.assert_allclose(row, want, rtol=2e-2, atol=1e-4)
+    # residual carries the quantization error exactly
+    np.testing.assert_allclose(
+        np.asarray(resid["w"]),
+        np.asarray(g, np.float32)
+        - np.asarray(g.astype(jnp.bfloat16), np.float32),
+        atol=1e-7,
+    )
+    print("compressed_allreduce OK")
+
+
+def check_spgemm_scaling():
+    """Comm-volume scaling over mesh sizes: measured bytes per device drop
+    as the grid grows (O(1/sqrt(P)) of Eq. (7) with fixed matrix)."""
+    from repro.core.engine import lower_multiply
+    from repro.launch.mesh import make_spgemm_mesh
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    nb, bs = 16, 8
+    got = {}
+    for p in (2, 4):
+        lowered = lower_multiply(make_spgemm_mesh(p=p), nb, bs, engine="onesided")
+        got[p] = analyze_hlo(lowered.compile().as_text(),
+                             default_group=p * p).collective_wire_bytes
+    # panel size shrinks 4x (p doubles both dims), ticks double -> net ~1/2
+    ratio = got[4] / got[2]
+    assert 0.3 < ratio < 0.75, (got, ratio)
+    print("spgemm_scaling OK", got)
+
+
+def check_microbatch_equivalence():
+    """Gradient accumulation (microbatch=k) == single-batch step, and the
+    ZeRO-1 layout produces the same update."""
+    from repro.configs import get_arch
+    from repro.config import ShapeConfig
+    from repro.launch.steps import StepOptions, build_train_step
+    from repro.optim import AdamWConfig
+    from repro.models import transformer as T
+
+    cfg = get_arch("olmo_1b").reduced()
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    shape = ShapeConfig("t", 64, 8, "train")
+    opt = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (8, 64), 0, cfg.vocab),
+        "targets": jax.random.randint(jax.random.key(2), (8, 64), 0, cfg.vocab),
+    }
+    results = {}
+    for name, opts in {
+        "mb1": StepOptions(remat="full", loss_chunk=64),
+        "mb4": StepOptions(remat="full", loss_chunk=64, microbatch=4),
+        "mb4z": StepOptions(remat="full", loss_chunk=64, microbatch=4, zero1=True),
+    }.items():
+        step, (p_sds, o_sds, _) = build_train_step(cfg, mesh, shape, opt=opt,
+                                                   options=opts)
+        sh = lambda t: jax.tree.map(lambda x: x.sharding, t)
+        params = jax.jit(lambda k: T.init_params(cfg, k),
+                         out_shardings=sh(p_sds))(jax.random.key(0))
+        opt_state = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype, device=s.sharding), o_sds)
+        p2, _, m = step(params, opt_state, batch)
+        results[name] = (float(m["loss"]), p2)
+    base_loss, base_p = results["mb1"]
+    for name in ("mb4", "mb4z"):
+        loss, p = results[name]
+        assert abs(loss - base_loss) < 1e-2, (name, loss, base_loss)
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(base_p), jax.tree.leaves(p)))
+        assert d < 1e-4, (name, d)
+    print("microbatch_equivalence OK")
+
+
+def check_pipeline():
+    """GPipe schedule over a 4-stage axis == sequential composition."""
+    from repro.parallel.pipeline import pipeline_shardmap, split_microbatches
+
+    mesh = jax.make_mesh((4,), ("pod",))
+    d = 16
+    ws = jax.random.normal(jax.random.key(0), (4, d, d)) * (d**-0.5)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    fn = pipeline_shardmap(mesh, stage_fn, axis="pod")
+    x = jax.random.normal(jax.random.key(1), (8, 2, d))  # 8 microbatches
+    out = fn(ws, x)
+
+    want = x
+    for i in range(4):
+        want = jnp.tanh(want @ ws[i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    print("pipeline OK")
+
+
+CHECKS = {
+    "engines": check_engines,
+    "microbatch": check_microbatch_equivalence,
+    "pipeline": check_pipeline,
+    "engines_rectangular": check_engines_rectangular,
+    "comm_volume": check_comm_volume,
+    "train_steps": check_train_steps,
+    "serve_steps": check_serve_steps,
+    "checkpoint_cross_mesh": check_checkpoint_cross_mesh,
+    "data_global_batch": check_data_global_batch,
+    "matmul_2p5d": check_matmul_2p5d,
+    "compressed_allreduce": check_compressed_allreduce,
+    "spgemm_scaling": check_spgemm_scaling,
+}
+
+
+def main(argv: list[str]) -> int:
+    names = argv or list(CHECKS)
+    for name in names:
+        CHECKS[name]()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

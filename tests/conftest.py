@@ -1,0 +1,21 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / device counts are deliberately NOT set here — smoke tests
+run on the real single CPU device.  Multi-device tests go through
+``tests/_dist.py`` subprocesses which set ``xla_force_host_platform_device_count``
+before importing jax (see test_distributed.py).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,125 @@
+"""Block-sparse matrix format: invariants and semantics (paper section 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bsm as B
+
+
+def test_to_dense_roundtrip():
+    key = jax.random.key(0)
+    m = B.random_bsm(key, nb=6, bs=4, occupancy=0.5)
+    d = m.to_dense()
+    m2 = B.from_dense(d, bs=4)
+    np.testing.assert_allclose(np.asarray(m2.to_dense()), np.asarray(d), rtol=1e-6)
+
+
+def test_from_dense_shape_check():
+    with pytest.raises(ValueError):
+        B.from_dense(jnp.zeros((10, 10)), bs=4)
+
+
+def test_mask_zeroes_blocks():
+    key = jax.random.key(1)
+    blocks = jax.random.normal(key, (4, 4, 3, 3))
+    mask = jnp.zeros((4, 4), bool).at[0, 0].set(True)
+    m = B.make_bsm(blocks, mask)
+    # masked-out blocks must be exactly zero (consistency of the triple)
+    dense = np.asarray(m.to_dense())
+    assert np.all(dense[3:, :] == 0)
+    assert np.any(dense[:3, :3] != 0)
+    assert float(m.occupancy()) == pytest.approx(1 / 16)
+
+
+def test_norms_consistent_with_blocks():
+    key = jax.random.key(2)
+    m = B.random_bsm(key, nb=5, bs=4, occupancy=0.4)
+    ref = np.linalg.norm(
+        np.asarray(m.blocks, np.float32), axis=(2, 3)
+    )
+    np.testing.assert_allclose(np.asarray(m.norms), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_filter_bsm_drops_small_blocks():
+    key = jax.random.key(3)
+    m = B.random_bsm(key, nb=6, bs=4, occupancy=1.0, pattern="dense")
+    scaled = B.BlockSparseMatrix(
+        blocks=m.blocks.at[0, 1].mul(1e-8),
+        mask=m.mask,
+        norms=B.block_norms(m.blocks.at[0, 1].mul(1e-8)),
+    )
+    f = B.filter_bsm(scaled, threshold=1e-4)
+    assert not bool(f.mask[0, 1])
+    assert bool(f.mask[0, 0])
+    # filtered block data is zeroed, not just masked
+    assert float(jnp.abs(f.blocks[0, 1]).max()) == 0.0
+
+
+def test_identity_multiplicative():
+    from repro.core.engine import multiply_reference
+
+    key = jax.random.key(4)
+    m = B.random_bsm(key, nb=4, bs=8, occupancy=0.5)
+    eye = B.identity(4, 8)
+    out = multiply_reference(m, eye)
+    np.testing.assert_allclose(
+        np.asarray(out.to_dense()), np.asarray(m.to_dense()), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_add_scale():
+    key = jax.random.key(5)
+    a = B.random_bsm(key, nb=4, bs=4, occupancy=0.4)
+    b = B.random_bsm(jax.random.key(6), nb=4, bs=4, occupancy=0.4)
+    s = B.add(B.scale(a, 2.0), b)
+    np.testing.assert_allclose(
+        np.asarray(s.to_dense()),
+        2.0 * np.asarray(a.to_dense()) + np.asarray(b.to_dense()),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_permutation_preserves_content():
+    key = jax.random.key(7)
+    m = B.random_bsm(key, nb=6, bs=4, occupancy=0.5)
+    perm = B.random_load_balance_permutation(jax.random.key(8), 6)
+    p = B.permute(m, perm, perm)
+    # permuting block rows/cols == permuting dense rows/cols blockwise
+    dense = np.asarray(m.to_dense()).reshape(6, 4, 6, 4)
+    expect = dense[perm][:, :, perm].reshape(24, 24)
+    np.testing.assert_allclose(np.asarray(p.to_dense()), expect, rtol=1e-6)
+
+
+def test_grid_block_loads_balance():
+    """The paper's randomized permutation evens out per-panel block loads."""
+    rng = np.random.default_rng(0)
+    nb = 64
+    # adversarial pattern: all blocks in the top rows
+    mask = np.zeros((nb, nb), bool)
+    mask[:16, :] = True
+    loads_before = B.grid_block_loads(mask, 4, 4)
+    perm = rng.permutation(nb)
+    loads_after = B.grid_block_loads(mask[perm][:, perm], 4, 4)
+    assert loads_before.max() - loads_before.min() == 256  # fully unbalanced
+    assert loads_after.std() < loads_before.std()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(2, 8),
+    bs=st.sampled_from([1, 2, 4]),
+    occ=st.floats(0.05, 1.0),
+)
+def test_property_occupancy_and_diag(nb, bs, occ):
+    m = B.random_bsm(jax.random.key(42), nb=nb, bs=bs, occupancy=occ)
+    # diagonal always occupied (operators have dominant diagonal)
+    assert bool(jnp.all(jnp.diag(m.mask)))
+    assert 0.0 < float(m.occupancy()) <= 1.0
+    # norms zero exactly where mask is False
+    off = np.asarray(m.norms)[~np.asarray(m.mask)]
+    assert np.all(off == 0.0)

@@ -1,0 +1,96 @@
+"""Communication-volume / memory model — paper Eq. (6), (7), Figs. 2 & 3."""
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import commvolume as CV
+from repro.core.topology import make_topology
+
+
+def test_ptp_equals_os1_tick_volume():
+    """Table 2: PTP and OS1 communicate identical A/B volume (the paper's
+    measured equality); PTP adds only the pre-shift."""
+    topo = make_topology(8, 8, 1)
+    ptp = CV.ptp_volume(topo, s_a=3.0, s_b=1.0)
+    os1 = CV.osl_volume(topo, s_a=3.0, s_b=1.0, s_c=2.0)
+    assert os1.c_volume == 0.0
+    assert ptp.ab_volume == pytest.approx(os1.ab_volume + (3.0 + 1.0))
+
+
+@pytest.mark.parametrize("l", [4, 9, 16])
+def test_osl_sqrt_l_reduction(l):
+    """Eq. (7): A/B volume scales 1/sqrt(L)."""
+    p = 12 * int(math.isqrt(l))
+    base = CV.osl_volume(make_topology(p, p, 1), 1.0, 1.0, 1.0)
+    deep = CV.osl_volume(make_topology(p, p, l), 1.0, 1.0, 1.0)
+    assert deep.ab_volume == pytest.approx(base.ab_volume / math.sqrt(l))
+    assert deep.c_volume == pytest.approx(l - 1.0)
+
+
+def test_fig3_ratio_matches_paper_shape():
+    """Fig. 3: the OS1/OSL ratio is < sqrt(L) because of the (L-1) S_C term,
+    and decreases as S_C/S_AB grows (the paper's H2O vs Dense ordering)."""
+    topo4 = make_topology(36, 36, 4)
+    # paper's measured S_C/S_{A,B}: H2O-DFT-LS 2.7, S-E 2.1, Dense 1.0
+    r_h2o = CV.volume_ratio_os1_over_osl(topo4, 1.0, 1.0, 2.7 * 1.0)
+    r_se = CV.volume_ratio_os1_over_osl(topo4, 1.0, 1.0, 2.1 * 1.0)
+    r_dense = CV.volume_ratio_os1_over_osl(topo4, 1.0, 1.0, 1.0)
+    assert 1.0 < r_h2o < 2.0  # < sqrt(4)
+    assert r_h2o < r_se < r_dense < 2.0
+
+
+def test_memory_factor_eq6():
+    """Eq. (6) exact values."""
+    sq = make_topology(8, 8, 4)
+    f = CV.memory_factor(sq, s_a=1.0, s_b=1.0, s_c=2.0)
+    assert f == pytest.approx(2.0 / (3 * 2.0) * 4 + (2 + 4) / 6.0)
+    ns = make_topology(4, 8, 2)
+    f = CV.memory_factor(ns, s_a=1.0, s_b=1.0, s_c=2.0)
+    assert f == pytest.approx(2.0 / 6.0 * 2 + 1.0)
+    assert CV.memory_factor(make_topology(4, 4, 1), 1, 1, 1) == 1.0
+
+
+def test_scaling_law_sqrt_pl():
+    """O(1/sqrt(PL)) scaling of communicated volume per process."""
+    n = 1e8
+    v1 = CV.scaling_per_process(256, 1, n)
+    v2 = CV.scaling_per_process(1024, 1, n)
+    v3 = CV.scaling_per_process(256, 4, n)
+    assert v2 == pytest.approx(v1 / 2)
+    assert v3 == pytest.approx(v1 / 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([4, 6, 8, 12]),
+    l=st.sampled_from([1, 4, 9]),
+    sc_ratio=st.floats(0.5, 4.0),
+)
+def test_property_osl_total_monotone_in_l_for_small_sc(s, l, sc_ratio):
+    """OSL total <= OS1 total whenever the S_C overhead term stays below the
+    A/B saving — the paper's 'L pays off when communication dominates'."""
+    if s % int(math.isqrt(l)) != 0:
+        return
+    topo1 = make_topology(s, s, 1)
+    topol = make_topology(s, s, l)
+    os1 = CV.osl_volume(topo1, 1.0, 1.0, sc_ratio)
+    osl = CV.osl_volume(topol, 1.0, 1.0, sc_ratio)
+    saving = os1.ab_volume - osl.ab_volume
+    overhead = osl.c_volume
+    if saving > overhead:
+        assert osl.total < os1.total
+    else:
+        assert osl.total >= os1.total - 1e-9
+
+
+def test_mesh25d_volume_model():
+    """The JAX-engine mesh formulation keeps Eq. (7) asymptotics."""
+    v1 = CV.mesh25d_volume(8, 1, 1.0, 1.0, 1.0)
+    v4 = CV.mesh25d_volume(8, 4, 1.0, 1.0, 1.0)
+    # AB volume: ticks go 8 -> 2, i.e. / L (panel count), while panel k-width
+    # is unchanged in the mesh formulation -> net / L == /sqrt(L)^2
+    assert v4.ab_volume < v1.ab_volume
+    assert v4.c_volume == pytest.approx(3.0 / 4.0)

@@ -1,0 +1,76 @@
+"""Synthetic data pipeline: determinism, step-addressability, shard-locality."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLMData
+
+
+def _cfg(**kw):
+    base = dict(vocab=512, seq_len=32, global_batch=8, seed=0)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLMData(_cfg()).batch_numpy(5)
+    b = SyntheticLMData(_cfg()).batch_numpy(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["targets"], b["targets"])
+
+
+def test_step_addressable_restart():
+    """Restarting from step N regenerates exactly the stream from N."""
+    d = SyntheticLMData(_cfg())
+    run1 = [d.batch_numpy(s)["tokens"] for s in range(4)]
+    d2 = SyntheticLMData(_cfg())
+    run2 = [d2.batch_numpy(s)["tokens"] for s in range(2, 4)]
+    np.testing.assert_array_equal(run1[2], run2[0])
+    np.testing.assert_array_equal(run1[3], run2[1])
+
+
+def test_different_steps_differ():
+    d = SyntheticLMData(_cfg())
+    a = d.batch_numpy(0)["tokens"]
+    b = d.batch_numpy(1)["tokens"]
+    assert (a != b).any()
+
+
+def test_seed_changes_stream():
+    a = SyntheticLMData(_cfg(seed=0)).batch_numpy(0)["tokens"]
+    b = SyntheticLMData(_cfg(seed=1)).batch_numpy(0)["tokens"]
+    assert (a != b).any()
+
+
+def test_targets_are_shifted_tokens():
+    d = SyntheticLMData(_cfg())
+    b = d.batch_numpy(0)
+    rows = d._rows(0, 0, 8)
+    np.testing.assert_array_equal(b["tokens"], rows[:, :-1])
+    np.testing.assert_array_equal(b["targets"], rows[:, 1:])
+
+
+def test_shard_local_rows_match_global():
+    """Row-slice generation equals the same rows of the global batch —
+    the multi-host invariant (each host generates only its slice)."""
+    d = SyntheticLMData(_cfg())
+    full = d._rows(3, 0, 8)
+    lo = d._rows(3, 2, 5)
+    np.testing.assert_array_equal(full[2:5], lo)
+
+
+def test_markov_structure_learnable():
+    """~half the transitions follow the fixed successor permutation — the
+    signal convergence tests rely on."""
+    d = SyntheticLMData(_cfg(seq_len=512, global_batch=4))
+    b = d.batch_numpy(0)
+    toks, tgts = b["tokens"], b["targets"]
+    follows = (tgts == d._successor[toks]).mean()
+    assert 0.35 < follows < 0.75, follows
+
+
+def test_zipf_skew():
+    d = SyntheticLMData(_cfg(vocab=128, seq_len=256, global_batch=16))
+    toks = d.batch_numpy(0)["tokens"].ravel()
+    counts = np.bincount(toks, minlength=128)
+    assert counts[:8].sum() > counts[64:].sum()  # head dominates tail

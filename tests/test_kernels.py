@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes for each kernel and assert_allclose
+against the ref.py oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.block_spgemm import block_spgemm
+from repro.kernels.flash_attention import flash_attention_single
+
+
+# ---------------------------------------------------------------------------
+# block_spgemm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bs", [8, 16, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_spgemm_shapes_dtypes(bs, dtype):
+    ni, nk, nj = 3, 4, 2
+    key = jax.random.key(0)
+    a = jax.random.normal(key, (ni, nk, bs, bs), dtype)
+    b = jax.random.normal(jax.random.key(1), (nk, nj, bs, bs), dtype)
+    ok = jax.random.bernoulli(jax.random.key(2), 0.6, (ni, nk, nj))
+    out = block_spgemm(a, b, ok, interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    assert out.shape == (ni, nj, bs, bs)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2  # f32: 512-term k-sums
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_block_spgemm_filter_actually_skips():
+    """A filtered-out (i,k,j) product must not contribute, even if data huge."""
+    bs = 8
+    a = jnp.ones((1, 2, bs, bs)) * 1e6
+    b = jnp.ones((2, 1, bs, bs))
+    ok = jnp.asarray([[[True], [False]]])  # only k=0 allowed
+    out = block_spgemm(a, b, ok, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1e6 * bs, rtol=1e-6)
+
+
+def test_block_spgemm_all_filtered_is_zero():
+    bs = 8
+    a = jnp.ones((2, 2, bs, bs))
+    b = jnp.ones((2, 2, bs, bs))
+    ok = jnp.zeros((2, 2, 2), bool)
+    out = block_spgemm(a, b, ok, interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ni=st.integers(1, 4),
+    nk=st.integers(1, 4),
+    nj=st.integers(1, 4),
+    bs=st.sampled_from([4, 8]),
+    p=st.floats(0.0, 1.0),
+)
+def test_block_spgemm_property(ni, nk, nj, bs, p):
+    a = jax.random.normal(jax.random.key(10), (ni, nk, bs, bs))
+    b = jax.random.normal(jax.random.key(11), (nk, nj, bs, bs))
+    ok = jax.random.bernoulli(jax.random.key(12), p, (ni, nk, nj))
+    out = block_spgemm(a, b, ok, interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrapper_defaults_interpret_on_cpu():
+    a = jnp.ones((1, 1, 8, 8))
+    b = jnp.ones((1, 1, 8, 8))
+    ok = jnp.ones((1, 1, 1), bool)
+    out = ops.block_spgemm(a, b, ok)  # interpret auto-detected (CPU)
+    np.testing.assert_allclose(np.asarray(out), 8.0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq,skv,d", [(128, 128, 64), (256, 128, 32), (128, 256, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(sq, skv, d, causal):
+    if causal and sq > skv:
+        pytest.skip("causal needs sq <= skv alignment here")
+    q = jax.random.normal(jax.random.key(0), (sq, d), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (skv, d), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (skv, d), jnp.float32)
+    out = flash_attention_single(q, k, v, causal=causal, bq=64, bkv=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    sq = 256
+    q = jax.random.normal(jax.random.key(3), (sq, 64))
+    k = jax.random.normal(jax.random.key(4), (sq, 64))
+    v = jax.random.normal(jax.random.key(5), (sq, 64))
+    out = flash_attention_single(
+        q, k, v, causal=True, window=window, bq=64, bkv=64, interpret=True
+    )
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap():
+    """gemma2-style tanh logit capping."""
+    q = jax.random.normal(jax.random.key(6), (128, 64)) * 4
+    k = jax.random.normal(jax.random.key(7), (128, 64)) * 4
+    v = jax.random.normal(jax.random.key(8), (128, 64))
+    out = flash_attention_single(
+        q, k, v, causal=True, softcap=50.0, bq=64, bkv=64, interpret=True
+    )
+    want = ref.attention_ref(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(jax.random.key(9), (128, 64), dtype)
+    k = jax.random.normal(jax.random.key(10), (128, 64), dtype)
+    v = jax.random.normal(jax.random.key(11), (128, 64), dtype)
+    out = flash_attention_single(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_gqa_batched():
+    """ops.flash_attention: GQA head replication + batch/head vmap."""
+    b, h, hkv, s, d = 2, 8, 2, 128, 32
+    q = jax.random.normal(jax.random.key(12), (b, h, s, d))
+    k = jax.random.normal(jax.random.key(13), (b, hkv, s, d))
+    v = jax.random.normal(jax.random.key(14), (b, hkv, s, d))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    assert out.shape == (b, h, s, d)
+    rep = h // hkv
+    for bi in range(b):
+        for hi in range(h):
+            want = ref.attention_ref(q[bi, hi], k[bi, hi // rep], v[bi, hi // rep])
+            np.testing.assert_allclose(
+                np.asarray(out[bi, hi]), np.asarray(want), rtol=2e-4, atol=2e-4
+            )

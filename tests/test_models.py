@@ -1,0 +1,210 @@
+"""Per-architecture smoke tests (reduced configs, CPU, single device).
+
+For each assigned architecture: instantiate a REDUCED config of the same
+family and run one forward/train step asserting output shapes + no NaNs,
+plus prefill/decode consistency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer as T
+
+_B, _S = 2, 64
+
+
+def _batch(cfg, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (_B, _S), 0, cfg.vocab),
+        "targets": jax.random.randint(ks[1], (_B, _S), 0, cfg.vocab),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = (
+            jax.random.normal(ks[2], (_B, cfg.n_patches, cfg.d_model)) * 0.02
+        )
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = (
+            jax.random.normal(ks[2], (_B, cfg.encoder.n_frames, cfg.d_model)) * 0.02
+        )
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_arch(request.param).reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    return request.param, cfg, params
+
+
+def test_forward_shapes_no_nans(arch_setup):
+    aid, cfg, params = arch_setup
+    batch = _batch(cfg)
+    x, aux = jax.jit(lambda p, b: T.forward(cfg, p, b["tokens"],
+                                            patch_embeds=b.get("patch_embeds"),
+                                            frame_embeds=b.get("frame_embeds")))(
+        params, batch)
+    assert x.shape == (_B, _S, cfg.d_model), aid
+    assert np.isfinite(np.asarray(x, np.float32)).all(), aid
+    assert np.isfinite(float(aux)), aid
+
+
+def test_train_step_loss_and_grads_finite(arch_setup):
+    aid, cfg, params = arch_setup
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.jit(
+        lambda p, b: jax.value_and_grad(
+            lambda q: T.loss_fn(cfg, q, b), has_aux=True
+        )(p)
+    )(params, batch)
+    assert np.isfinite(float(loss)), aid
+    # loss at init should be near log(vocab) (uniform prediction)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab)) < 1.5, aid
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves), aid
+    # at least 90% of leaves receive nonzero gradient signal
+    nz = sum(float(jnp.abs(l.astype(jnp.float32)).max()) > 0 for l in leaves)
+    assert nz >= 0.9 * len(leaves), (aid, nz, len(leaves))
+
+
+def test_prefill_decode_consistency(arch_setup):
+    """decode_step after prefill must match a full forward pass's logits."""
+    aid, cfg, params = arch_setup
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+
+    cache = T.init_cache(cfg, _B, _S + 8)
+    logits_p, cache = jax.jit(
+        lambda p, t, c: T.prefill(cfg, p, t, c,
+                                  patch_embeds=batch.get("patch_embeds"),
+                                  frame_embeds=batch.get("frame_embeds"))
+    )(params, toks, cache)
+    assert logits_p.shape == (_B, 1, cfg.vocab), aid
+
+    # oracle: full forward at the last position
+    x, _ = T.forward(cfg, params, toks,
+                     patch_embeds=batch.get("patch_embeds"),
+                     frame_embeds=batch.get("frame_embeds"))
+    from repro.models import layers as L
+
+    want = L.logits_matmul(cfg, params["embed"], L.apply_norm(
+        cfg, params["final_norm"], x[:, -1:]))
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2,
+        atol=2e-2,
+        err_msg=aid,
+    )
+
+    # one decode step keeps shapes/NaN-freeness
+    tok = jnp.argmax(logits_p[:, -1], -1)[:, None].astype(jnp.int32)
+    logits_d, _ = jax.jit(lambda p, t, c, pos: T.decode_step(cfg, p, t, c, pos))(
+        params, tok, cache, jnp.asarray(_S, jnp.int32))
+    assert logits_d.shape == (_B, 1, cfg.vocab), aid
+    assert np.isfinite(np.asarray(logits_d, np.float32)).all(), aid
+
+
+def test_full_configs_match_assignment():
+    """The full (published) configs carry the assigned hyperparameters."""
+    expect = {
+        "pixtral_12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+                            d_ff=14336, vocab=131072),
+        "llama4_maverick_400b_a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                          n_kv_heads=8, d_ff=8192, vocab=202048),
+        "deepseek_moe_16b": dict(n_layers=28, d_model=2048, n_heads=16,
+                                 n_kv_heads=16, d_ff=1408, vocab=102400),
+        "whisper_large_v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                                 n_kv_heads=20, d_ff=5120, vocab=51866),
+        "jamba_v0_1_52b": dict(n_layers=32, d_model=4096, n_heads=32,
+                               n_kv_heads=8, d_ff=14336, vocab=65536),
+        "gemma2_27b": dict(n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16,
+                           d_ff=36864, vocab=256000),
+        "qwen2_72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                          d_ff=29568, vocab=152064),
+        "olmo_1b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+                        d_ff=8192, vocab=50304),
+        "qwen1_5_4b": dict(n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20,
+                           d_ff=6912, vocab=151936),
+        "rwkv6_7b": dict(n_layers=32, d_model=4096, d_ff=14336, vocab=65536),
+    }
+    for aid, fields in expect.items():
+        cfg = get_arch(aid)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (aid, k, getattr(cfg, k), v)
+    # family features
+    assert get_arch("llama4_maverick_400b_a17b").moe.n_experts == 128
+    assert get_arch("llama4_maverick_400b_a17b").moe.top_k == 1
+    assert get_arch("deepseek_moe_16b").moe.n_experts == 64
+    assert get_arch("deepseek_moe_16b").moe.top_k == 6
+    assert get_arch("deepseek_moe_16b").moe.n_shared == 2
+    assert get_arch("jamba_v0_1_52b").moe.n_experts == 16
+    assert get_arch("jamba_v0_1_52b").mixer == "mamba_hybrid"
+    assert get_arch("gemma2_27b").attn_softcap is not None
+    assert get_arch("qwen2_72b").qkv_bias
+    assert get_arch("qwen1_5_4b").qkv_bias
+    assert get_arch("olmo_1b").norm == "nonparametric_ln"
+    assert get_arch("rwkv6_7b").mixer == "rwkv6"
+    assert get_arch("whisper_large_v3").encoder is not None
+    assert get_arch("pixtral_12b").frontend == "vision"
+
+
+def test_sub_quadratic_flags():
+    """long_500k applicability (DESIGN.md §Arch-applicability)."""
+    from repro.config import SHAPES, shape_applicable
+
+    runs = {aid: shape_applicable(get_arch(aid), SHAPES["long_500k"])[0]
+            for aid in ARCH_IDS}
+    assert runs == {
+        "pixtral_12b": False,
+        "llama4_maverick_400b_a17b": False,
+        "deepseek_moe_16b": False,
+        "whisper_large_v3": False,
+        "jamba_v0_1_52b": True,
+        "gemma2_27b": False,
+        "qwen2_72b": False,
+        "olmo_1b": False,
+        "qwen1_5_4b": False,
+        "rwkv6_7b": True,
+    }
+
+
+def test_layer_pattern_periods():
+    assert get_arch("gemma2_27b").layer_pattern_period == 2  # local/global
+    assert get_arch("jamba_v0_1_52b").layer_pattern_period == 8  # 1:7 + moe
+    assert get_arch("qwen2_72b").layer_pattern_period == 1
+    kinds = get_arch("jamba_v0_1_52b").layer_kinds()
+    assert sum(k["mixer"] == "attention" for k in kinds) == 1  # 1:7 ratio
+    assert sum(k["moe"] for k in kinds) == 4  # every other layer
+
+
+def test_training_reduces_loss():
+    """Three AdamW steps on the synthetic pipeline reduce the loss (the data
+    has learnable structure)."""
+    from repro.data.pipeline import DataConfig, SyntheticLMData
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_arch("olmo_1b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=5e-3, weight_decay=0.0)
+    state = adamw_init(opt, params)
+    data = SyntheticLMData(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        params, state, _ = adamw_update(opt, params, grads, state)
+        return params, state, loss
+
+    losses = []
+    for i in range(6):
+        b = {k: jnp.asarray(v) for k, v in data.batch_numpy(i).items()}
+        params, state, loss = step(params, state, b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses

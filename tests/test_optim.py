@@ -1,0 +1,95 @@
+"""Optimizer + gradient compression (error feedback) tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import global_norm
+from repro.optim.compress import compress_grads, init_compress_state
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, clip_norm=None)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(cfg, params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(cfg, params, grads, state)[:2]
+
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=None)
+    params = {"w": jnp.ones(4) * 10.0}
+    state = adamw_init(cfg, params)
+    zero_grads = {"w": jnp.zeros(4)}
+    p1, _, _ = adamw_update(cfg, params, zero_grads, state)
+    assert float(jnp.abs(p1["w"]).max()) < 10.0
+
+
+def test_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(cfg, params)
+    huge = {"w": jnp.full((3,), 1e6)}
+    _, _, metrics = adamw_update(cfg, params, huge, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(1e6 * np.sqrt(3), rel=1e-4)
+
+
+def test_moment_dtype_bf16():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    state = adamw_init(cfg, {"w": jnp.zeros((4, 4))})
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    _, s2, _ = adamw_update(cfg, {"w": jnp.zeros((4, 4))}, {"w": jnp.ones((4, 4))}, state)
+    assert s2["nu"]["w"].dtype == jnp.bfloat16
+
+
+def test_global_norm():
+    n = global_norm({"a": jnp.ones(4), "b": jnp.ones(12)})
+    assert float(n) == pytest.approx(4.0)
+
+
+def test_error_feedback_telescopes():
+    """Sum of quantized grads + final residual == sum of true grads (exact
+    memoryless error feedback)."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((64,))}
+    residual = init_compress_state(params)
+    true_sum = np.zeros(64, np.float64)
+    quant_sum = np.zeros(64, np.float64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(64) * 1e-3, jnp.float32)}
+        q, residual = compress_grads(g, residual)
+        assert q["w"].dtype == jnp.bfloat16
+        true_sum += np.asarray(g["w"], np.float64)
+        quant_sum += np.asarray(q["w"], np.float64)
+    final = quant_sum + np.asarray(residual["w"], np.float64)
+    np.testing.assert_allclose(final, true_sum, atol=1e-6)
+
+
+def test_compression_halves_payload():
+    g = {"w": jnp.zeros((1024,), jnp.float32)}
+    q, _ = compress_grads(g, init_compress_state(g))
+    assert q["w"].dtype.itemsize * 2 == g["w"].dtype.itemsize
+
+
+def test_warmup_cosine_schedule():
+    s = lambda x: jnp.asarray(x, jnp.int32)
+    assert float(linear_warmup_cosine(s(0), 10, 110)) == pytest.approx(0.0, abs=1e-6)
+    assert float(linear_warmup_cosine(s(5), 10, 110)) == pytest.approx(0.5)
+    assert float(linear_warmup_cosine(s(10), 10, 110)) == pytest.approx(1.0)
+    end = float(linear_warmup_cosine(s(110), 10, 110, final_frac=0.1))
+    assert end == pytest.approx(0.1, abs=1e-3)
+    # cosine is monotonically decreasing after warmup
+    vals = [float(linear_warmup_cosine(s(t), 10, 110)) for t in range(10, 111, 20)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))

@@ -1,0 +1,62 @@
+"""Serving engine: batched prefill/decode, greedy determinism, EOS."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+from repro.serving.engine import GenerationConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_arch("olmo_1b").reduced()
+    params = T.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_greedy_deterministic(engine_setup):
+    cfg, params = engine_setup
+    gen = GenerationConfig(max_new_tokens=6, temperature=0.0)
+    e1 = ServingEngine(cfg, params, batch=2, max_len=128, gen=gen)
+    e2 = ServingEngine(cfg, params, batch=2, max_len=128, gen=gen)
+    prompts = [np.asarray([5, 7, 11, 13]), np.asarray([2, 3, 4, 9])]
+    out1 = e1.generate(prompts)
+    out2 = e2.generate(prompts)
+    assert out1 == out2
+    assert all(len(o) == 6 for o in out1)
+
+
+def test_batch_slots_independent(engine_setup):
+    """A request's output must not depend on its co-batched neighbours."""
+    cfg, params = engine_setup
+    gen = GenerationConfig(max_new_tokens=4)
+    e = ServingEngine(cfg, params, batch=2, max_len=128, gen=gen)
+    p = np.asarray([5, 7, 11, 13])
+    solo = e.generate([p])[0]
+    pair = e.generate([p, np.asarray([8, 8, 8, 8])])[0]
+    assert solo == pair
+
+
+def test_eos_stops_early(engine_setup):
+    cfg, params = engine_setup
+    gen0 = GenerationConfig(max_new_tokens=8, temperature=0.0)
+    e0 = ServingEngine(cfg, params, batch=1, max_len=128, gen=gen0)
+    prompts = [np.asarray([1, 2, 3, 4])]
+    full = e0.generate(prompts)[0]
+    eos = full[1]  # pretend the 2nd generated token is EOS
+    gen1 = GenerationConfig(max_new_tokens=8, temperature=0.0, eos_token=eos)
+    e1 = ServingEngine(cfg, params, batch=1, max_len=128, gen=gen1)
+    out = e1.generate(prompts)[0]
+    assert out == full[:2]
+
+
+def test_temperature_sampling_runs(engine_setup):
+    cfg, params = engine_setup
+    gen = GenerationConfig(max_new_tokens=4, temperature=1.0, seed=1)
+    e = ServingEngine(cfg, params, batch=1, max_len=128, gen=gen)
+    out = e.generate([np.asarray([1, 2, 3])])[0]
+    assert len(out) == 4
+    assert all(0 <= t < cfg.vocab for t in out)

@@ -1,0 +1,75 @@
+"""Matrix-sign iteration — the paper's driving application (Eqs. (1)-(3))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bsm as B
+from repro.core.signiter import density_matrix, sign_iteration, trace
+
+
+def _sym_bsm(key, nb=4, bs=8, occupancy=0.6):
+    return B.random_bsm(key, nb=nb, bs=bs, occupancy=occupancy,
+                        pattern="banded", symmetric=True)
+
+
+def test_sign_converges_and_is_involutory():
+    m = _sym_bsm(jax.random.key(0))
+    s, stats = sign_iteration(m, max_iter=80, tol=1e-6)
+    assert stats.converged, stats
+    dense = np.asarray(s.to_dense(), np.float64)
+    # sign(A)^2 == I
+    np.testing.assert_allclose(dense @ dense, np.eye(dense.shape[0]), atol=5e-4)
+
+
+def test_sign_matches_eigendecomposition():
+    m = _sym_bsm(jax.random.key(1))
+    dense = np.asarray(m.to_dense(), np.float64)
+    w, v = np.linalg.eigh(dense)
+    want = v @ np.diag(np.sign(w)) @ v.T
+    s, stats = sign_iteration(m, max_iter=100, tol=1e-6)
+    assert stats.converged
+    np.testing.assert_allclose(np.asarray(s.to_dense(), np.float64), want, atol=1e-3)
+
+
+def test_density_matrix_counts_states():
+    """trace(P) == number of eigenvalues below mu (paper Eq. (1) observable)."""
+    m = _sym_bsm(jax.random.key(2), nb=4, bs=6)
+    dense = np.asarray(m.to_dense(), np.float64)
+    w = np.linalg.eigvalsh(dense)
+    mu = float(np.median(w)) + 1e-3
+    p, stats = density_matrix(m, mu, max_iter=100, tol=1e-6)
+    assert stats.converged
+    n_occ = int((w < mu).sum())
+    assert float(trace(p)) == pytest.approx(n_occ, abs=1e-2)
+    # P idempotent (a projector)
+    pd = np.asarray(p.to_dense(), np.float64)
+    np.testing.assert_allclose(pd @ pd, pd, atol=1e-3)
+
+
+def test_filtering_keeps_convergence():
+    """With on-the-fly + post filtering the iteration still converges and
+    the result stays close to the unfiltered one (the paper's premise that
+    filtered SpGEMM preserves the physics)."""
+    m = _sym_bsm(jax.random.key(3), nb=6, bs=6, occupancy=0.4)
+    s_exact, st_exact = sign_iteration(m, max_iter=100, tol=1e-6)
+    s_filt, st_filt = sign_iteration(
+        m, threshold=1e-7, filter_eps=1e-6, max_iter=100, tol=1e-6
+    )
+    assert st_exact.converged and st_filt.converged
+    err = np.abs(
+        np.asarray(s_exact.to_dense(), np.float64)
+        - np.asarray(s_filt.to_dense(), np.float64)
+    ).max()
+    assert err < 1e-3
+    # filtering keeps occupancy at or below the unfiltered trajectory end
+    assert st_filt.occupancy_trace[-1] <= 1.0
+
+
+def test_two_multiplications_per_iteration():
+    """Paper: 'two multiplications per iteration' (Eq. (3))."""
+    m = _sym_bsm(jax.random.key(4))
+    _, stats = sign_iteration(m, max_iter=7, tol=0.0)
+    assert stats.multiplications == 2 * stats.iterations

@@ -1,0 +1,163 @@
+"""Paper Algorithm 2 topology rules, buffer model, and schedule fidelity."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+# ---- L validity (paper section 3) -----------------------------------------
+
+
+@pytest.mark.parametrize(
+    "pr,pc,l,valid",
+    [
+        (4, 4, 1, True),
+        (4, 4, 4, True),  # square: L square int, sqrt(L) | P_R
+        (4, 4, 9, False),  # 3 does not divide 4
+        (6, 6, 4, True),
+        (6, 6, 9, True),
+        (4, 4, 2, False),  # 2 not a square
+        (2, 4, 2, True),  # non-square: L = mx/mn forced
+        (2, 4, 4, False),
+        (2, 8, 4, True),  # mx=8 <= mn^2=4? NO: 8 > 4 -> invalid
+        (3, 9, 3, True),  # 9 <= 9 ok, L = 3
+        (2, 6, 3, False),  # mx=6 > mn^2=4
+        (4, 2, 2, True),  # orientation-symmetric
+    ],
+)
+def test_validate_l(pr, pc, l, valid):
+    if (pr, pc, l) == (2, 8, 4):
+        valid = False  # mx > mn^2 violates the paper's constraint
+    assert T.validate_l(pr, pc, l) == valid
+
+
+def test_invalid_l_falls_back_to_1():
+    topo = T.make_topology(4, 4, 3)
+    assert topo.l == 1  # Algorithm 2: "set L = 1 if not valid"
+
+
+# ---- buffer counts (paper section 3) ---------------------------------------
+
+
+@pytest.mark.parametrize(
+    "pr,pc,l,expect",
+    [
+        (4, 4, 1, 6),  # OS1: 6 temporaries
+        (2, 4, 2, 2 + 6),  # non-square: L + 6
+        (4, 4, 4, 4 + 2 + 4),  # square: L + sqrt(L) + 4
+        (9, 9, 9, 9 + 3 + 4),
+    ],
+)
+def test_buffer_counts(pr, pc, l, expect):
+    assert T.make_topology(pr, pc, l).total_buffers == expect
+
+
+def test_nbuffers_a_square_rule():
+    # square topology: max(2, sqrt(L)) buffers for A
+    assert T.make_topology(4, 4, 4).nbuffers_a == 2
+    assert T.make_topology(9, 9, 9).nbuffers_a == 3
+    assert T.make_topology(4, 4, 1).nbuffers_a == 2
+
+
+# ---- tick counts (V for Cannon, V/L for OSL) --------------------------------
+
+
+@pytest.mark.parametrize("pr,pc,l", [(4, 4, 1), (4, 4, 4), (6, 6, 4), (2, 4, 2), (3, 9, 3)])
+def test_tick_count(pr, pc, l):
+    topo = T.make_topology(pr, pc, l)
+    v = T.lcm(pr, pc)
+    assert topo.v == v
+    assert topo.ticks == math.ceil(v / topo.l)
+
+
+def test_fetch_counts_sqrt_reduction():
+    """A/B panel fetches per process drop by sqrt(L) on square grids — the
+    panel-count form of Eq. (7): V -> V/sqrt(L)."""
+    base = T.make_topology(4, 4, 1)
+    deep = T.make_topology(4, 4, 4)
+    a1, b1 = base.fetch_counts(0)
+    a4, b4 = deep.fetch_counts(0)
+    assert (a1, b1) == (4, 4)  # V = 4 fetches each for A and B
+    assert (a4, b4) == (2, 2)  # V / sqrt(4) = 2
+    assert a4 * math.isqrt(deep.l) == a1
+    # 9x9 with L=9: V=9 -> 3
+    nine = T.make_topology(9, 9, 9)
+    a9, b9 = nine.fetch_counts(0)
+    assert (a9, b9) == (3, 3)
+
+
+def test_coords3d_partition():
+    """Every process gets a unique (i3D, j3D) tile; layers partition k."""
+    topo = T.make_topology(4, 4, 4)
+    seen = {}
+    for i in range(4):
+        for j in range(4):
+            i3, j3, l = T.coords3d(topo, i, j)
+            assert 0 <= l < topo.l
+            seen.setdefault(l, []).append((i, j))
+    assert len(seen) == topo.l
+    for l, procs in seen.items():
+        assert len(procs) == 16 // topo.l
+    # k-chunks partition [0, V)
+    ranges = [topo.chunk(l) for l in range(topo.l)]
+    flat = []
+    for lo, hi in ranges:
+        flat.extend(range(lo, hi))
+    assert sorted(flat) == list(range(topo.v))
+
+
+# ---- schedule fidelity: numpy simulator == A @ B ----------------------------
+
+
+@pytest.mark.parametrize(
+    "pr,pc,l",
+    [
+        (2, 2, 1),
+        (2, 2, 4),
+        (4, 4, 4),
+        (4, 4, 16),
+        (2, 4, 2),
+        (4, 2, 2),
+        (6, 2, 3),
+        (3, 9, 3),
+        (6, 6, 9),
+    ],
+)
+def test_simulate_algorithm2_exact(pr, pc, l):
+    rng = np.random.default_rng(pr * 100 + pc * 10 + l)
+    v = T.lcm(pr, pc)
+    n = math.lcm(v, pr, pc) * 2
+    a = rng.standard_normal((n, n))
+    b = rng.standard_normal((n, n))
+    c = T.simulate_algorithm2(a, b, pr, pc, l)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    pr=st.sampled_from([2, 3, 4]),
+    ratio=st.sampled_from([1, 2, 3]),
+    use_l=st.booleans(),
+)
+def test_property_schedule_all_grids(pr, ratio, use_l):
+    """Any (pr, pr*ratio) grid with its forced/compatible L multiplies right."""
+    pc = pr * ratio
+    if ratio > pr:  # mx <= mn^2 constraint
+        pc = pr
+    l = 1
+    if use_l:
+        l = (pc // pr) if pr != pc else 4
+        if not T.validate_l(pr, pc, l):
+            l = 1
+    rng = np.random.default_rng(0)
+    v = T.lcm(pr, pc)
+    n = math.lcm(v, pr, pc)
+    a = rng.standard_normal((n, n))
+    b = rng.standard_normal((n, n))
+    c = T.simulate_algorithm2(a, b, pr, pc, l)
+    np.testing.assert_allclose(c, a @ b, rtol=1e-9, atol=1e-9)
