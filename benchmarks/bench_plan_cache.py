@@ -1,0 +1,78 @@
+"""Plan-cache dispatch microbenchmark: repeated multiplies (the sign-
+iteration hot path) must not retrace or re-lower after the first call.
+
+Standalone (fake-device flag set before jax import), like measure_comm:
+
+    python benchmarks/bench_plan_cache.py
+
+Prints the first-call (compile) latency vs. the steady-state per-call
+latency of ``multiply`` on 8x8 blocks, plus the plan-layer cache counters:
+after warm-up the program cache takes only hits and the build counter stays
+flat — no re-lowering on the hot path.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=16 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import sys  # noqa: E402
+import time  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core import bsm as B  # noqa: E402
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.engine import multiply  # noqa: E402
+from repro.core.signiter import sign_iteration  # noqa: E402
+from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
+
+NB, BS = 8, 8
+REPS = 20
+
+
+def main() -> None:
+    mesh = make_spgemm_mesh(p=2, l=2)
+    a = B.random_bsm(jax.random.key(0), nb=NB, bs=BS, occupancy=0.5,
+                     pattern="decay", symmetric=True)
+    b = B.random_bsm(jax.random.key(1), nb=NB, bs=BS, occupancy=0.5,
+                     pattern="decay")
+
+    plan_mod.clear_cache()
+    t0 = time.perf_counter()
+    multiply(a, b, mesh, engine="twofive").blocks.block_until_ready()
+    first = time.perf_counter() - t0
+
+    times = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        multiply(a, b, mesh, engine="twofive").blocks.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    steady = sorted(times)[len(times) // 2]
+    stats = plan_mod.cache_stats()
+
+    print(f"bench/plan_cache/first_call_s,{first:.4f},")
+    print(f"bench/plan_cache/steady_call_s,{steady:.4f},median of {REPS}")
+    print(f"bench/plan_cache/speedup,{first / steady:.1f},first/steady")
+    print(f"bench/plan_cache/stats,{stats},")
+    assert stats["builds"] == 1 and stats["hits"] == REPS, stats
+    assert steady < first, (first, steady)
+
+    # the driving application: Newton-Schulz sign iteration (2 multiplies
+    # per sweep) reuses one cached program for its whole run
+    plan_mod.clear_cache()
+    t0 = time.perf_counter()
+    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=6,
+                           threshold=0.0, filter_eps=0.0)
+    total = time.perf_counter() - t0
+    stats = plan_mod.cache_stats()
+    print(f"bench/plan_cache/signiter_mults,{st.multiplications},"
+          f"{total:.3f}s total, cache {stats}")
+    assert stats["builds"] == 1, stats
+    assert stats["hits"] == st.multiplications - 1, stats
+
+
+if __name__ == "__main__":
+    main()

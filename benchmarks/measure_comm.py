@@ -5,10 +5,12 @@ Standalone (sets the fake-device flag before importing jax — run as
 as a subprocess so the main process keeps seeing one device).
 
 Measures, per engine x mesh, the per-device collective wire bytes of one
-block-sparse multiplication, and validates the paper's two claims on the
-real compiled programs:
-  * PTP (cannon) == OS1 (onesided) A/B volume     [Table 2]
-  * 2.5D volume drops vs L=1 and obeys Eq. (7)    [Fig. 3]
+block-sparse multiplication, and validates the paper's claims on the real
+compiled programs:
+  * PTP (cannon) == OS1 (onesided) A/B volume          [Table 2]
+  * 2.5D volume drops vs L=1 and obeys Eq. (7)         [Fig. 3]
+  * the plan-layer volume model predicts the measured bytes of every
+    engine, including non-square (P_R != P_C) grids    [plan_volume]
 """
 import os
 
@@ -21,6 +23,8 @@ import sys  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.commvolume import plan_volume  # noqa: E402
 from repro.core.engine import lower_multiply  # noqa: E402
 from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
 from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
@@ -34,26 +38,58 @@ def measure(mesh, engine, **kw) -> float:
     return rep.collective_wire_bytes
 
 
+def modeled(mesh, engine, c_layout="2d") -> float:
+    plan = plan_mod.plan_multiply(mesh, engine)
+    return plan_volume(plan, NB, BS, c_layout=c_layout).total
+
+
 def main() -> None:
     rows = []
     for p in (2, 4):
         mesh = make_spgemm_mesh(p=p)
         vols = {e: measure(mesh, e) for e in ("cannon", "onesided", "gather")}
         for e, v in vols.items():
-            rows.append((f"measured/{e}/p{p}/bytes_per_dev", round(v), ""))
+            m = modeled(mesh, e)
+            rows.append(
+                (f"measured/{e}/p{p}/bytes_per_dev", round(v),
+                 f"model {m:.0f}: x{v / m:.2f}")
+            )
+            assert 0.8 < v / m < 1.25, (e, p, v, m)
         assert 0.7 < vols["onesided"] / vols["cannon"] <= 1.01, vols
 
     base = measure(make_spgemm_mesh(p=4), "onesided")
     for l in (2, 4):
-        v = measure(make_spgemm_mesh(p=4, l=l), "twofive", c_layout="scatter")
+        mesh = make_spgemm_mesh(p=4, l=l)
+        v = measure(mesh, "twofive", c_layout="scatter")
+        m = modeled(mesh, "twofive", c_layout="scatter")
         rows.append(
             (
                 f"measured/twofive_L{l}/p4/bytes_per_dev",
                 round(v),
-                f"vs L=1 {base:.0f}: x{v / base:.2f}",
+                f"vs L=1 {base:.0f}: x{v / base:.2f}; model {m:.0f}",
             )
         )
         assert v < base, (l, v, base)
+        assert 0.8 < v / m < 1.25, (l, v, m)
+
+    # non-square grids: the pull engine's virtual depth (L = max/min)
+    for p_r, p_c in ((2, 4), (4, 2)):
+        mesh = make_spgemm_mesh(p_r=p_r, p_c=p_c)
+        v1 = measure(mesh, "onesided")
+        vl = measure(mesh, "twofive")
+        m1 = modeled(mesh, "onesided")
+        ml = modeled(mesh, "twofive")
+        rows.append(
+            (f"measured/onesided/p{p_r}x{p_c}/bytes_per_dev", round(v1),
+             f"model {m1:.0f}: x{v1 / m1:.2f}")
+        )
+        rows.append(
+            (f"measured/twofive_virtL/p{p_r}x{p_c}/bytes_per_dev", round(vl),
+             f"vs L=1 {v1:.0f}: x{vl / v1:.2f}; model {ml:.0f}")
+        )
+        assert 0.8 < v1 / m1 < 1.25, (p_r, p_c, v1, m1)
+        assert 0.8 < vl / ml < 1.25, (p_r, p_c, vl, ml)
+        assert vl < v1, (p_r, p_c, vl, v1)  # 2.5D wins on non-square too
 
     for name, val, note in rows:
         print(f"{name},{val},{note}")

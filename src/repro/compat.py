@@ -1,0 +1,49 @@
+"""jax version-compat shims.
+
+The codebase targets the current jax API (``jax.shard_map``, ``lax.pcast``);
+installed runtimes may be older (0.4.x ships ``shard_map`` only under
+``jax.experimental`` with a ``check_rep`` kwarg, and has no ``pcast`` at
+all).  Everything that builds a shard_map program imports from here instead
+of from jax directly:
+
+    from repro.compat import shard_map, pcast
+
+``pcast(x, axes, to="varying")`` only adjusts the varying-manifest
+annotation used by the new sharding-checker; on runtimes without it the
+identity is semantically exact (there is no checker to inform).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast"]
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5: the public API
+    shard_map = jax.shard_map
+else:  # jax 0.4.x: experimental API, check_rep instead of check_vma
+
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+        return _shard_map_04(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=check_vma,
+            **kw,
+        )
+
+
+if hasattr(jax.lax, "pcast"):
+    pcast = jax.lax.pcast
+elif hasattr(jax.lax, "pvary"):  # transitional name
+
+    def pcast(x, axes, *, to="varying"):
+        return jax.lax.pvary(x, axes) if to == "varying" else x
+
+else:  # no varying-manifest checker on this runtime -> identity
+
+    def pcast(x, axes, *, to="varying"):
+        return x

@@ -7,8 +7,7 @@ ShapeDtypeStruct stand-ins used by the dry-run (no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp

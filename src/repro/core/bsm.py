@@ -22,8 +22,6 @@ we report in the benchmarks.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,53 +1,35 @@
 """Cannon's algorithm (the paper's PTP baseline) and the streaming
-one-sided variant, as shard_map programs over a 2D device mesh.
+one-sided variant, as thin executors of a MultiplyPlan.
 
-PTP baseline (Algorithm 1):
+PTP baseline (Algorithm 1, ``ring_executor``):
   * pre-shift A row-wise by i, B column-wise by j  (``mpi_isend/irecv`` ->
-    ``lax.ppermute`` over the flattened (r, c) axis, which expresses the
-    per-row-different shift as one static permutation),
+    ``lax.ppermute`` over the flattened (r, c) axis; the per-row-different
+    shift is one static permutation from the plan),
   * V = p ticks of  C += A_comp . B_comp  followed by a ring shift of A
     (left along c) and B (up along r); the last tick does not shift
     (paper: ``if itick < nticks``).
 
 One-sided streaming variant (OS1 of the paper, ``onesided``):
-  * no pre-shift; at tick t every device *pulls* the A/B panels it needs
+  * no pre-shift; at every tick each device *pulls* the A/B panels it needs
     directly from their home location (``mpi_rget`` -> a statically known
     ppermute from the home buffer).  Receiver-indexed, sender never blocks —
     on TPU the schedule is static, which subsumes the paper's
-    "synchronization only on the receiver" property.
+    "synchronization only on the receiver" property.  This is the L = 1
+    case of the generalized pull executor in ``repro.core.twofive`` (the
+    paper's OSL with L = 1 == OS1), so it also runs on non-square grids.
 
 Both engines communicate V*(S_A+S_B) per device (PTP additionally pre-shifts)
 — exactly the PTP == OS1 volume equality of Table 2.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bsm import BlockSparseMatrix, block_norms, make_bsm
+from repro.compat import pcast, shard_map
+from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
-
-_AXES = ("r", "c")
-
-
-def _flat_perm(p: int, fn) -> list[tuple[int, int]]:
-    """Permutation over the flattened (r, c) axis: fn(i, j) -> (di, dj)."""
-    perm = []
-    for i in range(p):
-        for j in range(p):
-            di, dj = fn(i, j)
-            perm.append((i * p + j, di * p + dj))
-    return perm
-
-
-def _shift_pany(x, axis_name: str, mesh_axis_size: int, shift: int = 1):
-    """Ring-shift along one mesh axis: device k receives from (k+shift)%p."""
-    perm = [(src, (src - shift) % mesh_axis_size) for src in range(mesh_axis_size)]
-    return lax.ppermute(x, axis_name, perm)
 
 
 def _panel_mm(carry_c, a, b, threshold, backend):
@@ -60,45 +42,55 @@ def _panel_mm(carry_c, a, b, threshold, backend):
     return cb + dcb, cm | dcm
 
 
-def cannon_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
-    """Returns the shard_map'd multiply body for the PTP Cannon engine."""
-    p = mesh.shape["r"]
-    assert mesh.shape["c"] == p, "Cannon engine requires a square grid"
+def ring_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
+    """The PTP Cannon engine: plan's pre-shift + V ring hops."""
+    axes = plan.axes
+    ticks = plan.ticks
     blk = P("r", "c", None, None)
     m2 = P("r", "c")
 
     def body(ab, am, an, bb, bm, bn):
         # --- pre-shift (Algorithm 1): A_ij <- A_{i,(j+i)}, B_ij <- B_{(i+j),j}
-        pre_a = _flat_perm(p, lambda i, j: (i, (j - i) % p))
-        pre_b = _flat_perm(p, lambda i, j: ((i - j) % p, j))
-        ab, am, an = (lax.ppermute(x, _AXES, pre_a) for x in (ab, am, an))
-        bb, bm, bn = (lax.ppermute(x, _AXES, pre_b) for x in (bb, bm, bn))
+        ab, am, an = (
+            lax.ppermute(x, axes, list(plan.pre_a)) for x in (ab, am, an)
+        )
+        bb, bm, bn = (
+            lax.ppermute(x, axes, list(plan.pre_b)) for x in (bb, bm, bn)
+        )
 
         cb = jnp.zeros(
             (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
         )
         cm = jnp.zeros((ab.shape[0], bb.shape[1]), bool)
-        cb = lax.pcast(cb, _AXES, to="varying")
-        cm = lax.pcast(cm, _AXES, to="varying")
+        cb = pcast(cb, axes, to="varying")
+        cm = pcast(cm, axes, to="varying")
 
         def tick(carry, _):
             ab, am, an, bb, bm, bn, cb, cm = carry
-            cb, cm = _panel_mm((cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend)
-            ab, am, an = (_shift_pany(x, "c", p, 1) for x in (ab, am, an))
-            bb, bm, bn = (_shift_pany(x, "r", p, 1) for x in (bb, bm, bn))
+            cb, cm = _panel_mm(
+                (cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend
+            )
+            ab, am, an = (
+                lax.ppermute(x, "c", list(plan.shift_a)) for x in (ab, am, an)
+            )
+            bb, bm, bn = (
+                lax.ppermute(x, "r", list(plan.shift_b)) for x in (bb, bm, bn)
+            )
             return (ab, am, an, bb, bm, bn, cb, cm), None
 
-        if p > 1:
+        if ticks > 1:
             (ab, am, an, bb, bm, bn, cb, cm), _ = lax.scan(
-                tick, (ab, am, an, bb, bm, bn, cb, cm), None, length=p - 1
+                tick, (ab, am, an, bb, bm, bn, cb, cm), None, length=ticks - 1
             )
         # final tick: compute only, no trailing shift (paper's itick==nticks)
-        cb, cm = _panel_mm((cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend)
+        cb, cm = _panel_mm(
+            (cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend
+        )
         return cb, cm
 
-    return jax.shard_map(
+    return shard_map(
         body,
-        mesh=mesh,
+        mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are
         # oracle-tested instead (tests/_dist.py::check_engines)
@@ -108,43 +100,23 @@ def cannon_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
     )
 
 
+def cannon_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
+    """Back-compat: plan + executor for the PTP Cannon engine."""
+    from repro.core import plan as plan_mod
+
+    p = plan_mod.plan_multiply(mesh, "cannon")
+    return plan_mod.build_program(
+        p, threshold=threshold, backend=backend, c_layout="2d"
+    )
+
+
 def onesided_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
-    """OS1: pull-from-home streaming engine (no pre-shift).
+    """Back-compat: plan + executor for the OS1 pull engine."""
+    from repro.core import plan as plan_mod
 
-    Tick t: device (i,j) pulls A_{i,k} and B_{k,j} with k=(i+j+t)%p straight
-    from the home buffers.  Each pull is one static ppermute (bijection),
-    unrolled over the V ticks so every permutation is static — this is the
-    RMA access pattern of Algorithm 2 with L=1.
-    """
-    p = mesh.shape["r"]
-    assert mesh.shape["c"] == p, "onesided engine requires a square grid"
-    blk = P("r", "c", None, None)
-    m2 = P("r", "c")
-
-    def body(ab, am, an, bb, bm, bn):
-        cb = jnp.zeros(
-            (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
-        )
-        cm = jnp.zeros((ab.shape[0], bb.shape[1]), bool)
-        for t in range(p):
-            # A: home (i, k) -> (i, j); bijection in j for fixed t
-            perm_a = _flat_perm(p, lambda i, k: (i, (k - i - t) % p))
-            # B: home (k, j) -> (i, j)
-            perm_b = _flat_perm(p, lambda k, j: ((k - j - t) % p, j))
-            at, amt, ant = (lax.ppermute(x, _AXES, perm_a) for x in (ab, am, an))
-            bt, bmt, bnt = (lax.ppermute(x, _AXES, perm_b) for x in (bb, bm, bn))
-            cb, cm = _panel_mm((cb, cm), (at, amt, ant), (bt, bmt, bnt), threshold, backend)
-        return cb, cm
-
-    return jax.shard_map(
-        body,
-        mesh=mesh,
-        # check_vma=False: the pallas backend's pallas_call builds plain
-        # ShapeDtypeStructs (no vma annotation); engine outputs are
-        # oracle-tested instead (tests/_dist.py::check_engines)
-        check_vma=False,
-        in_specs=(blk, m2, m2, blk, m2, m2),
-        out_specs=(blk, m2),
+    p = plan_mod.plan_multiply(mesh, "onesided")
+    return plan_mod.build_program(
+        p, threshold=threshold, backend=backend, c_layout="2d"
     )
 
 
@@ -157,9 +129,9 @@ def multiply_2d(
     threshold: float = 0.0,
     backend: str = "jnp",
 ) -> BlockSparseMatrix:
-    """Distributed C = A . B on a 2D (r, c) mesh."""
-    fn = {"cannon": cannon_shardmap, "onesided": onesided_shardmap}[engine](
-        mesh, threshold=threshold, backend=backend
+    """Distributed C = A . B on a 2D (r, c) mesh (plan-cached program)."""
+    from repro.core import plan as plan_mod
+
+    return plan_mod.execute(
+        a, b, mesh, engine, threshold=threshold, backend=backend
     )
-    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
-    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))

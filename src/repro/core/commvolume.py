@@ -79,6 +79,67 @@ def scaling_per_process(p: int, l: int, n_elems: float) -> float:
     return 2.0 * n_elems / math.sqrt(p * l)
 
 
+def _panel_bytes(rows: int, cols: int, bs: int, itemsize: float) -> float:
+    """Wire bytes of one (rows x cols)-block panel *triple* as the engines
+    move it: blocks (itemsize), occupation mask (1 byte), norms (4 bytes)."""
+    blocks = rows * cols * bs * bs * itemsize
+    mask = rows * cols * 1.0
+    norms = rows * cols * 4.0
+    return blocks + mask + norms
+
+
+def plan_volume(
+    plan, nb: int, bs: int, *, itemsize: float = 4.0, c_layout: str = "2d"
+) -> VolumeReport:
+    """Predicted per-device collective wire bytes of one multiplication
+    executed from ``plan`` — the paper's volume model evaluated on the
+    *actual compiled schedule*, valid for non-square grids too.
+
+    Mirrors the accounting conventions of ``roofline.hlo_cost.analyze_hlo``
+    so ``benchmarks/measure_comm.py`` can compare measured vs. modeled:
+    collective-permute costs its full payload; all-gather (n-1)/n of the
+    gathered output; all-reduce 2(n-1)/n; reduce-scatter (n-1) x output.
+    """
+    topo = plan.topo
+    p_r, p_c, depth = plan.p_r, plan.p_c, topo.l
+    nr, nc = nb // p_r, nb // p_c
+
+    if plan.kind == "pull":
+        wa = nc // plan.ca  # A subpanel block-cols (= nb / V)
+        wb = nr // plan.cb  # B subpanel block-rows
+        ab = 0.0
+        for g in range(plan.ticks):
+            ab += len(plan.a_pulls[g]) * _panel_bytes(nr, wa, bs, itemsize)
+            ab += len(plan.b_pulls[g]) * _panel_bytes(wb, nc, bs, itemsize)
+        # L-1 partial-C sends: blocks + mask (no norms before reduction)
+        c = len(plan.c_rounds) * (nr * nc * bs * bs * itemsize + nr * nc)
+        name = f"pull-os{depth}"
+    elif plan.kind == "ring":
+        hop = _panel_bytes(nr, nc, bs, itemsize)
+        ab = 2.0 * hop + (plan.ticks - 1) * 2.0 * hop  # pre-shift + hops
+        c = 0.0
+        name = "ring-ptp"
+    elif plan.kind == "gather":
+        ga = _panel_bytes(nr, nb, bs, itemsize) * (p_c - 1) / p_c
+        gb = _panel_bytes(nb, nc, bs, itemsize) * (p_r - 1) / p_r
+        ab, c = ga + gb, 0.0
+        name = "gather"
+    elif plan.kind == "stacked":
+        hop = _panel_bytes(nr, nc, bs, itemsize)
+        ab = 2.0 * hop + (plan.ticks - 1) * 2.0 * hop
+        cb = nr * nc * bs * bs * itemsize + nr * nc * 4.0  # blocks + i32 mask
+        if c_layout == "2d":
+            c = 2.0 * cb * (depth - 1) / depth  # all-reduce over l
+        else:
+            c = (depth - 1) * cb / depth  # reduce-scatter: (n-1) x output
+        name = f"stacked-l{depth}"
+    else:
+        raise ValueError(plan.kind)
+    return VolumeReport(
+        name, p_r, p_c, depth, plan.ticks, ab, c, ab + c
+    )
+
+
 def mesh25d_volume(
     s: int, l: int, s_a: float, s_b: float, s_c: float
 ) -> VolumeReport:

@@ -3,9 +3,18 @@
 Engines (paper terminology in parentheses):
 
   cannon    — 2D Cannon, ring point-to-point shifts (PTP, Algorithm 1)
-  onesided  — 2D pull-from-home streaming, no pre-shift (OS1, Alg. 2, L=1)
+  onesided  — 2D pull-from-home streaming, no pre-shift (OS1, Alg. 2, L=1);
+              any (r, c) grid
   gather    — 2D pull-from-home via fused all-gather (TPU-native OS1)
-  twofive   — 2.5D with depth axis L (OSL, Algorithm 2)
+  twofive   — 2.5D with depth axis L (OSL, Algorithm 2): on an (l, r, c)
+              mesh the stacked formulation (uneven L supported); on a 2D
+              (r, c) mesh the pull formulation with a *virtual* depth axis,
+              including non-square grids (L = mx/mn forced, paper §3)
+
+Every engine executes a compiled :class:`repro.core.plan.MultiplyPlan`; the
+jitted programs are LRU-cached (``repro.core.plan.get_compiled``) so the
+hot paths — sign iteration, serving, benchmark loops — never retrace or
+re-lower after the first multiply.
 
 A single-device reference (`multiply_reference`) implements the identical
 filtered semantics without any mesh — the oracle for every engine test.
@@ -17,11 +26,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.core.bsm import BlockSparseMatrix, block_norms, filter_bsm
-from repro.core.cannon import multiply_2d
-from repro.core.gather import multiply_gather
 from repro.core.local_mm import local_filtered_mm
-from repro.core.twofive import multiply_25d
 
 ENGINES = ("cannon", "onesided", "gather", "twofive")
 
@@ -57,6 +64,7 @@ def multiply(
     filter_eps: float | None = None,
     backend: str = "jnp",
     c_layout: str = "2d",
+    l: int | None = None,
 ) -> BlockSparseMatrix:
     """Distributed filtered C = A . B.
 
@@ -64,21 +72,18 @@ def multiply(
                  norm(A_ik) * norm(B_kj) <= threshold.
     filter_eps — post-multiplication filter: drop result blocks with
                  norm <= filter_eps (defaults to ``threshold``).
+    l          — depth override for the 2D-mesh ``twofive`` pull engine
+                 (square grids; non-square grids force L = mx/mn).
     """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
     if mesh is None:
         c = multiply_reference(a, b, threshold=threshold, backend=backend)
-    elif engine in ("cannon", "onesided"):
-        c = multiply_2d(
-            a, b, mesh, engine=engine, threshold=threshold, backend=backend
-        )
-    elif engine == "gather":
-        c = multiply_gather(a, b, mesh, threshold=threshold, backend=backend)
-    elif engine == "twofive":
-        c = multiply_25d(
-            a, b, mesh, threshold=threshold, backend=backend, c_layout=c_layout
-        )
     else:
-        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+        c = plan_mod.execute(
+            a, b, mesh, engine,
+            threshold=threshold, backend=backend, c_layout=c_layout, l=l,
+        )
     eps = threshold if filter_eps is None else filter_eps
     if eps > 0.0:
         c = filter_bsm(c, eps)
@@ -95,28 +100,23 @@ def lower_multiply(
     backend: str = "jnp",
     dtype=jnp.float32,
     c_layout: str = "2d",
+    l: int | None = None,
 ):
     """Lower (without executing) one multiplication for HLO inspection —
-    the source of the measured collective bytes in the benchmarks."""
-    from repro.core import cannon as _cannon
-    from repro.core import gather as _gather
-    from repro.core import twofive as _twofive
-
-    if engine in ("cannon", "onesided"):
-        fn = {
-            "cannon": _cannon.cannon_shardmap,
-            "onesided": _cannon.onesided_shardmap,
-        }[engine](mesh, threshold=threshold, backend=backend)
-    elif engine == "gather":
-        fn = _gather.gather_shardmap(mesh, threshold=threshold, backend=backend)
-    elif engine == "twofive":
-        fn = _twofive.twofive_shardmap(
-            mesh, threshold=threshold, backend=backend, c_layout=c_layout
-        )
-    else:
-        raise ValueError(engine)
-
+    the source of the measured collective bytes in the benchmarks.  Shares
+    the plan-layer program cache with ``multiply``."""
+    fn = plan_mod.get_compiled(
+        mesh,
+        engine,
+        nb,
+        bs,
+        dtype,
+        threshold=threshold,
+        backend=backend,
+        c_layout=c_layout,
+        l=l,
+    )
     blk = jax.ShapeDtypeStruct((nb, nb, bs, bs), dtype)
     m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)
     m2f = jax.ShapeDtypeStruct((nb, nb), jnp.float32)
-    return jax.jit(fn).lower(blk, m2b, m2f, blk, m2b, m2f)
+    return fn.lower(blk, m2b, m2f, blk, m2b, m2f)

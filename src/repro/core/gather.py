@@ -14,19 +14,22 @@ double buffers — the TPU trade (VMEM/HBM is provisioned for this; the
 kernel consumes the gathered panels tile by tile).
 
 Works for any (r, c) grid, including the paper's non-square topologies.
+Like the other engines it is a thin executor of a MultiplyPlan (the plan
+carries no permutation tables here — the schedule is one fused collective —
+but routing through the plan layer shares the program cache and the
+predicted-volume model).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bsm import BlockSparseMatrix, block_norms
+from repro.compat import shard_map
+from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
 
-def gather_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
+def gather_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
     blk = P("r", "c", None, None)
     m2 = P("r", "c")
 
@@ -42,15 +45,25 @@ def gather_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
             ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
         )
 
-    return jax.shard_map(
+    return shard_map(
         body,
-        mesh=mesh,
+        mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are
         # oracle-tested instead (tests/_dist.py::check_engines)
         check_vma=False,
         in_specs=(blk, m2, m2, blk, m2, m2),
         out_specs=(blk, m2),
+    )
+
+
+def gather_shardmap(mesh, *, threshold: float = 0.0, backend: str = "jnp"):
+    """Back-compat: plan + executor for the all-gather engine."""
+    from repro.core import plan as plan_mod
+
+    p = plan_mod.plan_multiply(mesh, "gather")
+    return plan_mod.build_program(
+        p, threshold=threshold, backend=backend, c_layout="2d"
     )
 
 
@@ -62,6 +75,8 @@ def multiply_gather(
     threshold: float = 0.0,
     backend: str = "jnp",
 ) -> BlockSparseMatrix:
-    fn = gather_shardmap(mesh, threshold=threshold, backend=backend)
-    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
-    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+    from repro.core import plan as plan_mod
+
+    return plan_mod.execute(
+        a, b, mesh, "gather", threshold=threshold, backend=backend
+    )

@@ -1,0 +1,461 @@
+"""Topology-driven multiply plans: one scheduler for all four engines.
+
+A ``MultiplyPlan`` compiles a :class:`repro.core.topology.Topology` (the
+paper's Algorithm 2 coordinates) into the *static* communication schedule a
+shard_map engine executes: pre-shift permutations, per-tick ring shifts or
+one-sided pulls, per-layer k-chunks, and the partial-C reduction.  The four
+engines (``cannon``, ``onesided``, ``gather``, ``twofive``) are thin
+executors of a plan — none of them derives coordinates inline any more.
+
+Plan kinds
+----------
+
+``ring``     Cannon / PTP (Algorithm 1): pre-shift + V ring shifts.  Square
+             2D meshes only (the paper's baseline).
+``pull``     Algorithm 2 run directly on the 2D (r, c) process grid with the
+             depth axis *virtual* — the paper's actual topology, including
+             non-square grids (P_R != P_C, L = mx/mn forced) and L = 1
+             (= OS1).  Every one-sided ``rget`` of the paper becomes a
+             static partial permutation: per tick, per A/B panel slot, per
+             home-shard subpanel, the (home -> requester) pairs derived from
+             ``group_products``; multicasts are split greedily into rounds
+             so each round is a valid (partial) permutation.
+``stacked``  The TPU mesh formulation on an (l, r, c) mesh: A/B replicated
+             over ``l``, layer l runs a Cannon schedule over its k-chunk
+             ``Topology.chunk(l)``, partial C reduced over ``l``.  Uneven
+             chunks (L does not divide the grid side) are supported via
+             per-layer tick masking.
+``gather``   Fused all-gather pull-from-home (TPU-native OS1), any grid.
+
+Compiled-program cache
+----------------------
+
+``get_compiled`` returns a jitted shard_map program, LRU-cached on
+``(mesh, engine, nb, bs, dtype, threshold, backend, c_layout, l)`` so the
+hot paths (sign iteration, serving, benchmark loops) never retrace or
+re-lower after the first call.  ``cache_stats()`` exposes hit/miss/build
+counters for tests and benchmarks.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax.numpy as jnp
+
+from repro.core.topology import (
+    Topology,
+    coords3d,
+    group_k,
+    make_topology,
+)
+
+Perm = tuple[tuple[int, int], ...]
+
+
+@dataclass(frozen=True)
+class PullRound:
+    """One partial permutation of one home-shard subpanel.
+
+    ``slot``  — which of the device's L_R A panels / L_C B panels this
+                round feeds (the i3 / j3 coordinate of ``group_products``).
+    ``q``     — subpanel index within the home shard (virtual index modulo
+                the shard's subpanel count); selects a static slice.
+    ``pairs`` — (home, requester) flattened-mesh index pairs; a valid
+                partial permutation (unique sources, unique destinations).
+    """
+
+    slot: int
+    q: int
+    pairs: Perm
+
+
+@dataclass(frozen=True)
+class MultiplyPlan:
+    """Static communication schedule for one (mesh, engine) pair."""
+
+    engine: str
+    kind: str  # "ring" | "pull" | "stacked" | "gather"
+    mesh: object  # the jax Mesh the schedule was compiled for
+    axes: tuple[str, ...]  # mesh axes of the flattened permutation domain
+    p_r: int
+    p_c: int
+    topo: Topology
+    ticks: int
+    # --- ring (cannon) ---
+    pre_a: Perm = ()
+    pre_b: Perm = ()
+    shift_a: Perm = ()  # one ring hop of A (along c)
+    shift_b: Perm = ()  # one ring hop of B (along r)
+    # --- pull (Algorithm 2 on the 2D grid) ---
+    a_pulls: tuple[tuple[PullRound, ...], ...] = ()  # [tick][round]
+    b_pulls: tuple[tuple[PullRound, ...], ...] = ()
+    c_rounds: tuple[Perm, ...] = ()  # L-1 partial-C sends
+    ca: int = 1  # A subpanels per home shard (= V / P_C)
+    cb: int = 1  # B subpanels per home shard (= V / P_R)
+    # --- stacked ((l, r, c) mesh) ---
+    layer_groups: tuple[int, ...] = ()  # ticks of each layer
+    chunk_starts: tuple[int, ...] = ()  # k-chunk offset of each layer
+
+    @property
+    def l(self) -> int:
+        return self.topo.l
+
+    def validate_blocks(self, nb_r: int, nb_c: int) -> None:
+        """Check a (nb_r, nb_c) block grid divides this plan's topology."""
+        v = self.topo.v
+        if nb_r % self.p_r or nb_c % self.p_c:
+            raise ValueError(
+                f"block grid {nb_r}x{nb_c} does not divide the "
+                f"{self.p_r}x{self.p_c} process grid"
+            )
+        if self.kind == "pull" and (nb_r % v or nb_c % v):
+            raise ValueError(
+                f"block grid {nb_r}x{nb_c} does not divide the virtual "
+                f"grid V={v} (required for one-sided panel pulls)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# schedule compilation
+# ---------------------------------------------------------------------------
+
+
+def _ring_perm(p: int, shift: int = 1) -> Perm:
+    """Receive from (k + shift) % p: the Cannon ring hop."""
+    return tuple((src, (src - shift) % p) for src in range(p))
+
+
+def _partition_rounds(pairs: list[tuple[int, int]]) -> list[Perm]:
+    """Split (src, dst) pairs into valid partial permutations.
+
+    A source that must multicast (same panel requested by several devices in
+    one tick — the sqrt(L) amortization of the paper) is serialized over
+    rounds; each round has unique sources and unique destinations.
+    """
+    rounds: list[list[tuple[int, int]]] = []
+    used: list[tuple[set[int], set[int]]] = []
+    for src, dst in pairs:
+        for r, (srcs, dsts) in zip(rounds, used):
+            if src not in srcs and dst not in dsts:
+                r.append((src, dst))
+                srcs.add(src)
+                dsts.add(dst)
+                break
+        else:
+            rounds.append([(src, dst)])
+            used.append(({src}, {dst}))
+    return [tuple(r) for r in rounds]
+
+
+def _pull_schedule(topo: Topology):
+    """Per-tick pull rounds + C-reduction rounds from Algorithm 2.
+
+    Drives everything from the topology's stated invariants: per tick group
+    ``g`` a process at (i, j) pulls the L_R A panels (m, k) and L_C B panels
+    (k, n) of ``group_products`` from their *home* 2D positions, where the
+    home of virtual A panel (m, k) is process (m, k // ca) subpanel k % ca
+    (ca = V / P_C) and of B panel (k, n) is (k // cb, n) subpanel k % cb.
+    """
+    p_r, p_c, v, s = topo.p_r, topo.p_c, topo.v, topo.side3d
+    ca, cb = v // p_c, v // p_r
+
+    def flat(i: int, j: int) -> int:
+        return i * p_c + j
+
+    a_ticks: list[tuple[PullRound, ...]] = []
+    b_ticks: list[tuple[PullRound, ...]] = []
+    for g in range(topo.ticks):
+        a_classes: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        b_classes: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        for i in range(p_r):
+            for j in range(p_c):
+                _, _, lay = coords3d(topo, i, j)
+                if g >= topo.layer_groups(lay):
+                    continue  # this layer's k-chunk is exhausted
+                k = group_k(topo, i, j, g)
+                im, jn = i % s, j % s
+                for i3 in range(topo.l_r):
+                    m = i3 * s + im
+                    a_classes.setdefault((i3, k % ca), []).append(
+                        (flat(m, k // ca), flat(i, j))
+                    )
+                for j3 in range(topo.l_c):
+                    n = j3 * s + jn
+                    b_classes.setdefault((j3, k % cb), []).append(
+                        (flat(k // cb, n), flat(i, j))
+                    )
+        a_ticks.append(
+            tuple(
+                PullRound(slot=slot, q=q, pairs=perm)
+                for (slot, q), pairs in sorted(a_classes.items())
+                for perm in _partition_rounds(pairs)
+            )
+        )
+        b_ticks.append(
+            tuple(
+                PullRound(slot=slot, q=q, pairs=perm)
+                for (slot, q), pairs in sorted(b_classes.items())
+                for perm in _partition_rounds(pairs)
+            )
+        )
+
+    # L-1 partial-C sends: round d moves the partial for the panel d steps
+    # along the flattened layer ring to its home (a full permutation).
+    c_rounds: list[Perm] = []
+    for d in range(1, topo.l):
+        pairs = []
+        for i in range(p_r):
+            for j in range(p_c):
+                _, _, lay = coords3d(topo, i, j)
+                t = (lay + d) % topo.l
+                ti3, tj3 = t % topo.l_r, t // topo.l_r
+                pairs.append(
+                    (flat(i, j), flat(ti3 * s + i % s, tj3 * s + j % s))
+                )
+        c_rounds.append(tuple(pairs))
+    return tuple(a_ticks), tuple(b_ticks), tuple(c_rounds), ca, cb
+
+
+def _resolve_l(p_r: int, p_c: int, l: int | None) -> int:
+    """Default depth: forced mx/mn on non-square grids (the paper's rule),
+    1 on square grids unless the caller asks for more."""
+    if l is not None:
+        return l
+    if p_r != p_c:
+        mn, mx = min(p_r, p_c), max(p_r, p_c)
+        if mx % mn == 0 and mx <= mn * mn:
+            return mx // mn
+    return 1
+
+
+@lru_cache(maxsize=256)
+def plan_multiply(mesh, engine: str, l: int | None = None) -> MultiplyPlan:
+    """Compile the static schedule for (mesh, engine).
+
+    2D meshes must carry ("r", "c") axes; the 2.5D stacked formulation uses
+    an ("l", "r", "c") mesh.  ``l`` overrides the depth for pull plans on
+    square grids (non-square grids force L = mx/mn as in the paper).
+    """
+    axis_names = tuple(mesh.axis_names)
+    if engine not in ("cannon", "onesided", "gather", "twofive"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if l is not None and engine in ("cannon", "onesided", "gather"):
+        raise ValueError(
+            f"engine {engine!r} has no depth parameter (L is fixed at 1); "
+            "use engine='twofive' for L > 1"
+        )
+
+    if "l" in axis_names:
+        if engine != "twofive":
+            raise ValueError(f"engine {engine!r} does not use an 'l' mesh axis")
+        l_size = mesh.shape["l"]
+        if l is not None and l != l_size:
+            raise ValueError(
+                f"l={l} conflicts with the mesh's 'l' axis of size {l_size}; "
+                "the stacked engine takes its depth from the mesh"
+            )
+        p = mesh.shape["r"]
+        if mesh.shape["c"] != p:
+            raise ValueError(
+                "stacked 2.5D requires square layer grids; use a 2D "
+                "(r, c) mesh for non-square topologies (virtual depth)"
+            )
+        # the mesh formulation's chunk structure: V = p, depth = l_size.
+        topo = Topology(
+            p_r=p, p_c=p, l=l_size, l_r=1, l_c=l_size, side3d=p,
+            v=p, nbuffers_a=2, nbuffers_b=2,
+        )
+        groups = tuple(topo.layer_groups(li) for li in range(l_size))
+        starts = tuple(topo.chunk(li)[0] for li in range(l_size))
+        ticks = max(groups)
+        pre_a = tuple(
+            (
+                (li * p + i) * p + j,
+                (li * p + i) * p + (j - i - starts[li]) % p,
+            )
+            for li in range(l_size)
+            for i in range(p)
+            for j in range(p)
+        )
+        pre_b = tuple(
+            (
+                (li * p + i) * p + j,
+                (li * p + (i - j - starts[li]) % p) * p + j,
+            )
+            for li in range(l_size)
+            for i in range(p)
+            for j in range(p)
+        )
+        return MultiplyPlan(
+            engine=engine, kind="stacked", mesh=mesh, axes=("l", "r", "c"),
+            p_r=p, p_c=p, topo=topo, ticks=ticks,
+            pre_a=pre_a, pre_b=pre_b,
+            shift_a=_ring_perm(p), shift_b=_ring_perm(p),
+            layer_groups=groups, chunk_starts=starts,
+        )
+
+    p_r, p_c = mesh.shape["r"], mesh.shape["c"]
+    if engine == "gather":
+        topo = make_topology(p_r, p_c, 1)
+        return MultiplyPlan(
+            engine=engine, kind="gather", mesh=mesh, axes=("r", "c"),
+            p_r=p_r, p_c=p_c, topo=topo, ticks=1,
+        )
+
+    if engine == "cannon":
+        if p_r != p_c:
+            raise ValueError("Cannon engine requires a square grid")
+        p = p_r
+        topo = make_topology(p, p, 1)
+        pre_a = tuple(
+            (i * p + j, i * p + (j - i) % p) for i in range(p) for j in range(p)
+        )
+        pre_b = tuple(
+            (i * p + j, ((i - j) % p) * p + j) for i in range(p) for j in range(p)
+        )
+        return MultiplyPlan(
+            engine=engine, kind="ring", mesh=mesh, axes=("r", "c"),
+            p_r=p, p_c=p, topo=topo, ticks=topo.v,
+            pre_a=pre_a, pre_b=pre_b,
+            shift_a=_ring_perm(p), shift_b=_ring_perm(p),
+        )
+
+    # onesided / twofive on the plain 2D grid: the pull formulation.
+    depth = 1 if engine == "onesided" else _resolve_l(p_r, p_c, l)
+    topo = make_topology(p_r, p_c, depth)
+    if l is not None and engine == "twofive" and topo.l != l:
+        raise ValueError(
+            f"L={l} is invalid for a {p_r}x{p_c} grid (paper rule); "
+            f"topology resolved L={topo.l}"
+        )
+    a_pulls, b_pulls, c_rounds, ca, cb = _pull_schedule(topo)
+    return MultiplyPlan(
+        engine=engine, kind="pull", mesh=mesh, axes=("r", "c"),
+        p_r=p_r, p_c=p_c, topo=topo, ticks=topo.ticks,
+        a_pulls=a_pulls, b_pulls=b_pulls, c_rounds=c_rounds, ca=ca, cb=cb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    builds: int = 0  # shard_map program constructions (lower/trace roots)
+    evictions: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "builds": self.builds,
+            "evictions": self.evictions,
+        }
+
+
+_CACHE_MAXSIZE = 128
+_program_cache: OrderedDict[tuple, object] = OrderedDict()
+_stats = CacheStats()
+
+
+def cache_stats() -> dict:
+    """Program-cache counters (hits / misses / builds / evictions)."""
+    return _stats.as_dict()
+
+
+def clear_cache() -> None:
+    _program_cache.clear()
+    _stats.hits = _stats.misses = _stats.builds = _stats.evictions = 0
+
+
+def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
+                  c_layout: str):
+    """Construct (untraced) the shard_map executor for a plan."""
+    if c_layout != "2d" and plan.kind != "stacked":
+        raise ValueError(
+            f"c_layout={c_layout!r} needs the stacked (l, r, c) mesh; "
+            f"the {plan.kind!r} plan keeps C in the 2D (r, c) layout"
+        )
+    _stats.builds += 1
+    if plan.kind == "ring":
+        from repro.core.cannon import ring_executor
+
+        return ring_executor(plan, threshold=threshold, backend=backend)
+    if plan.kind == "pull":
+        from repro.core.twofive import pull_executor
+
+        return pull_executor(plan, threshold=threshold, backend=backend)
+    if plan.kind == "stacked":
+        from repro.core.twofive import stacked_executor
+
+        return stacked_executor(
+            plan, threshold=threshold, backend=backend, c_layout=c_layout
+        )
+    if plan.kind == "gather":
+        from repro.core.gather import gather_executor
+
+        return gather_executor(plan, threshold=threshold, backend=backend)
+    raise ValueError(plan.kind)
+
+
+def get_compiled(
+    mesh,
+    engine: str,
+    nb_r: int,
+    bs: int,
+    dtype,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    c_layout: str = "2d",
+    l: int | None = None,
+):
+    """Jitted multiply program for the key, LRU-cached.
+
+    Repeated multiplies with the same key return the *same* jitted callable,
+    so jax's compilation cache is hit and no retracing/relowering happens —
+    the per-call dispatch cost collapses to argument handling.
+    """
+    import jax
+
+    key = (
+        mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
+        float(threshold), backend, c_layout, l,
+    )
+    prog = _program_cache.get(key)
+    if prog is not None:
+        _stats.hits += 1
+        _program_cache.move_to_end(key)
+        return prog
+    _stats.misses += 1
+    plan = plan_multiply(mesh, engine, l)
+    plan.validate_blocks(nb_r, nb_r)
+    fn = build_program(
+        plan, threshold=threshold, backend=backend, c_layout=c_layout
+    )
+    prog = jax.jit(fn)
+    _program_cache[key] = prog
+    if len(_program_cache) > _CACHE_MAXSIZE:
+        _program_cache.popitem(last=False)
+        _stats.evictions += 1
+    return prog
+
+
+def execute(a, b, mesh, engine: str, **kw):
+    """Run one cached multiply and rebuild the BlockSparseMatrix result.
+
+    The shared execution path behind ``engine.multiply`` and the per-engine
+    back-compat wrappers (``multiply_2d``/``multiply_gather``/
+    ``multiply_25d``); keyword args are those of :func:`get_compiled`.
+    """
+    from repro.core.bsm import BlockSparseMatrix, block_norms
+
+    fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype, **kw)
+    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
+    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))

@@ -1,63 +1,158 @@
-"""2.5D communication-reducing SpGEMM engine (the paper's OSL, Algorithm 2)
-as a shard_map program over an (l, r, c) device mesh.
+"""2.5D communication-reducing SpGEMM engine (the paper's OSL, Algorithm 2).
 
-TPU-native formulation of the paper's scheme (see DESIGN.md §2):
+Two executors, both thin interpreters of a
+:class:`repro.core.plan.MultiplyPlan` (see DESIGN.md §2-§3):
 
-  * the 2D block data layout of A, B, C is *retained* (sharded over (r, c));
-    A and B are replicated over the depth axis ``l`` — the analogue of
-    exposing the panels in MPI windows that every layer can rget from;
-  * layer ``l`` runs a Cannon schedule over only its 1/L slice of the
-    k-range (pre-shift offset ``l * s/L``, then s/L ticks) — the paper's
-    "each process computes the partial multiplications for L different C
-    panels" re-expressed per layer;
-  * the partial C panels are combined with one reduce-scatter (psum_scatter)
-    or psum over ``l`` — the paper's L-1 partial-panel sends + accumulation,
-    fused into the ICI-native collective; it overlaps with the final tick
-    under XLA's latency-hiding scheduler (the paper overlaps the same way).
+``pull_executor``  — Algorithm 2 run directly on the 2D (r, c) process grid
+    with the depth axis *virtual*, exactly as in the paper: the 2D block
+    layout of A, B, C is retained ("no 3D redistribution"), every process
+    pulls the panels of ``group_products`` from their home positions (each
+    one-sided rget is a static partial permutation from the plan), performs
+    its L pairwise products per tick group, and the L-1 partial-C panels
+    are sent to their owners at the end.  This covers the paper's non-square
+    topologies (P_R != P_C with forced L = mx/mn), L = 1 (= OS1, the
+    ``onesided`` engine), and square grids with a square L.
 
-Per-device communicated volume: (s/L)(S_A+S_B) panels + (L-1)/L S_C
-==  2 N^2/(s L) + N^2 (L-1)/(s^2 L)  ==  O(1/sqrt(P L)) with P = L s^2
-— Eq. (7) of the paper in mesh coordinates (see commvolume.mesh25d_volume).
+``stacked_executor`` — the TPU mesh formulation on an (l, r, c) device
+    mesh: A and B replicated over the depth axis ``l`` (the analogue of
+    exposing panels in MPI windows every layer can rget from); layer ``l``
+    runs a Cannon schedule over its k-chunk ``Topology.chunk(l)`` (pre-shift
+    offset = the chunk start), and the partial C panels are combined with
+    one psum / psum_scatter over ``l`` — the paper's L-1 partial-panel
+    sends fused into the ICI-native collective.  Uneven chunks (L does not
+    divide the grid side) are handled by masking ticks past a layer's chunk.
 
-Validity: L must divide the layer-grid side s (slightly wider than the
-paper's square-integer rule; topology.py keeps the paper's rule for the
-fidelity tests and comm model).
+Per-device communicated volume: the pull executor moves Eq. (7) verbatim —
+(V/sqrt(L))(S_A+S_B) panel pulls plus (L-1) S_C partial sends per process;
+the stacked executor moves (s/L)(S_A+S_B) panels + (L-1)/L S_C ==
+O(1/sqrt(P L)) with P = L s^2 — the same asymptotics in mesh coordinates
+(see commvolume.mesh25d_volume and commvolume.plan_volume).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bsm import BlockSparseMatrix, block_norms
+from repro.compat import pcast, shard_map
+from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
-_AXES = ("l", "r", "c")
+
+def _permute(arrs, axes, pairs):
+    return tuple(lax.ppermute(x, axes, list(pairs)) for x in arrs)
 
 
-def _flat_perm3(l_size: int, p: int, fn) -> list[tuple[int, int]]:
-    """Static permutation over the flattened (l, r, c) axis.
+def pull_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
+    """Algorithm 2 as static pulls on the 2D (r, c) mesh (any valid grid)."""
+    topo = plan.topo
+    l_r, l_c, depth, s = topo.l_r, topo.l_c, topo.l, topo.side3d
+    axes = plan.axes
+    blk = P("r", "c", None, None)
+    m2 = P("r", "c")
 
-    fn(l, i, j) -> (dl, di, dj); index = (l * p + i) * p + j.
-    """
-    perm = []
-    for l in range(l_size):
-        for i in range(p):
-            for j in range(p):
-                dl, di, dj = fn(l, i, j)
-                perm.append(((l * p + i) * p + j, (dl * p + di) * p + dj))
-    return perm
+    def body(ab, am, an, bb, bm, bn):
+        nr, nc = ab.shape[0], bb.shape[1]
+        wa = ab.shape[1] // plan.ca  # A subpanel width (block cols)
+        wb = bb.shape[0] // plan.cb  # B subpanel height (block rows)
+        dtype = ab.dtype
+
+        # partial C accumulators, one per target panel slot t = j3*L_R + i3
+        c_blk = [
+            jnp.zeros((nr, nc, ab.shape[2], bb.shape[3]), dtype)
+            for _ in range(depth)
+        ]
+        c_msk = [jnp.zeros((nr, nc), bool) for _ in range(depth)]
+
+        for g in range(plan.ticks):
+            # ---- one-sided pulls of this tick group ----------------------
+            a_pan = [
+                (
+                    jnp.zeros((nr, wa) + ab.shape[2:], dtype),
+                    jnp.zeros((nr, wa), bool),
+                    jnp.zeros((nr, wa), an.dtype),
+                )
+                for _ in range(l_r)
+            ]
+            b_pan = [
+                (
+                    jnp.zeros((wb, nc) + bb.shape[2:], dtype),
+                    jnp.zeros((wb, nc), bool),
+                    jnp.zeros((wb, nc), bn.dtype),
+                )
+                for _ in range(l_c)
+            ]
+            for rd in plan.a_pulls[g]:
+                sl = slice(rd.q * wa, (rd.q + 1) * wa)
+                rb, rm, rn = _permute(
+                    (ab[:, sl], am[:, sl], an[:, sl]), axes, rd.pairs
+                )
+                pb, pm, pn = a_pan[rd.slot]
+                a_pan[rd.slot] = (pb + rb, pm | rm, pn + rn)
+            for rd in plan.b_pulls[g]:
+                sl = slice(rd.q * wb, (rd.q + 1) * wb)
+                rb, rm, rn = _permute(
+                    (bb[sl], bm[sl], bn[sl]), axes, rd.pairs
+                )
+                pb, pm, pn = b_pan[rd.slot]
+                b_pan[rd.slot] = (pb + rb, pm | rm, pn + rn)
+
+            # ---- the L pairwise panel products of this group -------------
+            for i3 in range(l_r):
+                for j3 in range(l_c):
+                    t = j3 * l_r + i3
+                    pa, pam, pan_ = a_pan[i3]
+                    pb, pbm, pbn = b_pan[j3]
+                    dcb, dcm = local_filtered_mm(
+                        pa, pam, pan_, pb, pbm, pbn,
+                        threshold=threshold, backend=backend,
+                    )
+                    c_blk[t] = c_blk[t] + dcb
+                    c_msk[t] = c_msk[t] | dcm
+
+        if depth == 1:
+            return c_blk[0], c_msk[0]
+
+        # ---- the L-1 partial-C sends to the panel owners -----------------
+        i = lax.axis_index("r")
+        j = lax.axis_index("c")
+        lay = (j // s) * l_r + (i // s)  # own layer == own panel slot
+        stack_b = jnp.stack(c_blk)
+        stack_m = jnp.stack(c_msk)
+        total_b = jnp.take(stack_b, lay, axis=0)
+        total_m = jnp.take(stack_m, lay, axis=0)
+        for d, perm in enumerate(plan.c_rounds, start=1):
+            t_send = (lay + d) % depth
+            rb = lax.ppermute(
+                jnp.take(stack_b, t_send, axis=0), axes, list(perm)
+            )
+            rm = lax.ppermute(
+                jnp.take(stack_m, t_send, axis=0), axes, list(perm)
+            )
+            total_b = total_b + rb
+            total_m = total_m | rm
+        return total_b, total_m
+
+    return shard_map(
+        body,
+        mesh=plan.mesh,
+        # check_vma=False: the pallas backend's pallas_call builds plain
+        # ShapeDtypeStructs (no vma annotation); engine outputs are
+        # oracle-tested instead (tests/_dist.py::check_engines)
+        check_vma=False,
+        in_specs=(blk, m2, m2, blk, m2, m2),
+        out_specs=(blk, m2),
+    )
 
 
-def twofive_shardmap(
-    mesh,
+def stacked_executor(
+    plan,
     *,
     threshold: float = 0.0,
     backend: str = "jnp",
     c_layout: str = "2d",
 ):
-    """Returns the shard_map'd multiply body for the 2.5D engine.
+    """The (l, r, c)-mesh 2.5D executor.
 
     c_layout:
       "2d"      — C replicated over l (psum), sharded (r, c): the paper's
@@ -66,61 +161,63 @@ def twofive_shardmap(
                   result distributed over all P devices (cheaper reduction,
                   (L-1)/L instead of 2(L-1)/L traffic).
     """
-    l_size = mesh.shape["l"]
-    p = mesh.shape["r"]
-    assert mesh.shape["c"] == p, "2.5D engine requires square layer grids"
-    assert p % l_size == 0, f"L={l_size} must divide the layer-grid side {p}"
-    ticks = p // l_size
+    ticks = plan.ticks
+    groups = tuple(plan.layer_groups)
+    uneven = len(set(groups)) > 1
+    axes = plan.axes
 
     blk_in = P("r", "c", None, None)  # replicated over the unmentioned 'l'
     m2_in = P("r", "c")
     if c_layout == "2d":
         blk_out, m2_out = P("r", "c", None, None), P("r", "c")
-    else:
+    elif c_layout == "scatter":
         # psum_scatter splits each (r)-row panel over l: r-major, l-minor
         blk_out, m2_out = P(("r", "l"), "c", None, None), P(("r", "l"), "c")
+    else:
+        raise ValueError(f"unknown c_layout {c_layout!r}")
 
     def body(ab, am, an, bb, bm, bn):
-        # --- pre-shift with layer offset: A_ij <- A_{i, (j + i + l*ticks)},
-        #     B_ij <- B_{(i + j + l*ticks), j}; one static flattened perm.
-        pre_a = _flat_perm3(
-            l_size, p, lambda l, i, j: (l, i, (j - i - l * ticks) % p)
-        )
-        pre_b = _flat_perm3(
-            l_size, p, lambda l, i, j: (l, (i - j - l * ticks) % p, j)
-        )
-        ab, am, an = (lax.ppermute(x, _AXES, pre_a) for x in (ab, am, an))
-        bb, bm, bn = (lax.ppermute(x, _AXES, pre_b) for x in (bb, bm, bn))
+        # pre-shift with per-layer chunk offset: A_ij <- A_{i, j+i+start_l},
+        # B_ij <- B_{i+j+start_l, j}; one static flattened permutation.
+        ab, am, an = _permute((ab, am, an), axes, plan.pre_a)
+        bb, bm, bn = _permute((bb, bm, bn), axes, plan.pre_b)
 
         cb = jnp.zeros(
             (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
         )
         cm = jnp.zeros((ab.shape[0], bb.shape[1]), bool)
-        cb = lax.pcast(cb, _AXES, to="varying")
-        cm = lax.pcast(cm, _AXES, to="varying")
+        cb = pcast(cb, axes, to="varying")
+        cm = pcast(cm, axes, to="varying")
+        my_groups = jnp.take(
+            jnp.asarray(groups, jnp.int32), lax.axis_index("l")
+        )
 
-        def shift1(x, axis):
-            perm = [(s, (s - 1) % p) for s in range(p)]
-            return lax.ppermute(x, axis, perm)
-
-        def tick(carry, _):
+        def compute(carry, t):
             ab, am, an, bb, bm, bn, cb, cm = carry
             dcb, dcm = local_filtered_mm(
                 ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
             )
-            cb, cm = cb + dcb, cm | dcm
-            ab, am, an = (shift1(x, "c") for x in (ab, am, an))
-            bb, bm, bn = (shift1(x, "r") for x in (bb, bm, bn))
+            if uneven:
+                # mask ticks past this layer's k-chunk (uneven-L support)
+                active = t < my_groups
+                dcb = dcb * active.astype(dcb.dtype)
+                dcm = dcm & active
+            return (ab, am, an, bb, bm, bn, cb + dcb, cm | dcm)
+
+        def tick(carry, t):
+            carry = compute(carry, t)
+            ab, am, an, bb, bm, bn, cb, cm = carry
+            ab, am, an = _permute((ab, am, an), "c", plan.shift_a)
+            bb, bm, bn = _permute((bb, bm, bn), "r", plan.shift_b)
             return (ab, am, an, bb, bm, bn, cb, cm), None
 
+        carry = (ab, am, an, bb, bm, bn, cb, cm)
         if ticks > 1:
-            (ab, am, an, bb, bm, bn, cb, cm), _ = lax.scan(
-                tick, (ab, am, an, bb, bm, bn, cb, cm), None, length=ticks - 1
+            carry, _ = lax.scan(
+                tick, carry, jnp.arange(ticks - 1, dtype=jnp.int32)
             )
-        dcb, dcm = local_filtered_mm(
-            ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
-        )
-        cb, cm = cb + dcb, cm | dcm
+        # final tick: compute only, no trailing shift
+        *_, cb, cm = compute(carry, jnp.asarray(ticks - 1, jnp.int32))
 
         # --- partial-C reduction over the depth axis (the L-1 sends)
         cmi = cm.astype(jnp.int32)
@@ -130,15 +227,31 @@ def twofive_shardmap(
         cmi = lax.psum_scatter(cmi, "l", scatter_dimension=0, tiled=True)
         return cb, cmi > 0
 
-    return jax.shard_map(
+    return shard_map(
         body,
-        mesh=mesh,
+        mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are
         # oracle-tested instead (tests/_dist.py::check_engines)
         check_vma=False,
         in_specs=(blk_in, m2_in, m2_in, blk_in, m2_in, m2_in),
         out_specs=(blk_out, m2_out),
+    )
+
+
+def twofive_shardmap(
+    mesh,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    c_layout: str = "2d",
+):
+    """Back-compat: compile the plan for ``mesh`` and build its executor."""
+    from repro.core import plan as plan_mod
+
+    p = plan_mod.plan_multiply(mesh, "twofive")
+    return plan_mod.build_program(
+        p, threshold=threshold, backend=backend, c_layout=c_layout
     )
 
 
@@ -151,9 +264,10 @@ def multiply_25d(
     backend: str = "jnp",
     c_layout: str = "2d",
 ) -> BlockSparseMatrix:
-    """Distributed C = A . B on an (l, r, c) mesh with the 2.5D engine."""
-    fn = twofive_shardmap(
-        mesh, threshold=threshold, backend=backend, c_layout=c_layout
+    """Distributed C = A . B with the 2.5D engine (plan-cached program)."""
+    from repro.core import plan as plan_mod
+
+    return plan_mod.execute(
+        a, b, mesh, "twofive",
+        threshold=threshold, backend=backend, c_layout=c_layout,
     )
-    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
-    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))

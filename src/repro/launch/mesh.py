@@ -21,8 +21,31 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
-def make_spgemm_mesh(*, p: int, l: int = 1):
-    """(l, r, c) mesh for the 2.5D SpGEMM engine: l layers of p x p."""
+def make_spgemm_mesh(
+    *,
+    p: int | None = None,
+    l: int = 1,
+    p_r: int | None = None,
+    p_c: int | None = None,
+):
+    """Mesh for the SpGEMM engines.
+
+    ``p``          — square (r, c) grid side (``p_r = p_c = p``).
+    ``p_r, p_c``   — non-square (r, c) grid (the paper's non-ideal
+                     topologies); the 2.5D pull engine derives its virtual
+                     depth L = max/min from the grid itself.
+    ``l > 1``      — adds a depth axis: (l, r, c) mesh of l layer grids for
+                     the stacked 2.5D formulation (square layers only).
+    """
+    if p is not None:
+        p_r = p_c = p
+    if p_r is None or p_c is None:
+        raise ValueError("pass p= or both p_r= and p_c=")
     if l == 1:
-        return jax.make_mesh((p, p), ("r", "c"))
-    return jax.make_mesh((l, p, p), ("l", "r", "c"))
+        return jax.make_mesh((p_r, p_c), ("r", "c"))
+    if p_r != p_c:
+        raise ValueError(
+            "stacked (l, r, c) meshes need square layer grids; non-square "
+            "topologies run the 2.5D pull engine on the 2D (r, c) mesh"
+        )
+    return jax.make_mesh((l, p_r, p_c), ("l", "r", "c"))

@@ -14,7 +14,6 @@ sinusoidal absolute embeddings instead).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

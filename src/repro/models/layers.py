@@ -1,7 +1,6 @@
 """Shared model primitives: norms, rope, MLPs, embeddings, chunked loss."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

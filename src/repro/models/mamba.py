@@ -143,7 +143,6 @@ def apply_mamba(cfg: ArchConfig, p, x: jax.Array, state=None):
 def decode_mamba(cfg: ArchConfig, p, x: jax.Array, state):
     """Single-token decode: x (B, 1, d) with carried state; O(1) per token."""
     di, n, dc, _ = mamba_dims(cfg)
-    b = x.shape[0]
     xz = x[:, 0] @ p["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)  # (B, di)
 

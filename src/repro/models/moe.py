@@ -128,7 +128,6 @@ def load_balance_loss(probs: jax.Array, top_e: jax.Array, n_experts: int) -> jax
 def _apply_dense(cfg: ArchConfig, p, x: jax.Array, top_w, top_e):
     """Scan over experts; every expert sees every token (exact, no drops)."""
     e, _ = moe_dims(cfg)
-    k = cfg.moe.top_k
 
     def body(acc, ep):
         eid, pe = ep

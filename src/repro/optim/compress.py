@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+
 
 CompressState = Any  # pytree of fp32 residuals, same structure as grads
 
@@ -59,7 +61,7 @@ def compressed_allreduce_shardmap(mesh, *, axis: str = "data", dtype=jnp.bfloat1
         return synced, r
 
     spec = P(axis)  # leaves carry per-device replicas stacked on dim 0
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(spec, spec),

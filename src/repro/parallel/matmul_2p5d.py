@@ -23,10 +23,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+
 
 
 def matmul_2p5d_shardmap(mesh, *, depth_axis: str = "pod", tp_axis: str = "model",
@@ -47,11 +48,11 @@ def matmul_2p5d_shardmap(mesh, *, depth_axis: str = "pod", tp_axis: str = "model
             )
         return lax.psum(partial, depth_axis)
 
-    ndim_hint = 2  # (T, d); callers with batch dims use the P specs below
+    # (T, d) specs; callers with batch dims use the same trailing axes
     x_spec = P(None, depth_axis)
     w_spec = P(depth_axis, tp_axis)
     out_spec = P(depth_axis, tp_axis) if reduce == "scatter" else P(None, tp_axis)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec
     )
 

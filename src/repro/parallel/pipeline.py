@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+
 
 
 def pipeline_shardmap(mesh, stage_fn, *, axis: str = "pod"):
@@ -70,7 +72,7 @@ def pipeline_shardmap(mesh, stage_fn, *, axis: str = "pod"):
         outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
         return lax.psum(outs, axis)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),

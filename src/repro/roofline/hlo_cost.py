@@ -83,6 +83,24 @@ _NO_MEM_OPS = {
 }
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    jax >= 0.5 returns one flat dict; 0.4.x returns a list with one dict per
+    partition (usually length 1).  Always returns a dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        if not ca:
+            return {}
+        out: dict = {}
+        for part in ca:
+            for k, v in part.items():
+                out[k] = out.get(k, 0.0) + v if isinstance(v, (int, float)) else v
+        return out
+    return ca
+
+
 def shape_elems_bytes(shape_text: str) -> tuple[int, int]:
     elems = 0
     total = 0
@@ -114,9 +132,15 @@ class Instruction:
     rest: str  # operands + attributes (the tail of the line)
 
     def operand_names(self) -> list[str]:
-        """Names inside the top-level parens (until the matching close)."""
+        """Names inside the top-level parens (until the matching close).
+
+        Operands may be typed (``f32[2,3]{1,0} %name``) — the shape carries
+        commas and braces, so splitting happens only at paren depth 1 outside
+        any ``[]``/``{}`` nesting.
+        """
         depth = 1
-        out = []
+        bracket = 0
+        parts: list[str] = []
         token = ""
         for ch in self.rest:
             if ch == "(":
@@ -125,9 +149,19 @@ class Instruction:
                 depth -= 1
                 if depth == 0:
                     break
-            if depth >= 1:
-                token += ch
-        for part in token.split(","):
+            elif ch in "[{":
+                bracket += 1
+            elif ch in "]}":
+                bracket -= 1
+            elif ch == "," and depth == 1 and bracket == 0:
+                parts.append(token)
+                token = ""
+                continue
+            token += ch
+        if token:
+            parts.append(token)
+        out = []
+        for part in parts:
             part = part.strip()
             m = re.match(r"%?([\w.\-]+)$", part)
             if m:

@@ -67,7 +67,7 @@ def check_engines():
 
 
 def check_engines_rectangular():
-    """gather engine on non-square grids (paper's non-ideal topologies)."""
+    """gather/onesided engines on non-square grids (non-ideal topologies)."""
     from repro.core import bsm as B
     from repro.core.engine import multiply, multiply_reference
 
@@ -76,10 +76,95 @@ def check_engines_rectangular():
     ref = np.asarray(multiply_reference(a, b).to_dense())
     for shape in ((2, 4), (4, 2), (1, 8)):
         mesh = jax.make_mesh(shape, ("r", "c"))
-        c = multiply(a, b, mesh, engine="gather")
-        np.testing.assert_allclose(np.asarray(c.to_dense()), ref,
-                                   rtol=1e-5, atol=1e-5, err_msg=str(shape))
+        for eng in ("gather", "onesided"):
+            c = multiply(a, b, mesh, engine=eng)
+            np.testing.assert_allclose(
+                np.asarray(c.to_dense()), ref, rtol=1e-5, atol=1e-5,
+                err_msg=f"{eng} {shape}")
     print("engines_rectangular OK")
+
+
+def check_plan_rectangular():
+    """The 2.5D engine on non-square grids (virtual depth L = max/min) and
+    on a square grid with L = 4: equals both the single-device reference
+    and the paper-fidelity numpy oracle ``simulate_algorithm2``."""
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.engine import multiply, multiply_reference
+    from repro.core.topology import simulate_algorithm2
+    from repro.launch.mesh import make_spgemm_mesh
+
+    a = B.random_bsm(jax.random.key(4), nb=8, bs=4, occupancy=0.5,
+                     pattern="decay")
+    b = B.random_bsm(jax.random.key(5), nb=8, bs=4, occupancy=0.5,
+                     pattern="decay")
+    ref = np.asarray(multiply_reference(a, b).to_dense())
+    ad, bd = np.asarray(a.to_dense()), np.asarray(b.to_dense())
+
+    for p_r, p_c, l in ((2, 4, None), (4, 2, None), (2, 2, 4)):
+        mesh = make_spgemm_mesh(p_r=p_r, p_c=p_c)
+        c = multiply(a, b, mesh, engine="twofive", l=l)
+        plan = plan_mod.plan_multiply(mesh, "twofive", l)
+        want_l = l if l is not None else max(p_r, p_c) // min(p_r, p_c)
+        assert plan.topo.l == want_l, (p_r, p_c, plan.topo.l)
+        sim = simulate_algorithm2(ad, bd, p_r, p_c, plan.topo.l)
+        cd = np.asarray(c.to_dense())
+        np.testing.assert_allclose(cd, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{p_r}x{p_c} L={plan.topo.l} ref")
+        np.testing.assert_allclose(cd, sim, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{p_r}x{p_c} L={plan.topo.l} sim")
+        np.testing.assert_allclose(sim, ad @ bd, rtol=1e-5, atol=1e-5)
+
+    # stacked mesh with uneven L (L does not divide the grid side)
+    mesh = make_spgemm_mesh(p=2, l=4)
+    for layout in ("2d", "scatter"):
+        c = multiply(a, b, mesh, engine="twofive", c_layout=layout)
+        np.testing.assert_allclose(np.asarray(c.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"stacked uneven {layout}")
+    print("plan_rectangular OK")
+
+
+def check_plan_cache():
+    """Repeated multiplies reuse one compiled program: the second call hits
+    the plan cache (no re-build / re-lower) and dispatches much faster."""
+    import time
+
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.engine import multiply
+    from repro.core.signiter import sign_iteration
+    from repro.launch.mesh import make_spgemm_mesh
+
+    mesh = make_spgemm_mesh(p=2, l=2)
+    a = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=0.5,
+                     pattern="decay", symmetric=True)
+    b = B.random_bsm(jax.random.key(1), nb=8, bs=8, occupancy=0.5)
+
+    plan_mod.clear_cache()
+    t0 = time.perf_counter()
+    multiply(a, b, mesh, engine="twofive").blocks.block_until_ready()
+    first = time.perf_counter() - t0
+    s1 = plan_mod.cache_stats()
+    assert s1["misses"] == 1 and s1["builds"] == 1, s1
+
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        multiply(a, b, mesh, engine="twofive").blocks.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    s2 = plan_mod.cache_stats()
+    assert s2["builds"] == 1, s2  # no re-lowering on cache hits
+    assert s2["hits"] == s1["hits"] + 5, (s1, s2)
+    steady = sorted(times)[len(times) // 2]
+    assert steady < first, (first, steady)
+
+    # the driving hot path: a sign-iteration run shares one program
+    plan_mod.clear_cache()
+    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=4)
+    s3 = plan_mod.cache_stats()
+    assert s3["builds"] == 1 and s3["hits"] == st.multiplications - 1, s3
+    print(f"plan_cache OK first={first:.3f}s steady={steady:.4f}s")
 
 
 def check_comm_volume():
@@ -388,6 +473,8 @@ CHECKS = {
     "microbatch": check_microbatch_equivalence,
     "pipeline": check_pipeline,
     "engines_rectangular": check_engines_rectangular,
+    "plan_rectangular": check_plan_rectangular,
+    "plan_cache": check_plan_cache,
     "comm_volume": check_comm_volume,
     "train_steps": check_train_steps,
     "serve_steps": check_serve_steps,

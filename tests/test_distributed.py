@@ -43,6 +43,18 @@ def test_engines_rectangular_grids():
     assert "OK" in out
 
 
+def test_plan_rectangular_grids():
+    """2.5D on (2,4)/(4,2) and square L=4: == reference == Algorithm 2."""
+    out = _run("plan_rectangular")
+    assert "plan_rectangular OK" in out
+
+
+def test_plan_cache_no_relower():
+    """Second multiply hits the compiled-plan cache (no re-lowering)."""
+    out = _run("plan_cache")
+    assert "plan_cache OK" in out
+
+
 def test_comm_volume_matches_paper_model():
     out = _run("comm_volume", "spgemm_scaling")
     assert "comm_volume OK" in out and "spgemm_scaling OK" in out
