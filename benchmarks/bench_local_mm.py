@@ -1,0 +1,163 @@
+"""Local SpGEMM occupancy sweep: dense masked einsum vs compacted stacks.
+
+The compaction PR's headline number: local FLOPs and wall time must scale
+with *surviving products*, not grid volume.  For each block occupancy the
+sweep builds a random filtered pair, compacts the product list through the
+plan layer (pattern cache + capacity-bucketed program cache), and records
+
+  * measured FLOPs of both backends via
+    ``jax.jit(...).lower().compile().cost_analysis()``,
+  * predicted FLOPs from the roofline models
+    (``spgemm_dense_flops`` / ``spgemm_stacks_flops``),
+  * steady-state wall time per multiply,
+  * the plan-layer cache counters (a repeated pattern must be a pure hit).
+
+Results go to BENCH_local_mm.json (the CI perf trajectory,
+``--smoke`` in the workflow).
+
+    python benchmarks/bench_local_mm.py [--smoke] [--out BENCH_local_mm.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.bsm import random_bsm  # noqa: E402
+from repro.core.engine import choose_backend, multiply_reference  # noqa: E402
+from repro.core.local_mm import local_filtered_mm, pair_filter  # noqa: E402
+from repro.roofline.hlo_cost import (  # noqa: E402
+    spgemm_dense_flops,
+    spgemm_stacks_flops,
+    xla_cost_analysis,
+)
+
+THRESHOLD = 1e-3
+
+
+def _time(fn, *args, reps: int) -> float:
+    out = fn(*args)  # warm-up (compile)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def sweep_point(nb: int, bs: int, occupancy: float, reps: int) -> dict:
+    a = random_bsm(jax.random.key(0), nb, bs, occupancy=occupancy)
+    b = random_bsm(jax.random.key(1), nb, bs, occupancy=occupancy)
+    args = (a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
+
+    dense = jax.jit(
+        lambda *xs: local_filtered_mm(*xs, threshold=THRESHOLD, backend="jnp")
+    )
+    dense_c = dense.lower(*args).compile()
+    dense_flops = xla_cost_analysis(dense_c)["flops"]
+    dense_ms = _time(dense, *args, reps=reps) * 1e3
+
+    ok = np.asarray(pair_filter(a.mask, a.norms, b.mask, b.norms, THRESHOLD))
+    stacks, n = plan_mod.get_product_stacks(ok)
+    cube = nb * nb * nb
+    if stacks.capacity:
+        fn = plan_mod.get_local_compiled(
+            nb, nb, nb, bs, bs, bs, jnp.float32,
+            backend="stacks", capacity=stacks.capacity,
+        )
+        stacks_c = fn.lower(a.blocks, b.blocks, stacks).compile()
+        stacks_flops = xla_cost_analysis(stacks_c)["flops"]
+        stacks_ms = _time(fn, a.blocks, b.blocks, stacks, reps=reps) * 1e3
+    else:
+        stacks_flops, stacks_ms = 0.0, 0.0
+
+    # correctness guard: the sweep never reports numbers off a wrong result
+    want = multiply_reference(a, b, threshold=THRESHOLD, backend="jnp")
+    got = multiply_reference(a, b, threshold=THRESHOLD, backend="stacks")
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()), np.asarray(want.to_dense()),
+        rtol=1e-5, atol=1e-5,
+    )
+
+    return {
+        "occupancy": occupancy,
+        "nb": nb,
+        "bs": bs,
+        "n_products": n,
+        "capacity": stacks.capacity,
+        "product_fill": n / cube,
+        "auto_backend": choose_backend(a, b, THRESHOLD),
+        "dense_flops": dense_flops,
+        "stacks_flops": stacks_flops,
+        "flops_ratio": stacks_flops / dense_flops if dense_flops else 0.0,
+        "predicted_dense_flops": spgemm_dense_flops(nb, nb, nb, bs, bs, bs),
+        "predicted_stacks_flops": spgemm_stacks_flops(
+            stacks.capacity, bs, bs, bs
+        ),
+        "dense_ms": dense_ms,
+        "stacks_ms": stacks_ms,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--nb", type=int, default=None)
+    ap.add_argument("--bs", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_local_mm.json")
+    args = ap.parse_args()
+
+    nb = args.nb or (8 if args.smoke else 24)
+    bs = args.bs or (16 if args.smoke else 32)
+    reps = args.reps or (3 if args.smoke else 20)
+    occupancies = [0.05, 0.3] if args.smoke else [0.02, 0.05, 0.1, 0.3, 1.0]
+
+    plan_mod.clear_cache()
+    sweep = [sweep_point(nb, bs, occ, reps) for occ in occupancies]
+
+    # repeated pattern: must be a pattern-cache hit, no recompile
+    before = plan_mod.cache_stats()
+    sweep_point(nb, bs, occupancies[0], reps)
+    after = plan_mod.cache_stats()
+    repeat = {
+        "pattern_hits_delta": after["pattern_hits"] - before["pattern_hits"],
+        "builds_delta": after["builds"] - before["builds"],
+    }
+    assert repeat["pattern_hits_delta"] >= 1, repeat
+    assert repeat["builds_delta"] == 0, repeat
+
+    report = {
+        "bench": "local_mm_occupancy_sweep",
+        "backend": jax.default_backend(),
+        "threshold": THRESHOLD,
+        "sweep": sweep,
+        "repeat_pattern": repeat,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"{'occ':>5} {'fill':>7} {'cap':>6} {'dense MF':>9} "
+          f"{'stacks MF':>9} {'ratio':>6} {'dense ms':>9} {'stacks ms':>9}")
+    for p in sweep:
+        print(
+            f"{p['occupancy']:>5} {p['product_fill']:>7.3f} "
+            f"{p['capacity']:>6} {p['dense_flops'] / 1e6:>9.2f} "
+            f"{p['stacks_flops'] / 1e6:>9.2f} {p['flops_ratio']:>6.3f} "
+            f"{p['dense_ms']:>9.3f} {p['stacks_ms']:>9.3f}"
+        )
+    print(f"repeat pattern: {repeat} -> wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

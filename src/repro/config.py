@@ -273,3 +273,26 @@ def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtyp
             (b, arch.encoder.n_frames, arch.d_model), dt
         )
     return specs
+
+
+# ---------------------------------------------------------------------------
+# kernel execution mode
+# ---------------------------------------------------------------------------
+
+
+def pallas_interpret() -> bool | None:
+    """Configured Pallas interpret mode, or None for platform auto-detect.
+
+    ``REPRO_PALLAS_INTERPRET`` overrides: "1"/"true" forces the
+    interpreter (debugging on any platform), "0"/"false" forces compiled
+    Mosaic kernels, unset/"auto" lets the wrappers pick — interpret off on
+    real TPU, on elsewhere (``repro.kernels.ops._default_interpret``).
+    """
+    import os
+
+    raw = os.environ.get("REPRO_PALLAS_INTERPRET", "auto").strip().lower()
+    if raw in ("1", "true", "yes", "on"):
+        return True
+    if raw in ("0", "false", "no", "off"):
+        return False
+    return None

@@ -32,18 +32,27 @@ from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
 
-def _panel_mm(carry_c, a, b, threshold, backend):
+def _panel_mm(carry_c, a, b, mm_kw):
     (cb, cm) = carry_c
     ab, am, an = a
     bb, bm, bn = b
-    dcb, dcm = local_filtered_mm(
-        ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
-    )
+    dcb, dcm = local_filtered_mm(ab, am, an, bb, bm, bn, **mm_kw)
     return cb + dcb, cm | dcm
 
 
-def ring_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
+def ring_executor(
+    plan,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+):
     """The PTP Cannon engine: plan's pre-shift + V ring hops."""
+    mm_kw = dict(
+        threshold=threshold, backend=backend,
+        stack_capacity=stack_capacity, interpret=interpret,
+    )
     axes = plan.axes
     ticks = plan.ticks
     blk = P("r", "c", None, None)
@@ -68,7 +77,7 @@ def ring_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
         def tick(carry, _):
             ab, am, an, bb, bm, bn, cb, cm = carry
             cb, cm = _panel_mm(
-                (cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend
+                (cb, cm), (ab, am, an), (bb, bm, bn), mm_kw
             )
             ab, am, an = (
                 lax.ppermute(x, "c", list(plan.shift_a)) for x in (ab, am, an)
@@ -84,7 +93,7 @@ def ring_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
             )
         # final tick: compute only, no trailing shift (paper's itick==nticks)
         cb, cm = _panel_mm(
-            (cb, cm), (ab, am, an), (bb, bm, bn), threshold, backend
+            (cb, cm), (ab, am, an), (bb, bm, bn), mm_kw
         )
         return cb, cm
 

@@ -16,8 +16,22 @@ jitted programs are LRU-cached (``repro.core.plan.get_compiled``) so the
 hot paths — sign iteration, serving, benchmark loops — never retrace or
 re-lower after the first multiply.
 
+Local backends (``core/local_mm.py``): ``jnp`` dense masked einsum,
+``stacks`` compacted gather-GEMM-scatter, ``pallas`` the scalar-prefetch
+TPU kernel — plus ``"auto"``, the occupancy-driven heuristic: when the
+sparsity pattern is concrete, the exact surviving-product fill is measured
+on the host and the compacted backends are picked below
+``AUTO_DENSE_FILL`` (DBCSR behaves the same way: stacks always, but its
+batched GEMM only wins when occupancy is low; dense MXU einsum wins when
+the cube is mostly full).  Auto also derives a *sound* static capacity for
+the compacted backends — exact count single-device, per-device bound
+distributed — so compaction never drops products.
+
 A single-device reference (`multiply_reference`) implements the identical
 filtered semantics without any mesh — the oracle for every engine test.
+The compacted single-device path runs through the plan layer's
+pattern-signature cache (``plan.get_product_stacks``): a repeated pattern
+re-uses both its product list and its compiled program.
 """
 from __future__ import annotations
 
@@ -25,6 +39,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import plan as plan_mod
 from repro.core.bsm import BlockSparseMatrix, block_norms, filter_bsm
@@ -32,15 +47,65 @@ from repro.core.local_mm import local_filtered_mm
 
 ENGINES = ("cannon", "onesided", "gather", "twofive")
 
+# auto heuristic: surviving-product fill above which the dense einsum wins
+# (gather/scatter overhead ~matches the dense MXU work around 1/4 fill)
+AUTO_DENSE_FILL = 0.25
 
-@partial(jax.jit, static_argnames=("threshold", "backend"))
-def multiply_reference(
+
+def _is_concrete(*arrays) -> bool:
+    return not any(isinstance(x, jax.core.Tracer) for x in arrays)
+
+
+def _host_pair_filter(a: BlockSparseMatrix, b: BlockSparseMatrix,
+                      threshold: float) -> np.ndarray:
+    """Concrete (i, k, j) filter cube on the host (numpy)."""
+    am, bm = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
+    ok = am[:, :, None] & bm[None, :, :]
+    if threshold > 0.0:
+        an = np.asarray(a.norms, np.float32)
+        bn = np.asarray(b.norms, np.float32)
+        ok &= an[:, :, None] * bn[None, :, :] > threshold
+    return ok
+
+
+def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
+                   threshold: float = 0.0, *, ok=None) -> str:
+    """Occupancy-driven local-backend selection (the ``"auto"`` policy).
+
+    Dense einsum for high fill, compacted list for low fill; the compacted
+    flavor is the Pallas kernel on real TPU and the jnp
+    gather-GEMM-scatter elsewhere.  Traced inputs (inside someone else's
+    jit) fall back to ``jnp`` — no concrete pattern to compact.
+
+    ``ok`` — optional precomputed concrete filter cube, so one host walk
+    serves both this heuristic and the capacity bound in ``multiply``.
+    """
+    if ok is None:
+        if not _is_concrete(a.mask, a.norms, b.mask, b.norms):
+            return "jnp"
+        ok = _host_pair_filter(a, b, threshold)
+    fill = float(ok.mean()) if ok.size else 0.0
+    if fill > AUTO_DENSE_FILL:
+        return "jnp"
+    return "pallas" if jax.default_backend() == "tpu" else "stacks"
+
+
+# distributed per-device capacity bounds live in the plan layer
+# (plan.device_stack_bound / plan.get_device_capacity — LRU-cached on the
+# pattern signature alongside the product lists, cleared by clear_cache)
+device_stack_bound = plan_mod.device_stack_bound
+
+
+@partial(jax.jit, static_argnames=("threshold", "backend", "stack_capacity",
+                                   "interpret"))
+def _multiply_reference_jit(
     a: BlockSparseMatrix,
     b: BlockSparseMatrix,
     threshold: float = 0.0,
     backend: str = "jnp",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
 ) -> BlockSparseMatrix:
-    """Single-device filtered block multiply (oracle)."""
     cb, cm = local_filtered_mm(
         a.blocks,
         a.mask,
@@ -50,8 +115,70 @@ def multiply_reference(
         b.norms,
         threshold=threshold,
         backend=backend,
+        stack_capacity=stack_capacity,
+        interpret=interpret,
     )
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+
+
+def _reference_compacted(
+    a: BlockSparseMatrix,
+    b: BlockSparseMatrix,
+    threshold: float,
+    backend: str,
+    interpret: bool | None,
+    ok: np.ndarray | None = None,
+) -> BlockSparseMatrix:
+    """Single-device stacks/pallas path over the plan layer's caches.
+
+    Host compaction with the *exact* bucketed capacity, product list
+    cached per pattern signature, program cached per capacity bucket —
+    DBCSR's stack generation amortized across repeated multiplies.
+    """
+    if ok is None:
+        ok = _host_pair_filter(a, b, threshold)
+    ni, nk, nj = ok.shape
+    stacks, _n = plan_mod.get_product_stacks(ok)
+    cm = jnp.asarray(ok.any(axis=1))
+    if stacks.capacity == 0:
+        cb = jnp.zeros((ni, nj, a.bs_r, b.bs_c), a.dtype)
+        return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+    fn = plan_mod.get_local_compiled(
+        ni, nk, nj, a.bs_r, a.bs_c, b.bs_c, a.dtype,
+        backend=backend, capacity=stacks.capacity, interpret=interpret,
+    )
+    cb = fn(a.blocks, b.blocks, stacks)
+    # the pallas grid only visits tiles with surviving products
+    cb = jnp.where(cm[:, :, None, None], cb, jnp.zeros((), cb.dtype))
+    return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+
+
+def multiply_reference(
+    a: BlockSparseMatrix,
+    b: BlockSparseMatrix,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    *,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+    ok: np.ndarray | None = None,
+) -> BlockSparseMatrix:
+    """Single-device filtered block multiply (oracle).
+
+    ``ok`` — optional precomputed concrete filter cube; one host walk then
+    serves backend choice, compaction and the C mask.
+    """
+    concrete = _is_concrete(a.blocks, a.mask, a.norms, b.mask, b.norms)
+    if backend == "auto":
+        if ok is None and concrete:
+            ok = _host_pair_filter(a, b, threshold)
+        backend = choose_backend(a, b, threshold, ok=ok)
+    if backend in ("stacks", "pallas") and concrete and stack_capacity is None:
+        return _reference_compacted(a, b, threshold, backend, interpret, ok)
+    return _multiply_reference_jit(
+        a, b, threshold, backend,
+        stack_capacity=stack_capacity, interpret=interpret,
+    )
 
 
 def multiply(
@@ -65,6 +192,8 @@ def multiply(
     backend: str = "jnp",
     c_layout: str = "2d",
     l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
 ) -> BlockSparseMatrix:
     """Distributed filtered C = A . B.
 
@@ -74,15 +203,44 @@ def multiply(
                  norm <= filter_eps (defaults to ``threshold``).
     l          — depth override for the 2D-mesh ``twofive`` pull engine
                  (square grids; non-square grids force L = mx/mn).
+    backend    — local stage: "jnp" | "stacks" | "pallas" | "auto"
+                 (occupancy heuristic, see ``choose_backend``).
+    stack_capacity — static surviving-product bound for the compacted
+                 backends; derived automatically from the concrete
+                 pattern when omitted (exact single-device, sound
+                 per-device bound distributed).
+    interpret  — Pallas execution mode (None = platform auto-detect).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    # one host walk of the concrete filter cube serves both the auto
+    # heuristic and the distributed capacity bound
+    ok_np = None
+    if (
+        (backend == "auto" or (backend in ("stacks", "pallas")
+                               and mesh is not None
+                               and stack_capacity is None))
+        and _is_concrete(a.mask, a.norms, b.mask, b.norms)
+    ):
+        ok_np = _host_pair_filter(a, b, threshold)
+    if backend == "auto":
+        backend = choose_backend(a, b, threshold, ok=ok_np)
     if mesh is None:
-        c = multiply_reference(a, b, threshold=threshold, backend=backend)
+        c = multiply_reference(
+            a, b, threshold=threshold, backend=backend,
+            stack_capacity=stack_capacity, interpret=interpret, ok=ok_np,
+        )
     else:
+        if (
+            backend in ("stacks", "pallas")
+            and stack_capacity is None
+            and ok_np is not None
+        ):
+            stack_capacity = plan_mod.get_device_capacity(ok_np, mesh, engine)
         c = plan_mod.execute(
             a, b, mesh, engine,
             threshold=threshold, backend=backend, c_layout=c_layout, l=l,
+            stack_capacity=stack_capacity, interpret=interpret,
         )
     eps = threshold if filter_eps is None else filter_eps
     if eps > 0.0:
@@ -101,6 +259,8 @@ def lower_multiply(
     dtype=jnp.float32,
     c_layout: str = "2d",
     l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
 ):
     """Lower (without executing) one multiplication for HLO inspection —
     the source of the measured collective bytes in the benchmarks.  Shares
@@ -115,6 +275,8 @@ def lower_multiply(
         backend=backend,
         c_layout=c_layout,
         l=l,
+        stack_capacity=stack_capacity,
+        interpret=interpret,
     )
     blk = jax.ShapeDtypeStruct((nb, nb, bs, bs), dtype)
     m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)

@@ -29,7 +29,14 @@ from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
 
-def gather_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
+def gather_executor(
+    plan,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+):
     blk = P("r", "c", None, None)
     m2 = P("r", "c")
 
@@ -42,7 +49,8 @@ def gather_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
         bm = lax.all_gather(bm, "r", axis=0, tiled=True)
         bn = lax.all_gather(bn, "r", axis=0, tiled=True)
         return local_filtered_mm(
-            ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
+            ab, am, an, bb, bm, bn, threshold=threshold, backend=backend,
+            stack_capacity=stack_capacity, interpret=interpret,
         )
 
     return shard_map(

@@ -1,22 +1,47 @@
 """Local (per-device) filtered block multiplication.
 
 This is DBCSR's "batched small-block GEMM with on-the-fly filtering" stage
-(handled by LIBXSMM / GPU kernels in the paper).  Two implementations:
+(handled by LIBXSMM / GPU kernels in the paper).  Three implementations:
 
 * ``jnp`` — a masked einsum oracle.  The (i,k,j) product is included only if
   both blocks are occupied AND ``norm(A_ik)*norm(B_kj) > threshold`` — the
-  paper's on-the-fly filter.  Runs everywhere; FLOPs are not actually skipped
-  (XLA static shapes) but the *semantics* are exact.
-* ``pallas`` — the TPU kernel in ``repro.kernels.block_spgemm``: MXU-aligned
-  tiles, `@pl.when` predication genuinely skips filtered tiles on hardware.
+  paper's on-the-fly filter.  Runs everywhere; FLOPs are *not* skipped (the
+  einsum contracts the full cube) but the semantics are exact.  Right for
+  high fill, where dense MXU work beats gather/scatter overhead.
+* ``stacks`` — DBCSR's stack design (DESIGN.md §2): compact the filter cube
+  into a padded product list (``kernels/stacks.py``), gather the surviving
+  A/B blocks, run ONE batched ``dot_general`` over the list, segment-sum
+  into C tiles.  FLOPs and memory traffic scale with the survivors:
+  ``2 * capacity * bs_r * bs_k * bs_c`` instead of the
+  ``ni * nk * nj``-cube.
+* ``pallas`` — the scalar-prefetch TPU kernel
+  (``repro.kernels.block_spgemm``): the grid iterates the same compacted
+  list, one product per step, f32 VMEM accumulation per output-tile k-run.
 
-Both return (c_blocks, c_mask); norms of C are recomputed by the caller
-(after the cross-device reduction, where applicable).
+``stack_capacity`` bounds the surviving products for the compacted
+backends (static; None = full cube, always sound).  Callers with concrete
+sparsity get exact bucketed capacities from the plan layer
+(``plan.get_product_stacks`` / ``engine.multiply``); traced callers
+(shard_map engine bodies) pass a host-derived upper bound.
+
+Blocks may be rectangular: a_blocks (ni, nk, bs_r, bs_k) times b_blocks
+(nk, nj, bs_k, bs_c) gives c_blocks (ni, nj, bs_r, bs_c).
+
+All backends return (c_blocks, c_mask); norms of C are recomputed by the
+caller (after the cross-device reduction, where applicable).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.stacks import (
+    ProductStacks,
+    compact_pair_mask,
+    resolve_capacity,
+)
+
+BACKENDS = ("jnp", "stacks", "pallas")
 
 
 def pair_filter(
@@ -33,6 +58,37 @@ def pair_filter(
     return ok
 
 
+def stacks_mm(
+    a_blocks: jax.Array,
+    b_blocks: jax.Array,
+    stacks: ProductStacks,
+    *,
+    ni: int,
+    nj: int,
+    precision=jax.lax.Precision.HIGHEST,
+) -> jax.Array:
+    """Gather -> batched GEMM -> scatter over a compacted product list.
+
+    The whole local stage is one (capacity, bs_r, bs_k) x (capacity, bs_k,
+    bs_c) batched ``dot_general`` (f32 accumulation, as the MXU does) plus
+    an unsorted segment-sum over output tiles; padding products are zeroed
+    by the ``valid`` weights before the scatter.
+    """
+    bs_r, bs_c = a_blocks.shape[2], b_blocks.shape[3]
+    dtype = a_blocks.dtype
+    if stacks.capacity == 0:
+        return jnp.zeros((ni, nj, bs_r, bs_c), dtype)
+    ag = a_blocks[stacks.ia, stacks.ik].astype(jnp.float32)
+    bg = b_blocks[stacks.ik, stacks.ij].astype(jnp.float32)
+    prod = jax.lax.dot_general(
+        ag, bg, (((2,), (1,)), ((0,), (0,))), precision=precision
+    )
+    prod = prod * stacks.valid.astype(jnp.float32)[:, None, None]
+    seg = jnp.where(stacks.valid == 1, stacks.tile, ni * nj)
+    c = jax.ops.segment_sum(prod, seg, num_segments=ni * nj + 1)
+    return c[: ni * nj].reshape(ni, nj, bs_r, bs_c).astype(dtype)
+
+
 def local_filtered_mm(
     a_blocks: jax.Array,
     a_mask: jax.Array,
@@ -43,19 +99,34 @@ def local_filtered_mm(
     *,
     threshold: float = 0.0,
     backend: str = "jnp",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
     precision=jax.lax.Precision.HIGHEST,
 ) -> tuple[jax.Array, jax.Array]:
     """C_ij += sum_k A_ik B_kj with on-the-fly norm filtering.
 
-    Shapes: a_blocks (ni, nk, bs, bs), b_blocks (nk, nj, bs, bs)
-    Returns: c_blocks (ni, nj, bs, bs), c_mask (ni, nj) bool.
+    Shapes: a_blocks (ni, nk, bs_r, bs_k), b_blocks (nk, nj, bs_k, bs_c)
+    Returns: c_blocks (ni, nj, bs_r, bs_c), c_mask (ni, nj) bool.
+
+    ``interpret`` controls the pallas backend only: None auto-detects the
+    platform (compiled Mosaic on TPU, interpreter elsewhere — see
+    ``repro.config.pallas_interpret``).
     """
+    ni, nk = a_blocks.shape[:2]
+    nj = b_blocks.shape[1]
     ok = pair_filter(a_mask, a_norms, b_mask, b_norms, threshold)
     if backend == "pallas":
         from repro.kernels import ops as kops
 
         c_blocks = kops.block_spgemm(
-            a_blocks, b_blocks, ok, interpret=True
+            a_blocks, b_blocks, ok, capacity=stack_capacity,
+            interpret=interpret,
+        )
+    elif backend == "stacks":
+        cap = resolve_capacity(stack_capacity, ni * nk * nj)
+        stacks = compact_pair_mask(ok, capacity=cap)
+        c_blocks = stacks_mm(
+            a_blocks, b_blocks, stacks, ni=ni, nj=nj, precision=precision
         )
     elif backend == "jnp":
         okf = ok.astype(a_blocks.dtype)
@@ -67,6 +138,6 @@ def local_filtered_mm(
             precision=precision,
         )
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     c_mask = jnp.any(ok, axis=1)
     return c_blocks, c_mask

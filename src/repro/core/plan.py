@@ -31,10 +31,24 @@ Compiled-program cache
 ----------------------
 
 ``get_compiled`` returns a jitted shard_map program, LRU-cached on
-``(mesh, engine, nb, bs, dtype, threshold, backend, c_layout, l)`` so the
-hot paths (sign iteration, serving, benchmark loops) never retrace or
-re-lower after the first call.  ``cache_stats()`` exposes hit/miss/build
-counters for tests and benchmarks.
+``(mesh, engine, nb, bs, dtype, threshold, backend, c_layout, l,
+stack_capacity, interpret)`` so the hot paths (sign iteration, serving,
+benchmark loops) never retrace or re-lower after the first call.
+``get_local_compiled`` does the same for the single-device compacted
+local stage (the ``stacks``/``pallas`` backends), keyed on block-grid
+shape and *capacity bucket* — patterns with equal bucketed product counts
+share one executable.  ``cache_stats()`` exposes hit/miss/build counters
+for tests and benchmarks.
+
+Pattern cache
+-------------
+
+``get_product_stacks`` compacts a *concrete* pair-filter cube into its
+padded product list (``kernels/stacks.py``) and LRU-caches the result on
+the sparsity-pattern signature — DBCSR's stack generation, amortized: the
+sign-iteration / serving loops re-multiply the same (or slowly evolving)
+pattern, so repeated patterns cost neither a host walk nor a recompile
+(the local program key depends only on the capacity bucket).
 """
 from __future__ import annotations
 
@@ -347,8 +361,10 @@ def plan_multiply(mesh, engine: str, l: int | None = None) -> MultiplyPlan:
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    builds: int = 0  # shard_map program constructions (lower/trace roots)
+    builds: int = 0  # program constructions (lower/trace roots)
     evictions: int = 0
+    pattern_hits: int = 0  # compacted product-list reuse (same signature)
+    pattern_misses: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -356,26 +372,189 @@ class CacheStats:
             "misses": self.misses,
             "builds": self.builds,
             "evictions": self.evictions,
+            "pattern_hits": self.pattern_hits,
+            "pattern_misses": self.pattern_misses,
         }
 
 
 _CACHE_MAXSIZE = 128
 _program_cache: OrderedDict[tuple, object] = OrderedDict()
+_pattern_cache: OrderedDict[bytes, tuple] = OrderedDict()
+_bound_cache: OrderedDict[tuple, int] = OrderedDict()
 _stats = CacheStats()
 
 
 def cache_stats() -> dict:
-    """Program-cache counters (hits / misses / builds / evictions)."""
+    """Program/pattern-cache counters (hits / misses / builds / ...)."""
     return _stats.as_dict()
 
 
 def clear_cache() -> None:
     _program_cache.clear()
+    _pattern_cache.clear()
+    _bound_cache.clear()
     _stats.hits = _stats.misses = _stats.builds = _stats.evictions = 0
+    _stats.pattern_hits = _stats.pattern_misses = 0
+
+
+# ---------------------------------------------------------------------------
+# compacted product lists (DBCSR stack generation), pattern-signature cached
+# ---------------------------------------------------------------------------
+
+
+def get_product_stacks(pair_ok):
+    """Compacted product list of a concrete (ni, nk, nj) filter cube.
+
+    Returns ``(stacks, n_products)``: a ``kernels.stacks.ProductStacks``
+    padded to the power-of-two capacity bucket of the surviving-product
+    count, LRU-cached on the pattern signature.  A repeated sparsity
+    pattern is a pure cache hit — no host walk, and (because the local
+    program key depends only on shapes and the capacity bucket) no
+    recompile either.
+    """
+    from repro.kernels.stacks import (
+        bucket_capacity,
+        compact_pair_mask,
+        pattern_signature,
+        product_count,
+    )
+
+    sig = pattern_signature(pair_ok)
+    hit = _pattern_cache.get(sig)
+    if hit is not None:
+        _stats.pattern_hits += 1
+        _pattern_cache.move_to_end(sig)
+        return hit
+    _stats.pattern_misses += 1
+    n = product_count(pair_ok)
+    stacks = compact_pair_mask(
+        jnp.asarray(pair_ok), capacity=bucket_capacity(n)
+    )
+    entry = (stacks, n)
+    _pattern_cache[sig] = entry
+    if len(_pattern_cache) > _CACHE_MAXSIZE:
+        _pattern_cache.popitem(last=False)
+        _stats.evictions += 1
+    return entry
+
+
+def device_stack_bound(ok, mesh, engine: str) -> int:
+    """Sound per-call product-count bound for the distributed engines.
+
+    Every engine computes each surviving global triple exactly once, and a
+    single ``local_filtered_mm`` call never sees more than one device's
+    share: for the own-C-tile engines (cannon / onesided / gather) that
+    share is the triples of the device's C panel; the twofive
+    formulations compute partial panels for other owners, so the loose but
+    sound total count is used.
+    """
+    if engine == "twofive":
+        return int(ok.sum())
+    p_r, p_c = mesh.shape["r"], mesh.shape["c"]
+    nb_r, _, nb_c = ok.shape
+    rr, cc = nb_r // p_r, nb_c // p_c
+    best = 0
+    for r in range(p_r):
+        for c in range(p_c):
+            cnt = int(ok[r * rr:(r + 1) * rr, :, c * cc:(c + 1) * cc].sum())
+            best = max(best, cnt)
+    return best
+
+
+def get_device_capacity(ok, mesh, engine: str) -> int:
+    """Bucketed distributed stack capacity, LRU-cached like the product
+    lists: keyed on (pattern signature, partition class) so the hot-path
+    multiply loop re-derives nothing for a repeated pattern."""
+    from repro.kernels.stacks import bucket_capacity, pattern_signature
+
+    key = (
+        pattern_signature(ok), mesh.shape["r"], mesh.shape["c"],
+        "twofive" if engine == "twofive" else "own-panel",
+    )
+    hit = _bound_cache.get(key)
+    if hit is not None:
+        _stats.pattern_hits += 1
+        _bound_cache.move_to_end(key)
+        return hit
+    _stats.pattern_misses += 1
+    cap = bucket_capacity(device_stack_bound(ok, mesh, engine))
+    _bound_cache[key] = cap
+    if len(_bound_cache) > _CACHE_MAXSIZE:
+        _bound_cache.popitem(last=False)
+        _stats.evictions += 1
+    return cap
+
+
+def get_local_compiled(
+    ni: int,
+    nk: int,
+    nj: int,
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    dtype,
+    *,
+    backend: str,
+    capacity: int,
+    interpret: bool | None = None,
+):
+    """Jitted single-device compacted local-stage program, LRU-cached.
+
+    The program maps ``(a_blocks, b_blocks, stacks) -> c_blocks`` where
+    ``stacks`` is a padded product list of exactly ``capacity`` entries.
+    The key carries no pattern data — only shapes, dtype, backend and the
+    capacity bucket — so every pattern in a bucket shares one executable.
+    """
+    import jax
+
+    if backend == "pallas" and interpret is None:
+        # resolve before keying: the env/platform default must not get
+        # baked into a None-keyed entry (REPRO_PALLAS_INTERPRET may change)
+        from repro.kernels.ops import _default_interpret
+
+        interpret = _default_interpret()
+    key = (
+        "local", ni, nk, nj, bs_r, bs_k, bs_c, jnp.dtype(dtype).name,
+        backend, capacity, interpret,
+    )
+    prog = _program_cache.get(key)
+    if prog is not None:
+        _stats.hits += 1
+        _program_cache.move_to_end(key)
+        return prog
+    _stats.misses += 1
+    _stats.builds += 1
+    if backend == "stacks":
+        from repro.core.local_mm import stacks_mm
+
+        def fn(a_blocks, b_blocks, stacks):
+            return stacks_mm(a_blocks, b_blocks, stacks, ni=ni, nj=nj)
+
+    elif backend == "pallas":
+        from repro.kernels.block_spgemm import block_spgemm_stacks
+
+        interp = bool(interpret)
+
+        def fn(a_blocks, b_blocks, stacks):
+            return block_spgemm_stacks(
+                a_blocks, b_blocks, stacks, ni=ni, nj=nj, interpret=interp
+            )
+
+    else:
+        raise ValueError(
+            f"backend {backend!r} has no compacted local program"
+        )
+    prog = jax.jit(fn)
+    _program_cache[key] = prog
+    if len(_program_cache) > _CACHE_MAXSIZE:
+        _program_cache.popitem(last=False)
+        _stats.evictions += 1
+    return prog
 
 
 def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
-                  c_layout: str):
+                  c_layout: str, stack_capacity: int | None = None,
+                  interpret: bool | None = None):
     """Construct (untraced) the shard_map executor for a plan."""
     if c_layout != "2d" and plan.kind != "stacked":
         raise ValueError(
@@ -383,24 +562,26 @@ def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
             f"the {plan.kind!r} plan keeps C in the 2D (r, c) layout"
         )
     _stats.builds += 1
+    kw = dict(
+        threshold=threshold, backend=backend,
+        stack_capacity=stack_capacity, interpret=interpret,
+    )
     if plan.kind == "ring":
         from repro.core.cannon import ring_executor
 
-        return ring_executor(plan, threshold=threshold, backend=backend)
+        return ring_executor(plan, **kw)
     if plan.kind == "pull":
         from repro.core.twofive import pull_executor
 
-        return pull_executor(plan, threshold=threshold, backend=backend)
+        return pull_executor(plan, **kw)
     if plan.kind == "stacked":
         from repro.core.twofive import stacked_executor
 
-        return stacked_executor(
-            plan, threshold=threshold, backend=backend, c_layout=c_layout
-        )
+        return stacked_executor(plan, c_layout=c_layout, **kw)
     if plan.kind == "gather":
         from repro.core.gather import gather_executor
 
-        return gather_executor(plan, threshold=threshold, backend=backend)
+        return gather_executor(plan, **kw)
     raise ValueError(plan.kind)
 
 
@@ -415,6 +596,8 @@ def get_compiled(
     backend: str = "jnp",
     c_layout: str = "2d",
     l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
 ):
     """Jitted multiply program for the key, LRU-cached.
 
@@ -424,9 +607,15 @@ def get_compiled(
     """
     import jax
 
+    if backend == "pallas" and interpret is None:
+        # resolve before keying (as in get_local_compiled): the
+        # env/platform default must not get baked into a None-keyed entry
+        from repro.kernels.ops import _default_interpret
+
+        interpret = _default_interpret()
     key = (
         mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
-        float(threshold), backend, c_layout, l,
+        float(threshold), backend, c_layout, l, stack_capacity, interpret,
     )
     prog = _program_cache.get(key)
     if prog is not None:
@@ -437,7 +626,8 @@ def get_compiled(
     plan = plan_multiply(mesh, engine, l)
     plan.validate_blocks(nb_r, nb_r)
     fn = build_program(
-        plan, threshold=threshold, backend=backend, c_layout=c_layout
+        plan, threshold=threshold, backend=backend, c_layout=c_layout,
+        stack_capacity=stack_capacity, interpret=interpret,
     )
     prog = jax.jit(fn)
     _program_cache[key] = prog

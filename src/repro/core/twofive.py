@@ -43,8 +43,19 @@ def _permute(arrs, axes, pairs):
     return tuple(lax.ppermute(x, axes, list(pairs)) for x in arrs)
 
 
-def pull_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
+def pull_executor(
+    plan,
+    *,
+    threshold: float = 0.0,
+    backend: str = "jnp",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+):
     """Algorithm 2 as static pulls on the 2D (r, c) mesh (any valid grid)."""
+    mm_kw = dict(
+        threshold=threshold, backend=backend,
+        stack_capacity=stack_capacity, interpret=interpret,
+    )
     topo = plan.topo
     l_r, l_c, depth, s = topo.l_r, topo.l_c, topo.l, topo.side3d
     axes = plan.axes
@@ -104,8 +115,7 @@ def pull_executor(plan, *, threshold: float = 0.0, backend: str = "jnp"):
                     pa, pam, pan_ = a_pan[i3]
                     pb, pbm, pbn = b_pan[j3]
                     dcb, dcm = local_filtered_mm(
-                        pa, pam, pan_, pb, pbm, pbn,
-                        threshold=threshold, backend=backend,
+                        pa, pam, pan_, pb, pbm, pbn, **mm_kw
                     )
                     c_blk[t] = c_blk[t] + dcb
                     c_msk[t] = c_msk[t] | dcm
@@ -151,6 +161,8 @@ def stacked_executor(
     threshold: float = 0.0,
     backend: str = "jnp",
     c_layout: str = "2d",
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
 ):
     """The (l, r, c)-mesh 2.5D executor.
 
@@ -195,7 +207,8 @@ def stacked_executor(
         def compute(carry, t):
             ab, am, an, bb, bm, bn, cb, cm = carry
             dcb, dcm = local_filtered_mm(
-                ab, am, an, bb, bm, bn, threshold=threshold, backend=backend
+                ab, am, an, bb, bm, bn, threshold=threshold, backend=backend,
+                stack_capacity=stack_capacity, interpret=interpret,
             )
             if uneven:
                 # mask ticks past this layer's k-chunk (uneven-L support)

@@ -2,16 +2,21 @@
 small-block GEMM stage, adapted to the MXU).
 
 The paper offloads batches of small-block multiplications to LIBXSMM/GPU
-with an on-the-fly norm filter.  TPU adaptation (DESIGN.md §2): atomic
-blocks are packed into MXU-aligned tiles (bs multiple of 128 on hardware;
-the interpret-mode tests also sweep small sizes), and the filter becomes a
-`@pl.when` predicate on the (i, k, j) product — a predicated-off tile issues
-no MXU work on hardware, which is exactly DBCSR's "skip products whose norm
-product falls below the threshold".
+with an on-the-fly norm filter.  TPU adaptation (DESIGN.md §2): the kernel
+iterates the *compacted product list* (``kernels/stacks.py`` — DBCSR's
+stacks), not the (ni, nj, nk) cube.  The list's int32 index arrays are
+scalar-prefetched (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
+index maps steer each grid step's HBM->VMEM DMA straight to the blocks of
+the n-th surviving product: filtered triples cost neither grid steps nor
+memory traffic.  Products are sorted by output tile with k-runs
+contiguous; an f32 VMEM scratch accumulates each run (``first`` resets it,
+``write`` casts it back to the output tile), and padding entries repeat
+the final triple's coordinates so they re-visit resident blocks and issue
+no MXU work (``valid`` = 0).
 
-Grid: (ni, nj, nk) with k innermost; a VMEM f32 scratch accumulates the
-k-sum (standard TPU matmul revisiting pattern) and is written back to the
-output tile at the last k step.
+Atomic blocks may be rectangular (bs_r x bs_k times bs_k x bs_c); on real
+hardware each dimension should be MXU-aligned (multiples of 128 — the
+interpret-mode tests also sweep small sizes).
 """
 from __future__ import annotations
 
@@ -21,15 +26,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.stacks import (
+    ProductStacks,
+    compact_pair_mask,
+    resolve_capacity,
+)
 
-def _spgemm_kernel(ok_ref, a_ref, b_ref, c_ref, acc_ref, *, nk: int):
-    k_step = pl.program_id(2)
 
-    @pl.when(k_step == 0)
-    def _zero():
+def _stacks_kernel(
+    ia_ref, ik_ref, ij_ref, tile_ref, first_ref, write_ref, valid_ref,
+    a_ref, b_ref, c_ref, acc_ref,
+):
+    n = pl.program_id(0)
+
+    @pl.when(first_ref[n] == 1)
+    def _reset():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(ok_ref[0, 0, 0] != 0)
+    @pl.when(valid_ref[n] == 1)
     def _mac():
         acc_ref[...] += jnp.dot(
             a_ref[0, 0].astype(jnp.float32),
@@ -37,46 +51,91 @@ def _spgemm_kernel(ok_ref, a_ref, b_ref, c_ref, acc_ref, *, nk: int):
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(k_step == nk - 1)
+    @pl.when(write_ref[n] == 1)
     def _write():
         c_ref[0, 0] = acc_ref[...].astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def block_spgemm(
-    a_blocks: jax.Array,  # (ni, nk, bs, bs)
-    b_blocks: jax.Array,  # (nk, nj, bs, bs)
-    pair_ok: jax.Array,  # (ni, nk, nj) bool/int
+@functools.partial(jax.jit, static_argnames=("ni", "nj", "interpret"))
+def block_spgemm_stacks(
+    a_blocks: jax.Array,  # (ni, nk, bs_r, bs_k)
+    b_blocks: jax.Array,  # (nk, nj, bs_k, bs_c)
+    stacks: ProductStacks,
     *,
+    ni: int,
+    nj: int,
     interpret: bool = False,
 ) -> jax.Array:
-    """C_ij = sum_k ok[i,k,j] * A_ik @ B_kj, one (i,j,k) block per grid step."""
+    """C tiles of the compacted product list; one product per grid step.
+
+    Only output tiles with at least one surviving product are written —
+    callers zero the rest via the tile mask (``jnp.any(pair_ok, axis=1)``),
+    exactly the ``c_mask`` they already compute.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    _, _, bs_r, bs_k = a_blocks.shape
+    nk, nj2, bs_k2, bs_c = b_blocks.shape
+    assert bs_k == bs_k2, (a_blocks.shape, b_blocks.shape)
+    assert nj2 == nj, (nj2, nj)
+    out = jax.ShapeDtypeStruct((ni, nj, bs_r, bs_c), a_blocks.dtype)
+    cap = stacks.capacity
+    if cap == 0:
+        return jnp.zeros(out.shape, out.dtype)
+
+    # index maps receive (grid idx, *scalar prefetch refs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(cap,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, bs_r, bs_k),
+                lambda n, ia, ik, ij, *_: (ia[n], ik[n], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs_k, bs_c),
+                lambda n, ia, ik, ij, *_: (ik[n], ij[n], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bs_r, bs_c),
+            lambda n, ia, ik, ij, *_: (ia[n], ij[n], 0, 0),
+        ),
+        scratch_shapes=[pltpu.VMEM((bs_r, bs_c), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _stacks_kernel,
+        grid_spec=grid_spec,
+        out_shape=out,
+        interpret=interpret,
+    )(*stacks, a_blocks, b_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def block_spgemm(
+    a_blocks: jax.Array,  # (ni, nk, bs_r, bs_k)
+    b_blocks: jax.Array,  # (nk, nj, bs_k, bs_c)
+    pair_ok: jax.Array,  # (ni, nk, nj) bool/int
+    *,
+    capacity: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C_ij = sum_k ok[i,k,j] * A_ik @ B_kj via the compacted product list.
+
+    ``capacity`` bounds the surviving products (static).  None means the
+    full cube — always sound, no compaction win; callers with a concrete
+    pattern pass the exact bucketed count (``plan.get_product_stacks``) so
+    grid steps and DMA traffic shrink to the survivors.
+    """
     ni, nk, bs_r, bs_k = a_blocks.shape
     nk2, nj, bs_k2, bs_c = b_blocks.shape
     assert nk == nk2 and bs_k == bs_k2, (a_blocks.shape, b_blocks.shape)
     assert pair_ok.shape == (ni, nk, nj)
-    ok = pair_ok.astype(jnp.int32)
-
-    grid = (ni, nj, nk)
-    out = jax.ShapeDtypeStruct((ni, nj, bs_r, bs_c), a_blocks.dtype)
-    kernel = functools.partial(_spgemm_kernel, nk=nk)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            # filter scalar for this (i, k, j) triple
-            pl.BlockSpec((1, 1, 1), lambda i, j, k: (i, k, j)),
-            pl.BlockSpec((1, 1, bs_r, bs_k), lambda i, j, k: (i, k, 0, 0)),
-            pl.BlockSpec((1, 1, bs_k, bs_c), lambda i, j, k: (k, j, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bs_r, bs_c), lambda i, j, k: (i, j, 0, 0)),
-        out_shape=out,
-        scratch_shapes=[_vmem_scratch(bs_r, bs_c)],
-        interpret=interpret,
-    )(ok, a_blocks, b_blocks)
-
-
-def _vmem_scratch(bs_r: int, bs_c: int):
-    from jax.experimental.pallas import tpu as pltpu
-
-    return pltpu.VMEM((bs_r, bs_c), jnp.float32)
+    cap = resolve_capacity(capacity, ni * nk * nj)
+    stacks = compact_pair_mask(pair_ok, capacity=cap)
+    c = block_spgemm_stacks(
+        a_blocks, b_blocks, stacks, ni=ni, nj=nj, interpret=interpret
+    )
+    # tiles with no surviving product are never visited by the grid
+    c_mask = jnp.any(pair_ok.astype(bool), axis=1)
+    return jnp.where(c_mask[:, :, None, None], c, jnp.zeros((), c.dtype))

@@ -1,7 +1,9 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU backends (validation mode — the kernel
-body executes in Python) and False on TPU (compiled Mosaic kernels).
+``interpret`` resolution (``repro.config.pallas_interpret``): an explicit
+argument wins, then the ``REPRO_PALLAS_INTERPRET`` env override, then
+platform auto-detection — False (compiled Mosaic kernels) on real TPU,
+True (validation mode — the kernel body executes in Python) elsewhere.
 """
 from __future__ import annotations
 
@@ -10,20 +12,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.config import pallas_interpret
 from repro.kernels import ref
 from repro.kernels.block_spgemm import block_spgemm as _block_spgemm
 from repro.kernels.flash_attention import flash_attention_single
+from repro.kernels.stacks import ProductStacks  # noqa: F401  (re-export)
 
 
 def _default_interpret() -> bool:
+    cfg = pallas_interpret()
+    if cfg is not None:
+        return cfg
     return jax.default_backend() != "tpu"
 
 
-def block_spgemm(a_blocks, b_blocks, pair_ok, *, interpret: bool | None = None):
-    """Filtered block-sparse matmul (see kernels/block_spgemm.py)."""
+def block_spgemm(
+    a_blocks,
+    b_blocks,
+    pair_ok,
+    *,
+    capacity: int | None = None,
+    interpret: bool | None = None,
+):
+    """Filtered block-sparse matmul (see kernels/block_spgemm.py).
+
+    ``capacity`` — static bound on surviving products (None = full cube);
+    the scalar-prefetch grid iterates only that many steps.
+    """
     if interpret is None:
         interpret = _default_interpret()
-    return _block_spgemm(a_blocks, b_blocks, pair_ok, interpret=interpret)
+    return _block_spgemm(
+        a_blocks, b_blocks, pair_ok, capacity=capacity, interpret=interpret
+    )
 
 
 @functools.partial(

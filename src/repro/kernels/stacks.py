@@ -1,0 +1,133 @@
+"""Product-list compaction: DBCSR's "stack generation" for the local stage.
+
+DBCSR never multiplies the full (i, k, j) cube: the host walks the block
+structure once, collects the surviving (i, k, j) triples into *stacks*, and
+hands only those to the batched-GEMM backends (LIBXSMM / GPU), so local
+FLOPs scale with occupancy, not grid volume.  This module is the TPU/XLA
+rendering of that stage (DESIGN.md §2): the boolean ``pair_filter`` cube is
+compacted into a *padded product list* — fixed-capacity int32 index arrays
+(XLA needs static shapes) sorted by output tile with k-runs contiguous —
+that drives both
+
+* the ``stacks`` jnp backend (gather A/B by the list, one batched
+  ``dot_general``, segment-sum into C), and
+* the scalar-prefetch Pallas kernel (``kernels/block_spgemm.py``), whose
+  grid iterates the list directly.
+
+``compact_pair_mask`` is pure jnp, so it works on concrete host data (the
+plan layer caches the result per sparsity-pattern signature,
+``core/plan.py``) *and* on traced values inside shard_map engine bodies
+(via ``jnp.flatnonzero(..., size=capacity)``).  Capacity is bucketed to
+powers of two so one compiled program serves many patterns.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ProductStacks(NamedTuple):
+    """Padded product list over surviving (i, k, j) block triples.
+
+    All fields are int32 arrays of shape (capacity,), sorted by output tile
+    (i, j) with the k-run of each tile contiguous — padding entries repeat
+    the last real triple's indices so kernels revisit (never re-fetch) the
+    same blocks and issue no work.
+
+    ia / ik / ij — block coordinates of each product (A_ik . B_kj -> C_ij)
+    tile         — flattened output tile id, ``ia * nj + ij``
+    first        — 1 at the first product of each tile's k-run (reset acc)
+    write        — 1 at the last grid step touching a tile (write-back)
+    valid        — 1 for real products, 0 for padding
+    """
+
+    ia: jax.Array
+    ik: jax.Array
+    ij: jax.Array
+    tile: jax.Array
+    first: jax.Array
+    write: jax.Array
+    valid: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.ia.shape[0]
+
+
+def bucket_capacity(n: int, *, minimum: int = 8) -> int:
+    """Round a product count up to a power-of-two bucket.
+
+    Bucketing bounds the number of distinct compiled programs: every
+    pattern whose count lands in the same bucket reuses one executable
+    (the padded tail is masked out).  ``n == 0`` keeps capacity 0 — the
+    empty-product-list edge case short-circuits to a zero result.
+    """
+    if n <= 0:
+        return 0
+    cap = minimum
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+def resolve_capacity(capacity: int | None, cube: int) -> int:
+    """Effective static capacity: None means the full cube (always sound),
+    an explicit bound is clamped to it.  The single policy point shared by
+    the jnp-stacks and Pallas paths."""
+    return cube if capacity is None else min(capacity, cube)
+
+
+def product_count(pair_ok) -> int:
+    """Number of surviving products of a *concrete* pair_filter cube."""
+    return int(np.asarray(pair_ok).sum())
+
+
+def pattern_signature(pair_ok) -> bytes:
+    """Digest of a concrete (ni, nk, nj) filter cube — the plan-cache key
+    for compacted product lists (repeated sparsity patterns hit)."""
+    ok = np.asarray(pair_ok).astype(bool)
+    h = hashlib.sha1(repr(ok.shape).encode())
+    h.update(np.packbits(ok).tobytes())
+    return h.digest()
+
+
+def compact_pair_mask(pair_ok: jax.Array, *, capacity: int) -> ProductStacks:
+    """Compact a (ni, nk, nj) filter cube into a ``ProductStacks`` list.
+
+    Works traced (inside jit/shard_map, ``capacity`` static) or concrete.
+    If more than ``capacity`` products survive, the excess is silently
+    dropped — callers must supply a sound capacity (exact count on the
+    host path, an upper bound on the traced path; see
+    ``plan.get_product_stacks`` / ``engine.multiply``).
+    """
+    ni, nk, nj = pair_ok.shape
+    if capacity <= 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return ProductStacks(z, z, z, z, z, z, z)
+    # (i, j, k) row-major order: output tiles consecutive, k-runs contiguous
+    okt = jnp.transpose(pair_ok.astype(bool), (0, 2, 1))
+    flat = jnp.flatnonzero(okt.ravel(), size=capacity, fill_value=-1)
+    flat = flat.astype(jnp.int32)
+    valid = flat >= 0
+    # padding repeats the last real triple (or triple 0 when none survive)
+    last = jnp.max(jnp.where(valid, flat, 0))
+    flat = jnp.where(valid, flat, last)
+    ia = flat // (nj * nk)
+    ij = (flat // nk) % nj
+    ik = flat % nk
+    tile = ia * nj + ij
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), tile[:-1]])
+    nxt = jnp.concatenate([tile[1:], jnp.full((1,), -1, jnp.int32)])
+    return ProductStacks(
+        ia=ia,
+        ik=ik,
+        ij=ij,
+        tile=tile,
+        first=(tile != prev).astype(jnp.int32),
+        write=(tile != nxt).astype(jnp.int32),
+        valid=valid.astype(jnp.int32),
+    )

@@ -295,3 +295,11 @@ def model_flops(cfg, shape) -> float:
     if shape.kind == "prefill":
         return 2.0 * n_active * shape.global_batch * shape.seq_len
     return 2.0 * n_active * shape.global_batch  # decode: 1 token / sequence
+
+
+# local SpGEMM stage flop models (surviving-product accounting) — the
+# predicted side of the measured-vs-modeled assertions in test_roofline
+from repro.roofline.hlo_cost import (  # noqa: E402
+    spgemm_dense_flops,
+    spgemm_stacks_flops,
+)

@@ -505,3 +505,35 @@ def analyze_hlo(
                     report.attn_tile_bytes += m * bytes_
 
     return report.finalize()
+
+
+# ---------------------------------------------------------------------------
+# local SpGEMM stage models (predicted side of the HLO assertions)
+# ---------------------------------------------------------------------------
+
+
+def spgemm_dense_flops(
+    ni: int, nk: int, nj: int, bs_r: int, bs_k: int, bs_c: int
+) -> float:
+    """Local-stage FLOPs of the dense masked-einsum (``jnp``) backend.
+
+    The einsum contracts the full (ni, nk, nj) cube regardless of the
+    filter — this is what the local stage cost before compaction, and what
+    ``cost_analysis`` reports for it (the mask-weighting adds a few
+    percent on top; assert with rel tolerance).
+    """
+    return 2.0 * ni * nk * nj * bs_r * bs_k * bs_c
+
+
+def spgemm_stacks_flops(
+    capacity: int, bs_r: int, bs_k: int, bs_c: int
+) -> float:
+    """Local-stage FLOPs of the compacted (``stacks``/``pallas``) backends.
+
+    One batched GEMM over the padded product list: FLOPs scale with the
+    *surviving products* (padded to the capacity bucket), not the cube —
+    the quantity ``cost_analysis`` reports for the compiled stacks
+    program, and the term the roofline's compute model prices for
+    filtered multiplies.
+    """
+    return 2.0 * capacity * bs_r * bs_k * bs_c

@@ -66,6 +66,60 @@ def check_engines():
     print("engines OK")
 
 
+def check_stacks_backends():
+    """Compacted backends distributed: the auto-derived per-device stack
+    capacity (plan.get_device_capacity) must never drop products — checked
+    with a *skewed* pattern where one device's panel dominates, across all
+    engines, both compacted backends, and a non-square grid."""
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.engine import multiply, multiply_reference
+    from repro.launch.mesh import make_spgemm_mesh
+
+    a = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=0.15)
+    b = B.random_bsm(jax.random.key(1), nb=8, bs=8, occupancy=0.15)
+    # skew: one quadrant fully occupied WITH data (fresh blocks — the
+    # blocks random_bsm masked out are zero, and zero-norm products would
+    # be filtered right back out) — the max-device capacity bound must
+    # come from the dense quadrant, not the average
+    mask = np.asarray(a.mask).copy()
+    mask[:4, :4] = True
+    blocks = jax.random.normal(jax.random.key(2), a.blocks.shape) / np.sqrt(8)
+    a = B.make_bsm(blocks, jnp.asarray(mask))
+
+    thr = 1e-3
+    ref = np.asarray(multiply_reference(a, b, threshold=thr).to_dense())
+    mesh2 = make_spgemm_mesh(p=2)
+    for eng in ("cannon", "onesided", "gather", "twofive"):
+        for be in ("stacks", "pallas"):
+            c = multiply(a, b, mesh2, engine=eng, threshold=thr, backend=be)
+            np.testing.assert_allclose(
+                np.asarray(c.to_dense()), ref, rtol=1e-5, atol=1e-5,
+                err_msg=f"{eng}/{be}")
+    # non-square pull grid (forced virtual L) + stacked (l, r, c) mesh
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices()[:8])
+    mesh24 = Mesh(devs.reshape(2, 4), ("r", "c"))
+    for eng in ("onesided", "twofive"):
+        c = multiply(a, b, mesh24, engine=eng, threshold=thr, backend="stacks")
+        np.testing.assert_allclose(
+            np.asarray(c.to_dense()), ref, rtol=1e-5, atol=1e-5,
+            err_msg=f"{eng}/stacks 2x4")
+    mesh3 = make_spgemm_mesh(p=2, l=2)
+    c = multiply(a, b, mesh3, engine="twofive", threshold=thr, backend="stacks")
+    np.testing.assert_allclose(
+        np.asarray(c.to_dense()), ref, rtol=1e-5, atol=1e-5,
+        err_msg="twofive stacked/stacks")
+    # repeated pattern: bound + product list re-derivations are cache hits
+    s1 = plan_mod.cache_stats()
+    multiply(a, b, mesh2, engine="gather", threshold=thr, backend="stacks")
+    s2 = plan_mod.cache_stats()
+    assert s2["pattern_hits"] > s1["pattern_hits"], (s1, s2)
+    assert s2["builds"] == s1["builds"], (s1, s2)
+    print("stacks_backends OK")
+
+
 def check_engines_rectangular():
     """gather/onesided engines on non-square grids (non-ideal topologies)."""
     from repro.core import bsm as B
@@ -470,6 +524,7 @@ def check_pipeline():
 
 CHECKS = {
     "engines": check_engines,
+    "stacks_backends": check_stacks_backends,
     "microbatch": check_microbatch_equivalence,
     "pipeline": check_pipeline,
     "engines_rectangular": check_engines_rectangular,

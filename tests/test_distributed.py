@@ -38,6 +38,12 @@ def test_engines_match_reference():
     assert "engines OK" in out
 
 
+def test_stacks_backends_distributed():
+    """Compacted backends + auto capacity bounds across engines/grids."""
+    out = _run("stacks_backends")
+    assert "stacks_backends OK" in out
+
+
 def test_engines_rectangular_grids():
     out = _run("engines_rectangular")
     assert "OK" in out

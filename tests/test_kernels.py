@@ -83,6 +83,87 @@ def test_ops_wrapper_defaults_interpret_on_cpu():
     np.testing.assert_allclose(np.asarray(out), 8.0)
 
 
+def test_interpret_env_override(monkeypatch):
+    from repro.kernels.ops import _default_interpret
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert _default_interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert _default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "auto")
+    assert _default_interpret() is (jax.default_backend() != "tpu")
+
+
+def test_block_spgemm_rectangular_blocks():
+    """bs_r != bs_k != bs_c through the scalar-prefetch kernel."""
+    ni, nk, nj, bs_r, bs_k, bs_c = 2, 3, 4, 8, 16, 4
+    a = jax.random.normal(jax.random.key(20), (ni, nk, bs_r, bs_k))
+    b = jax.random.normal(jax.random.key(21), (nk, nj, bs_k, bs_c))
+    ok = jax.random.bernoulli(jax.random.key(22), 0.5, (ni, nk, nj))
+    out = block_spgemm(a, b, ok, interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    assert out.shape == (ni, nj, bs_r, bs_c)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_block_spgemm_compacted_capacity():
+    """A tight static capacity (the whole point of the compaction) is
+    numerically identical to the full-cube grid."""
+    ni, nk, nj, bs = 4, 4, 4, 8
+    a = jax.random.normal(jax.random.key(30), (ni, nk, bs, bs))
+    b = jax.random.normal(jax.random.key(31), (nk, nj, bs, bs))
+    ok = jax.random.bernoulli(jax.random.key(32), 0.1, (ni, nk, nj))
+    n = int(ok.sum())
+    from repro.kernels.stacks import bucket_capacity
+
+    out = block_spgemm(
+        a, b, ok, capacity=bucket_capacity(n), interpret=True
+    )
+    want = ref.block_spgemm_ref(a, b, ok)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_block_spgemm_stacks_grid_is_capacity():
+    """The scalar-prefetch grid issues exactly `capacity` steps — the
+    kernel's work scales with survivors, not the (ni, nj, nk) cube."""
+    from repro.kernels.block_spgemm import block_spgemm_stacks
+    from repro.kernels.stacks import compact_pair_mask
+
+    ni, nk, nj, bs = 4, 4, 4, 8
+    a = jax.random.normal(jax.random.key(40), (ni, nk, bs, bs))
+    b = jax.random.normal(jax.random.key(41), (nk, nj, bs, bs))
+    ok = jnp.zeros((ni, nk, nj), bool).at[1, 2, 3].set(True).at[1, 3, 3].set(True)
+    stacks = compact_pair_mask(ok, capacity=8)
+    out = block_spgemm_stacks(a, b, stacks, ni=ni, nj=nj, interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    # only the visited tile is defined; compare it (the two-product k-run)
+    np.testing.assert_allclose(
+        np.asarray(out[1, 3]), np.asarray(want[1, 3]), rtol=1e-5, atol=1e-5
+    )
+    # and the pallas grid really is (capacity,), not the (ni*nj*nk) cube
+    jpr = jax.make_jaxpr(
+        lambda aa, bb, ss: block_spgemm_stacks(
+            aa, bb, ss, ni=ni, nj=nj, interpret=True
+        )
+    )(a, b, stacks)
+    grids = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if "pallas" in str(eqn.primitive):
+                grids.append(eqn.params["grid_mapping"].grid)
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+
+    walk(jpr.jaxpr)
+    assert grids == [(8,)], grids
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -198,3 +198,43 @@ def test_attn_tile_signature_accumulates():
     r = analyze_hlo(c.as_text(), attn_tile_signature=(512, 1024))
     assert r.attn_tile_bytes > 0
     assert r.attn_tile_bytes <= r.hbm_bytes
+
+
+def test_spgemm_stacks_flops_match_cost_analysis():
+    """Filtered-product accounting: the compacted local stage must be
+    priced by surviving products, not the dense cube — predicted vs
+    cost_analysis within tolerance (satellite of the compaction PR)."""
+    from repro.core import plan as plan_mod
+    from repro.core.bsm import random_bsm
+    from repro.core.local_mm import local_filtered_mm, pair_filter
+    from repro.roofline import spgemm_dense_flops, spgemm_stacks_flops
+
+    nb, bs = 12, 8
+    a = random_bsm(jax.random.key(50), nb, bs, occupancy=0.15)
+    b = random_bsm(jax.random.key(51), nb, bs, occupancy=0.15)
+    thr = 1e-3
+
+    # dense jnp backend: cost_analysis prices the full cube
+    dense = jax.jit(
+        lambda *xs: local_filtered_mm(*xs, threshold=thr, backend="jnp")
+    )
+    args = (a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
+    measured_dense = xla_cost_analysis(dense.lower(*args).compile())["flops"]
+    assert measured_dense >= spgemm_dense_flops(nb, nb, nb, bs, bs, bs)
+    assert measured_dense == pytest.approx(
+        spgemm_dense_flops(nb, nb, nb, bs, bs, bs), rel=0.25
+    )
+
+    # stacks backend: cost_analysis prices the padded product list
+    ok = np.asarray(pair_filter(a.mask, a.norms, b.mask, b.norms, thr))
+    stacks, n = plan_mod.get_product_stacks(ok)
+    fn = plan_mod.get_local_compiled(
+        nb, nb, nb, bs, bs, bs, jnp.float32,
+        backend="stacks", capacity=stacks.capacity,
+    )
+    measured = xla_cost_analysis(
+        fn.lower(a.blocks, b.blocks, stacks).compile()
+    )["flops"]
+    predicted = spgemm_stacks_flops(stacks.capacity, bs, bs, bs)
+    assert measured == pytest.approx(predicted, rel=0.15)
+    assert measured < 0.5 * measured_dense
