@@ -60,18 +60,32 @@ def main() -> None:
     assert stats["builds"] == 1 and stats["hits"] == REPS, stats
     assert steady < first, (first, steady)
 
-    # the driving application: Newton-Schulz sign iteration (2 multiplies
-    # per sweep) reuses one cached program for its whole run
+    # the driving application, legacy per-op loop: Newton-Schulz sign
+    # iteration (2 multiplies per sweep) reuses one cached program
     plan_mod.clear_cache()
     t0 = time.perf_counter()
     _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=6,
-                           threshold=0.0, filter_eps=0.0)
+                           threshold=0.0, filter_eps=0.0, mode="legacy")
     total = time.perf_counter() - t0
     stats = plan_mod.cache_stats()
     print(f"bench/plan_cache/signiter_mults,{st.multiplications},"
           f"{total:.3f}s total, cache {stats}")
     assert stats["builds"] == 1, stats
     assert stats["hits"] == st.multiplications - 1, stats
+
+    # fused chain mode: the whole sweep is one cached program — see
+    # benchmarks/bench_signiter.py for the dispatch-overhead comparison
+    plan_mod.clear_cache()
+    t0 = time.perf_counter()
+    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=6,
+                           threshold=0.0, filter_eps=0.0, mode="fused")
+    total = time.perf_counter() - t0
+    stats = plan_mod.cache_stats()
+    print(f"bench/plan_cache/signiter_fused_sweeps,{st.iterations},"
+          f"{total:.3f}s total, cache {stats}")
+    assert stats["builds"] == 1, stats
+    assert stats["chain_misses"] == 1, stats
+    assert stats["chain_hits"] == st.iterations - 1, stats
 
 
 if __name__ == "__main__":

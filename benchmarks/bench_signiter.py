@@ -1,0 +1,193 @@
+"""Sign-iteration dispatch benchmark: fused device-resident sweep vs the
+legacy per-op loop.
+
+The purification PR's headline number: a Newton-Schulz sweep must cost ONE
+program dispatch (the fused chain step), not the legacy pile — two
+``multiply()`` re-entries from replicated arrays, half a dozen eager
+algebra dispatches, and a blocking host residual sync.  With the matrix
+small enough that compute is negligible, per-sweep wall time IS dispatch
+overhead, so the sweep measures
+
+  * per-sweep wall time (and sweeps/sec) of both modes, steady-state,
+  * the fused/legacy dispatch-overhead ratio (must be >= 5x),
+  * fused-vs-legacy numerical parity (residual traces to 1e-5),
+  * the plan-layer chain counters: a 10-sweep iteration reuses one
+    compiled step (chain_hits) and builds at most one multiply program
+    per distinct shape (builds).
+
+Results go to BENCH_signiter.json (the second CI perf-trajectory series,
+next to BENCH_local_mm.json; ``--smoke`` in the workflow).
+
+    python benchmarks/bench_signiter.py [--smoke] [--out BENCH_signiter.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import bsm as B  # noqa: E402
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.signiter import (  # noqa: E402
+    sign_iteration,
+    sign_iteration_legacy,
+)
+from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
+
+THRESHOLD = 1e-8
+FILTER_EPS = 1e-7
+
+
+def _per_sweep_s(run, sweeps: int, reps: int) -> float:
+    run()  # warm-up: compile + fill the plan/chain caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, (time.perf_counter() - t0) / sweeps)
+    return best
+
+
+def _make_fused_steady(x, mesh, sweeps: int, **kw):
+    """One steady-state fused run: `sweeps` dispatches of the chain-step
+    program, matrices already device-resident (the chain boundaries —
+    shard at entry, gather at exit — are one-time costs, reported
+    separately).  The chain resets each call: the timed trajectory is the
+    convergent one the legacy loop also walks."""
+    from repro.core.signiter import _scale_to_unit_spectrum, get_sweep_program
+
+    sx = B.shard_bsm(_scale_to_unit_spectrum(x), mesh)
+    ident = B.shard_bsm(B.identity(x.nb_r, x.bs_r, x.dtype), mesh)
+    sweep = get_sweep_program(sx, mesh, **kw)
+
+    def run():
+        st = (sx.blocks, sx.mask, sx.norms)
+        for _ in range(sweeps):
+            out = sweep(st[0], st[1], st[2], ident.blocks, ident.mask)
+            st = out[:3]
+        jax.block_until_ready(out)
+
+    return run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--nb", type=int, default=None)
+    ap.add_argument("--bs", type=int, default=None)
+    ap.add_argument("--sweeps", type=int, default=10)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--engine", default="onesided")
+    ap.add_argument("--out", default="BENCH_signiter.json")
+    args = ap.parse_args()
+
+    nb = args.nb or 8
+    bs = args.bs or (4 if args.smoke else 8)
+    reps = args.reps or (5 if args.smoke else 10)
+    sweeps = args.sweeps
+    mesh = make_spgemm_mesh(p=2)
+
+    x = B.random_bsm(jax.random.key(0), nb=nb, bs=bs, occupancy=0.5,
+                     pattern="banded", symmetric=True)
+    kw = dict(mesh=mesh, engine=args.engine, threshold=THRESHOLD,
+              filter_eps=FILTER_EPS, max_iter=sweeps, tol=0.0)
+
+    # ---- numerical parity (tol=0 -> both run exactly `sweeps` sweeps) ----
+    _, st_legacy = sign_iteration_legacy(x, **kw)
+    plan_mod.clear_cache()
+    _, st_fused = sign_iteration(x, mode="fused", sync_every=sweeps, **kw)
+    stats = plan_mod.cache_stats()
+    np.testing.assert_allclose(
+        st_fused.residual_trace, st_legacy.residual_trace, rtol=1e-5, atol=1e-7
+    )
+    parity = float(np.max(np.abs(
+        np.asarray(st_fused.residual_trace)
+        - np.asarray(st_legacy.residual_trace)
+    )))
+
+    # ---- per-chain cache counters: one step program for the whole run ----
+    assert stats["builds"] <= 1, stats
+    assert stats["chain_misses"] == 1, stats
+    assert stats["chain_hits"] == sweeps - 1, stats
+
+    # ---- dispatch overhead (steady-state; compute is negligible) ---------
+    # legacy pays its whole pile every sweep (re-shard, 2 multiply
+    # re-entries, eager algebra, residual sync); the fused chain pays one
+    # program dispatch per sweep plus one-time chain boundaries.  The two
+    # sides are timed back-to-back per rep (paired, median-of-ratios) so
+    # shared machine noise cancels out of the headline ratio.
+    legacy_run = lambda: sign_iteration_legacy(x, **kw)  # noqa: E731
+    fused_run = _make_fused_steady(
+        x, mesh, sweeps, engine=args.engine,
+        threshold=THRESHOLD, filter_eps=FILTER_EPS, backend="jnp",
+    )
+    legacy_run(), fused_run()  # warm-up: compile + fill every cache
+    legacy_best, fused_best = float("inf"), float("inf")
+    pair_ratios = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        legacy_run()
+        tl = (time.perf_counter() - t0) / sweeps
+        t0 = time.perf_counter()
+        fused_run()
+        tf = (time.perf_counter() - t0) / sweeps
+        legacy_best, fused_best = min(legacy_best, tl), min(fused_best, tf)
+        pair_ratios.append(tl / tf)
+    legacy_s, fused_s = legacy_best, fused_best
+    chain_s = _per_sweep_s(
+        lambda: sign_iteration(x, mode="fused", sync_every=sweeps, **kw),
+        sweeps, reps,
+    )
+    ratio = sorted(pair_ratios)[len(pair_ratios) // 2]
+    stats = plan_mod.cache_stats()
+
+    report = {
+        "bench": "signiter_dispatch",
+        "backend": jax.default_backend(),
+        "engine": args.engine,
+        "nb": nb,
+        "bs": bs,
+        "sweeps": sweeps,
+        "threshold": THRESHOLD,
+        "filter_eps": FILTER_EPS,
+        "legacy_per_sweep_ms": legacy_s * 1e3,
+        "fused_per_sweep_ms": fused_s * 1e3,
+        "fused_chain_per_sweep_ms": chain_s * 1e3,
+        "legacy_sweeps_per_s": 1.0 / legacy_s,
+        "fused_sweeps_per_s": 1.0 / fused_s,
+        "dispatch_overhead_ratio": ratio,
+        "paired_ratios": pair_ratios,
+        "chain_ratio": legacy_s / chain_s,
+        "residual_parity_max_abs": parity,
+        "cache": stats,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"bench/signiter/legacy_per_sweep_ms,{legacy_s * 1e3:.3f},")
+    print(f"bench/signiter/fused_per_sweep_ms,{fused_s * 1e3:.3f},steady-state dispatch")
+    print(f"bench/signiter/fused_chain_per_sweep_ms,{chain_s * 1e3:.3f},incl. chain boundaries")
+    print(f"bench/signiter/overhead_ratio,{ratio:.1f},"
+          f"legacy/fused (median of {reps} paired reps)")
+    print(f"bench/signiter/parity,{parity:.2e},max |residual diff|")
+    print(f"bench/signiter/cache,{stats},")
+    print(f"wrote {args.out}")
+    assert ratio >= 5.0, (
+        f"fused sweep must cut dispatch overhead >= 5x, got {ratio:.1f}x"
+    )
+
+
+if __name__ == "__main__":
+    main()

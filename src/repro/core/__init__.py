@@ -2,7 +2,9 @@
 communication-reducing distributed multiplication engines."""
 from repro.core.bsm import (
     BlockSparseMatrix,
+    ShardedBSM,
     add,
+    axpy,
     block_norms,
     filter_bsm,
     from_dense,
@@ -11,6 +13,9 @@ from repro.core.bsm import (
     permute,
     random_bsm,
     scale,
+    shard_bsm,
+    sharded_identity,
+    unshard_bsm,
 )
 from repro.core.commvolume import (
     memory_factor,
@@ -31,8 +36,10 @@ from repro.core.topology import (
 __all__ = [
     "BlockSparseMatrix",
     "ENGINES",
+    "ShardedBSM",
     "Topology",
     "add",
+    "axpy",
     "block_norms",
     "density_matrix",
     "filter_bsm",
@@ -50,9 +57,12 @@ __all__ = [
     "ptp_volume",
     "random_bsm",
     "scale",
+    "shard_bsm",
+    "sharded_identity",
     "sign_iteration",
     "simulate_algorithm2",
     "trace",
+    "unshard_bsm",
     "validate_l",
     "volume_ratio_os1_over_osl",
 ]

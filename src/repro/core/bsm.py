@@ -25,6 +25,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.pytree import pytree_dataclass
 
@@ -94,40 +96,266 @@ def make_bsm(blocks: jax.Array, mask: jax.Array) -> BlockSparseMatrix:
     return BlockSparseMatrix(blocks=blocks, mask=m, norms=block_norms(blocks))
 
 
-def from_dense(
-    dense: jax.Array, bs: int, threshold: float = 0.0
-) -> BlockSparseMatrix:
+def _block_shape(bs) -> tuple[int, int]:
+    """Normalize a block-size spec: int -> square, (bs_r, bs_c) -> as-is."""
+    if isinstance(bs, (tuple, list)):
+        bs_r, bs_c = bs
+        return int(bs_r), int(bs_c)
+    return int(bs), int(bs)
+
+
+def from_dense(dense: jax.Array, bs, threshold: float = 0.0) -> BlockSparseMatrix:
+    """Block a dense matrix; ``bs`` may be an int or a (bs_r, bs_c) tuple
+    (rectangular atomic blocks are first-class, see DESIGN.md §2)."""
+    bs_r, bs_c = _block_shape(bs)
     n_r, n_c = dense.shape
-    if n_r % bs or n_c % bs:
-        raise ValueError(f"dense shape {dense.shape} not divisible by bs={bs}")
-    nb_r, nb_c = n_r // bs, n_c // bs
-    blocks = dense.reshape(nb_r, bs, nb_c, bs).transpose(0, 2, 1, 3)
+    if n_r % bs_r or n_c % bs_c:
+        raise ValueError(
+            f"dense shape {dense.shape} not divisible by bs=({bs_r}, {bs_c})"
+        )
+    nb_r, nb_c = n_r // bs_r, n_c // bs_c
+    blocks = dense.reshape(nb_r, bs_r, nb_c, bs_c).transpose(0, 2, 1, 3)
     norms = block_norms(blocks)
     mask = norms > threshold
     return make_bsm(blocks, mask)
 
 
 def filter_bsm(m: BlockSparseMatrix, threshold: float) -> BlockSparseMatrix:
-    """Post-multiplication filtering: drop blocks with norm <= threshold."""
+    """Post-multiplication filtering: drop blocks with norm <= threshold.
+
+    Norms are *derived* (existing norms under the new mask), not recomputed
+    — ``make_bsm`` stays the consistency fallback for callers with raw
+    blocks/mask pairs of unknown provenance.
+    """
     keep = m.mask & (m.norms > threshold)
-    return make_bsm(m.blocks, keep)
+    return BlockSparseMatrix(
+        blocks=m.blocks * keep[:, :, None, None].astype(m.dtype),
+        mask=keep,
+        norms=jnp.where(keep, m.norms, 0.0),
+    )
 
 
-def identity(nb: int, bs: int, dtype=jnp.float32) -> BlockSparseMatrix:
-    eye_blk = jnp.eye(bs, dtype=dtype)
-    blocks = jnp.zeros((nb, nb, bs, bs), dtype)
-    idx = jnp.arange(nb)
-    blocks = blocks.at[idx, idx].set(eye_blk)
-    mask = jnp.eye(nb, dtype=bool)
-    return make_bsm(blocks, mask)
+def identity(nb: int, bs, dtype=jnp.float32) -> BlockSparseMatrix:
+    """Blocked identity.  ``bs`` may be an int or a (bs_r, bs_c) tuple; a
+    rectangular blocking must still tile a square matrix (nb * bs_r
+    divisible by bs_c), and the global diagonal then crosses block
+    boundaries, so the rectangular path blocks a dense eye."""
+    bs_r, bs_c = _block_shape(bs)
+    if bs_r == bs_c:
+        eye_blk = jnp.eye(bs_r, dtype=dtype)
+        blocks = jnp.zeros((nb, nb, bs_r, bs_r), dtype)
+        idx = jnp.arange(nb)
+        blocks = blocks.at[idx, idx].set(eye_blk)
+        mask = jnp.eye(nb, dtype=bool)
+        return make_bsm(blocks, mask)
+    n = nb * bs_r
+    if n % bs_c:
+        raise ValueError(
+            f"identity of size {n} (nb={nb} x bs_r={bs_r}) is not "
+            f"divisible by bs_c={bs_c}"
+        )
+    return from_dense(jnp.eye(n, dtype=dtype), (bs_r, bs_c))
 
 
 def add(a: BlockSparseMatrix, b: BlockSparseMatrix) -> BlockSparseMatrix:
-    return make_bsm(a.blocks + b.blocks, a.mask | b.mask)
+    """A + B.  Inputs are consistent triples (masked-out blocks are zero),
+    so the sum needs no re-masking; only the data-dependent norms are
+    recomputed."""
+    blocks = a.blocks + b.blocks
+    return BlockSparseMatrix(
+        blocks=blocks, mask=a.mask | b.mask, norms=block_norms(blocks)
+    )
 
 
 def scale(a: BlockSparseMatrix, s) -> BlockSparseMatrix:
-    return make_bsm(a.blocks * jnp.asarray(s, a.dtype), a.mask)
+    """s * A with derived norms: |s| . norms (no block-norm recompute)."""
+    s = jnp.asarray(s, a.dtype)
+    return BlockSparseMatrix(
+        blocks=a.blocks * s,
+        mask=a.mask,
+        norms=a.norms * jnp.abs(s).astype(jnp.float32),
+    )
+
+
+def axpy(s, x: BlockSparseMatrix, y: BlockSparseMatrix) -> BlockSparseMatrix:
+    """s * X + Y (one fused update; norms recomputed on the sum)."""
+    blocks = x.blocks * jnp.asarray(s, x.dtype) + y.blocks
+    return BlockSparseMatrix(
+        blocks=blocks, mask=x.mask | y.mask, norms=block_norms(blocks)
+    )
+
+
+# ---------------------------------------------------------------------------
+# ShardedBSM: device-resident block-sparse matrices (DESIGN.md §2, §4)
+# ---------------------------------------------------------------------------
+
+
+def _bsm_shardings(mesh):
+    """(blocks, mask/norms) NamedShardings of the 2D home layout: block rows
+    over the mesh's ``r`` axis, block columns over ``c``; replicated over a
+    depth axis ``l`` when the mesh has one (the stacked 2.5D engine pulls
+    its own per-layer copies)."""
+    return (
+        NamedSharding(mesh, P("r", "c", None, None)),
+        NamedSharding(mesh, P("r", "c")),
+    )
+
+
+@pytree_dataclass(meta_fields=("mesh",))
+class ShardedBSM:
+    """A block-sparse matrix resident on a device mesh for the lifetime of
+    an iteration chain.
+
+    Same triple as :class:`BlockSparseMatrix` — blocks / mask / norms — but
+    carried in the 2D home layout with explicit ``NamedSharding`` (block
+    rows over mesh axis ``r``, block columns over ``c``), plus device-side
+    algebra that updates norms incrementally instead of round-tripping
+    through ``make_bsm``.  The paper's "never redistribute" design point:
+    a purification chain shards its operands once (``shard_bsm``), every
+    multiply and every inter-multiply update runs on the shards, and the
+    result is gathered once at the chain boundary (``unshard``).
+    """
+
+    blocks: jax.Array  # (nb_r, nb_c, bs_r, bs_c), sharded P(r, c, -, -)
+    mask: jax.Array  # (nb_r, nb_c) bool, sharded P(r, c)
+    norms: jax.Array  # (nb_r, nb_c) float32, sharded P(r, c)
+    mesh: object  # static: the home mesh (pytree meta field)
+
+    # ---- shape helpers -------------------------------------------------
+    @property
+    def nb_r(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def nb_c(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def bs_r(self) -> int:
+        return self.blocks.shape[2]
+
+    @property
+    def bs_c(self) -> int:
+        return self.blocks.shape[3]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.nb_r * self.bs_r, self.nb_c * self.bs_c)
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    # ---- device-side algebra (norms updated incrementally) -------------
+    def add(self, other: "ShardedBSM") -> "ShardedBSM":
+        blocks = self.blocks + other.blocks
+        return ShardedBSM(
+            blocks=blocks,
+            mask=self.mask | other.mask,
+            norms=block_norms(blocks),
+            mesh=self.mesh,
+        )
+
+    def scale(self, s) -> "ShardedBSM":
+        s = jnp.asarray(s, self.dtype)
+        return ShardedBSM(
+            blocks=self.blocks * s,
+            mask=self.mask,
+            norms=self.norms * jnp.abs(s).astype(jnp.float32),
+            mesh=self.mesh,
+        )
+
+    def axpy(self, s, y: "ShardedBSM") -> "ShardedBSM":
+        """s * self + y."""
+        blocks = self.blocks * jnp.asarray(s, self.dtype) + y.blocks
+        return ShardedBSM(
+            blocks=blocks,
+            mask=self.mask | y.mask,
+            norms=block_norms(blocks),
+            mesh=self.mesh,
+        )
+
+    def filter(self, threshold: float) -> "ShardedBSM":
+        """Post-filter on the shards: drop blocks with norm <= threshold
+        (derived norms — no recompute, no gather)."""
+        keep = self.mask & (self.norms > threshold)
+        return ShardedBSM(
+            blocks=self.blocks * keep[:, :, None, None].astype(self.dtype),
+            mask=keep,
+            norms=jnp.where(keep, self.norms, 0.0),
+            mesh=self.mesh,
+        )
+
+    def frobenius_norm(self) -> jax.Array:
+        """Device-resident scalar (an all-reduce, never a gather)."""
+        return jnp.sqrt(jnp.sum(jnp.square(self.norms)))
+
+    def trace(self) -> jax.Array:
+        idx = jnp.arange(min(self.nb_r, self.nb_c))
+        diag = self.blocks[idx, idx]
+        dmask = self.mask[idx, idx]
+        tr = jnp.trace(diag, axis1=-2, axis2=-1)
+        return jnp.sum(tr * dmask)
+
+    def occupancy(self) -> jax.Array:
+        return jnp.mean(self.mask.astype(jnp.float32))
+
+    def nnz_blocks(self) -> jax.Array:
+        return jnp.sum(self.mask)
+
+    # ---- chain-boundary conversions ------------------------------------
+    def unshard(self) -> BlockSparseMatrix:
+        """Gather the triple to every device — the explicit chain-boundary
+        conversion (the ONLY place a purification chain pays a gather)."""
+        rep = NamedSharding(self.mesh, P())
+        return BlockSparseMatrix(
+            blocks=jax.device_put(self.blocks, rep),
+            mask=jax.device_put(self.mask, rep),
+            norms=jax.device_put(self.norms, rep),
+        )
+
+    def to_dense(self) -> jax.Array:
+        return self.unshard().to_dense()
+
+
+def shard_bsm(m: BlockSparseMatrix | ShardedBSM, mesh) -> ShardedBSM:
+    """Scatter a BlockSparseMatrix to its 2D home layout on ``mesh``.
+
+    The inverse of :meth:`ShardedBSM.unshard`; the two are the explicit
+    chain boundaries of DESIGN.md §4.  Idempotent on an already-sharded
+    matrix of the same mesh.
+    """
+    if isinstance(m, ShardedBSM):
+        if m.mesh is not mesh and m.mesh != mesh:
+            raise ValueError("matrix is already sharded on a different mesh")
+        return m
+    if "r" not in mesh.axis_names or "c" not in mesh.axis_names:
+        raise ValueError(
+            f"SpGEMM meshes carry ('r', 'c') axes; got {mesh.axis_names}"
+        )
+    p_r, p_c = mesh.shape["r"], mesh.shape["c"]
+    if m.nb_r % p_r or m.nb_c % p_c:
+        raise ValueError(
+            f"block grid {m.nb_r}x{m.nb_c} does not divide the "
+            f"{p_r}x{p_c} process grid"
+        )
+    blk, m2 = _bsm_shardings(mesh)
+    return ShardedBSM(
+        blocks=jax.device_put(m.blocks, blk),
+        mask=jax.device_put(m.mask, m2),
+        norms=jax.device_put(m.norms, m2),
+        mesh=mesh,
+    )
+
+
+def unshard_bsm(m: BlockSparseMatrix | ShardedBSM) -> BlockSparseMatrix:
+    """Chain-boundary gather; identity on an unsharded matrix."""
+    return m.unshard() if isinstance(m, ShardedBSM) else m
+
+
+def sharded_identity(nb: int, bs, mesh, dtype=jnp.float32) -> ShardedBSM:
+    """Blocked identity born sharded (no replicated intermediate kept)."""
+    return shard_bsm(identity(nb, bs, dtype), mesh)
 
 
 # ---------------------------------------------------------------------------

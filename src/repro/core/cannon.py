@@ -40,7 +40,7 @@ def _panel_mm(carry_c, a, b, mm_kw):
     return cb + dcb, cm | dcm
 
 
-def ring_executor(
+def ring_body(
     plan,
     *,
     threshold: float = 0.0,
@@ -48,15 +48,19 @@ def ring_executor(
     stack_capacity: int | None = None,
     interpret: bool | None = None,
 ):
-    """The PTP Cannon engine: plan's pre-shift + V ring hops."""
+    """The per-shard PTP Cannon body (shards in, C shard out).
+
+    Exposed separately from the executor so iteration chains
+    (``core/signiter.py``) can inline the whole multiply into ONE
+    enclosing shard_map — the engine body already operates on shards;
+    the executor below only wraps it for the single-multiply call path.
+    """
     mm_kw = dict(
         threshold=threshold, backend=backend,
         stack_capacity=stack_capacity, interpret=interpret,
     )
     axes = plan.axes
     ticks = plan.ticks
-    blk = P("r", "c", None, None)
-    m2 = P("r", "c")
 
     def body(ab, am, an, bb, bm, bn):
         # --- pre-shift (Algorithm 1): A_ij <- A_{i,(j+i)}, B_ij <- B_{(i+j),j}
@@ -97,8 +101,15 @@ def ring_executor(
         )
         return cb, cm
 
+    return body
+
+
+def ring_executor(plan, **kw):
+    """The PTP Cannon engine: plan's pre-shift + V ring hops."""
+    blk = P("r", "c", None, None)
+    m2 = P("r", "c")
     return shard_map(
-        body,
+        ring_body(plan, **kw),
         mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are

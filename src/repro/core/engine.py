@@ -42,7 +42,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import plan as plan_mod
-from repro.core.bsm import BlockSparseMatrix, block_norms, filter_bsm
+from repro.core.bsm import (
+    BlockSparseMatrix,
+    ShardedBSM,
+    block_norms,
+    filter_bsm,
+)
 from repro.core.local_mm import local_filtered_mm
 
 ENGINES = ("cannon", "onesided", "gather", "twofive")
@@ -182,8 +187,8 @@ def multiply_reference(
 
 
 def multiply(
-    a: BlockSparseMatrix,
-    b: BlockSparseMatrix,
+    a: BlockSparseMatrix | ShardedBSM,
+    b: BlockSparseMatrix | ShardedBSM,
     mesh=None,
     *,
     engine: str = "twofive",
@@ -194,7 +199,7 @@ def multiply(
     l: int | None = None,
     stack_capacity: int | None = None,
     interpret: bool | None = None,
-) -> BlockSparseMatrix:
+) -> BlockSparseMatrix | ShardedBSM:
     """Distributed filtered C = A . B.
 
     threshold  — on-the-fly filter: skip block products with
@@ -210,9 +215,37 @@ def multiply(
                  pattern when omitted (exact single-device, sound
                  per-device bound distributed).
     interpret  — Pallas execution mode (None = platform auto-detect).
+
+    ShardedBSM operands take the device-resident path: the multiply runs
+    on the shards (``plan.execute_sharded``) and returns a ShardedBSM —
+    no gather, no re-shard; post-filtering happens shard-local with
+    derived norms.  Both operands must be sharded on the same mesh.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    if isinstance(a, ShardedBSM) or isinstance(b, ShardedBSM):
+        if not (isinstance(a, ShardedBSM) and isinstance(b, ShardedBSM)):
+            raise TypeError(
+                "mixed ShardedBSM / BlockSparseMatrix operands; shard both "
+                "(bsm.shard_bsm) or neither"
+            )
+        if a.mesh is not b.mesh and a.mesh != b.mesh:
+            raise ValueError("operands sharded on different meshes")
+        if mesh is not None and mesh is not a.mesh and mesh != a.mesh:
+            raise ValueError("mesh argument conflicts with operand mesh")
+        if c_layout != "2d":
+            raise ValueError("sharded chains require c_layout='2d'")
+        if backend == "auto":
+            # the auto heuristic walks the concrete pattern on the host —
+            # a round-trip the device-resident path exists to avoid
+            backend = "jnp"
+        c = plan_mod.execute_sharded(
+            a, b, engine,
+            threshold=threshold, backend=backend, l=l,
+            stack_capacity=stack_capacity, interpret=interpret,
+        )
+        eps = threshold if filter_eps is None else filter_eps
+        return c.filter(eps) if eps > 0.0 else c
     # one host walk of the concrete filter cube serves both the auto
     # heuristic and the distributed capacity bound
     ok_np = None

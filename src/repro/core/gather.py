@@ -29,7 +29,7 @@ from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
 
-def gather_executor(
+def gather_body(
     plan,
     *,
     threshold: float = 0.0,
@@ -37,8 +37,9 @@ def gather_executor(
     stack_capacity: int | None = None,
     interpret: bool | None = None,
 ):
-    blk = P("r", "c", None, None)
-    m2 = P("r", "c")
+    """The per-shard all-gather body (exposed for chain fusion — the
+    panel all-gathers here are the engine's *internal* pulls, not a
+    C gather; C comes home sharded)."""
 
     def body(ab, am, an, bb, bm, bn):
         # pull the full block row of A / block column of B from home
@@ -53,8 +54,14 @@ def gather_executor(
             stack_capacity=stack_capacity, interpret=interpret,
         )
 
+    return body
+
+
+def gather_executor(plan, **kw):
+    blk = P("r", "c", None, None)
+    m2 = P("r", "c")
     return shard_map(
-        body,
+        gather_body(plan, **kw),
         mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are

@@ -365,6 +365,8 @@ class CacheStats:
     evictions: int = 0
     pattern_hits: int = 0  # compacted product-list reuse (same signature)
     pattern_misses: int = 0
+    chain_hits: int = 0  # fused chain-step program reuse (sign iteration)
+    chain_misses: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -374,6 +376,8 @@ class CacheStats:
             "evictions": self.evictions,
             "pattern_hits": self.pattern_hits,
             "pattern_misses": self.pattern_misses,
+            "chain_hits": self.chain_hits,
+            "chain_misses": self.chain_misses,
         }
 
 
@@ -395,6 +399,7 @@ def clear_cache() -> None:
     _bound_cache.clear()
     _stats.hits = _stats.misses = _stats.builds = _stats.evictions = 0
     _stats.pattern_hits = _stats.pattern_misses = 0
+    _stats.chain_hits = _stats.chain_misses = 0
 
 
 # ---------------------------------------------------------------------------
@@ -585,6 +590,43 @@ def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
     raise ValueError(plan.kind)
 
 
+def build_shard_body(plan: MultiplyPlan, *, threshold: float, backend: str,
+                     stack_capacity: int | None = None,
+                     interpret: bool | None = None):
+    """The engine's raw per-shard body: ``(ab, am, an, bb, bm, bn) ->
+    (cb, cm)`` on shards, no shard_map wrapper.
+
+    Iteration chains (``core/signiter.py``) inline this into ONE enclosing
+    shard_map spanning a whole sweep — multiple multiplies plus the
+    inter-multiply algebra run per-shard with no re-partitioning between
+    them, which is what makes the fused chain step a single cheap
+    dispatch.  C always comes home in the 2D (r, c) layout (the stacked
+    plan uses its c_layout="2d" psum), so chained calls compose.
+    """
+    _stats.builds += 1
+    kw = dict(
+        threshold=threshold, backend=backend,
+        stack_capacity=stack_capacity, interpret=interpret,
+    )
+    if plan.kind == "ring":
+        from repro.core.cannon import ring_body
+
+        return ring_body(plan, **kw)
+    if plan.kind == "pull":
+        from repro.core.twofive import pull_body
+
+        return pull_body(plan, **kw)
+    if plan.kind == "stacked":
+        from repro.core.twofive import stacked_body
+
+        return stacked_body(plan, c_layout="2d", **kw)
+    if plan.kind == "gather":
+        from repro.core.gather import gather_body
+
+        return gather_body(plan, **kw)
+    raise ValueError(plan.kind)
+
+
 def get_compiled(
     mesh,
     engine: str,
@@ -649,3 +691,52 @@ def execute(a, b, mesh, engine: str, **kw):
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype, **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
+
+
+def execute_sharded(a, b, engine: str, **kw):
+    """Sharded multiply: ShardedBSM in, ShardedBSM out, no gather.
+
+    The shard_map engine bodies already operate on shards; this path hands
+    them operands that are *born* in the specs they declare, so XLA inserts
+    no resharding, and the result triple stays in the 2D home layout.
+    Keyword args are those of :func:`get_compiled` (``c_layout`` is pinned
+    to ``"2d"`` — a chain's C must come home to the same layout its next
+    multiply consumes).
+    """
+    from repro.core.bsm import ShardedBSM, block_norms
+
+    mesh = a.mesh
+    if kw.pop("c_layout", "2d") != "2d":
+        raise ValueError("sharded chains require c_layout='2d'")
+    fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
+                      c_layout="2d", **kw)
+    cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
+    return ShardedBSM(blocks=cb, mask=cm, norms=block_norms(cb), mesh=mesh)
+
+
+def get_chain_compiled(key: tuple, builder):
+    """Fused chain-step program (a whole sign-iteration sweep — or any
+    multi-multiply algebra chain), LRU-cached like the multiply programs
+    but counted separately (``chain_hits`` / ``chain_misses``): the
+    per-chain counters tell a benchmark how many sweeps of an iteration
+    reused one compiled step.
+
+    ``builder`` constructs the jitted program on a miss; program builds it
+    performs (``build_program`` / ``get_local_compiled``) are counted by
+    the ordinary ``builds`` counter, so "at most one program per distinct
+    multiply shape across a 10-sweep iteration" is assertable from
+    ``cache_stats()`` alone.
+    """
+    key = ("chain",) + tuple(key)
+    prog = _program_cache.get(key)
+    if prog is not None:
+        _stats.chain_hits += 1
+        _program_cache.move_to_end(key)
+        return prog
+    _stats.chain_misses += 1
+    prog = builder()
+    _program_cache[key] = prog
+    if len(_program_cache) > _CACHE_MAXSIZE:
+        _program_cache.popitem(last=False)
+        _stats.evictions += 1
+    return prog

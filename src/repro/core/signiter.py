@@ -7,6 +7,26 @@ Each iteration is two block-sparse multiplications with on-the-fly and
 post-multiplication filtering — exactly the workload DBCSR is built for
 (SpGEMM > 80% of CP2K linear-scaling runtime).
 
+Two execution modes (DESIGN.md §4):
+
+``fused`` (default) — the device-resident iteration engine.  The operands
+    are sharded ONCE at the chain boundary (``bsm.shard_bsm``) and the whole
+    Newton-Schulz sweep — X², post-filter, 3I − X², X·Y, post-filter, the
+    0.5 scale, residual and occupancy — compiles into ONE cached program per
+    (mesh, shape, engine, backend, thresholds), fetched through
+    ``plan.get_chain_compiled``.  Matrices, norms and the convergence
+    residual stay on the mesh between sweeps; the host syncs the residual
+    only every ``sync_every`` sweeps.  This is the paper's "never
+    redistribute" design applied across a *chain* of multiplies: DBCSR
+    keeps matrices home-resident for the whole purification (Lazzaro &
+    Hutter 2017; arXiv:1910.13555).
+
+``legacy`` — the original host-driven loop: each sweep re-enters
+    ``multiply()`` from replicated arrays (re-shard A/B, gather C), runs the
+    inter-multiply algebra as separate dispatches, and syncs the residual
+    every sweep.  Kept as the parity oracle and the benchmark baseline
+    (``benchmarks/bench_signiter.py`` measures the dispatch-overhead gap).
+
 ``density_matrix`` then evaluates P = 1/2 (I - sign(mu I - H)) — the
 simplified (S = I, orthonormal basis) form of paper Eq. (1); the eigenvalue
 counting identity trace(P) = #{eigenvalues < mu} is used as the convergence
@@ -14,12 +34,16 @@ observable in tests and examples.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import bsm as B
+from repro.core import plan as plan_mod
+from repro.core.bsm import block_norms
 from repro.core.engine import multiply
+from repro.core.local_mm import local_filtered_mm
 
 
 @dataclass
@@ -29,15 +53,220 @@ class SignIterStats:
     residual: float
     occupancy_trace: list[float]
     multiplications: int
+    residual_trace: list[float] = field(default_factory=list)
+    mode: str = "legacy"
+    sync_every: int = 1
+    host_syncs: int = 0  # device->host residual syncs (fused: ~it/sync_every)
 
 
-def _scale_to_unit_spectrum(x: B.BlockSparseMatrix) -> B.BlockSparseMatrix:
+def _scale_any(x, s):
+    """s * x for either matrix container (derived norms, no recompute)."""
+    return x.scale(s) if isinstance(x, B.ShardedBSM) else B.scale(x, s)
+
+
+def _scale_to_unit_spectrum(x):
     """Scale X0 so its spectrum lies in [-1, 1] (Frobenius bound)."""
     nrm = x.frobenius_norm()
-    return B.scale(x, 1.0 / jnp.maximum(nrm, 1e-30))
+    return _scale_any(x, 1.0 / jnp.maximum(nrm, 1e-30))
 
 
-def sign_iteration(
+# ---------------------------------------------------------------------------
+# the fused device-resident sweep
+# ---------------------------------------------------------------------------
+
+
+def _make_sweep(mm, dtype, filter_eps: float, *, total_blocks: int,
+                psum_axes=None):
+    """One whole Newton-Schulz sweep as a single traceable function.
+
+    ``mm(ab, am, an, bb, bm, bn) -> (cb, cm)`` is the multiply body — the
+    engine's raw per-shard body (``plan.build_shard_body``) when the sweep
+    runs inside one enclosing shard_map, or ``local_filtered_mm`` on a
+    single device.  Everything between the two multiplies is shard-local
+    algebra with incrementally-updated norms; the residual and occupancy
+    leave as device scalars via ``psum_axes`` all-reduces — never a gather
+    of the matrix.
+    """
+    eps = float(filter_eps)
+
+    def post_filter(cb, cm, cn):
+        if eps <= 0.0:
+            return cb, cm, cn
+        keep = cm & (cn > eps)
+        return (
+            cb * keep[:, :, None, None].astype(cb.dtype),
+            keep,
+            jnp.where(keep, cn, 0.0),
+        )
+
+    def sweep(xb, xm, xn, ib, im):
+        # X^2 (multiply 1) + post-filter, mirroring multiply(filter_eps=...)
+        x2b, x2m = mm(xb, xm, xn, xb, xm, xn)
+        x2n = block_norms(x2b)
+        x2b, x2m, x2n = post_filter(x2b, x2m, x2n)
+        # Y = 3I - X^2: elementwise on the shards, norms from the new blocks
+        yb = ib * jnp.asarray(3.0, dtype) - x2b
+        ym = im | x2m
+        yn = block_norms(yb)
+        # X . Y (multiply 2) + post-filter + the 1/2 scale (derived norms)
+        cb, cm = mm(xb, xm, xn, yb, ym, yn)
+        cn = block_norms(cb)
+        cb, cm, cn = post_filter(cb, cm, cn)
+        cb = cb * jnp.asarray(0.5, dtype)
+        cn = cn * jnp.float32(0.5)
+        # convergence: || X_{n+1} - X_n ||_F / || X_{n+1} ||_F — partial
+        # sums per shard, all three scalars in ONE stacked all-reduce
+        diff = (cb - xb).astype(jnp.float32)
+        partials = jnp.stack([
+            jnp.sum(jnp.square(diff)),
+            jnp.sum(jnp.square(cn)),
+            jnp.sum(cm.astype(jnp.float32)),
+        ])
+        if psum_axes is not None:
+            partials = jax.lax.psum(partials, psum_axes)
+        num_sq, den_sq, occ_cnt = partials
+        residual = jnp.sqrt(num_sq) / jnp.maximum(jnp.sqrt(den_sq), 1e-30)
+        occupancy = occ_cnt / total_blocks
+        return cb, cm, cn, residual, occupancy
+
+    return sweep
+
+
+def _sweep_key(mesh, engine, nb_r, nb_c, bs_r, bs_c, dtype, threshold,
+               filter_eps, backend, l, stack_capacity, interpret):
+    return (
+        "signiter", mesh, engine, nb_r, nb_c, bs_r, bs_c,
+        jnp.dtype(dtype).name, float(threshold), float(filter_eps),
+        backend, l, stack_capacity, interpret,
+    )
+
+
+def get_sweep_program(
+    x,
+    mesh,
+    *,
+    engine: str,
+    threshold: float,
+    filter_eps: float,
+    backend: str,
+    l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+):
+    """The compiled fused sweep for (mesh, shape, engine, backend, ...),
+    cached in the plan layer's program cache (``plan.get_chain_compiled``,
+    counted by ``chain_hits``/``chain_misses``).
+
+    ``mesh=None`` builds the single-device sweep around
+    ``local_filtered_mm``.  Otherwise the WHOLE sweep is one shard_map
+    around the engine's raw per-shard body (``plan.build_shard_body``):
+    both multiplies, the inter-multiply algebra and the residual partials
+    run per-shard with no re-partitioning between them, so one sweep is
+    one dispatch of one SPMD program — and one program build per distinct
+    multiply shape, shared by both multiplies.
+    """
+    if backend == "auto":
+        # auto walks the concrete pattern on the host; inside the fused
+        # (traced) sweep there is no concrete pattern — dense einsum it is
+        backend = "jnp"
+    if backend == "pallas" and interpret is None:
+        from repro.kernels.ops import _default_interpret
+
+        interpret = _default_interpret()
+    key = _sweep_key(mesh, engine, x.nb_r, x.nb_c, x.bs_r, x.bs_c, x.dtype,
+                     threshold, filter_eps, backend, l, stack_capacity,
+                     interpret)
+    mm_kw = dict(threshold=threshold, backend=backend,
+                 stack_capacity=stack_capacity, interpret=interpret)
+    total_blocks = x.nb_r * x.nb_c
+
+    def builder():
+        if mesh is None:
+            def mm(*args):
+                return local_filtered_mm(*args, **mm_kw)
+
+            return jax.jit(_make_sweep(mm, x.dtype, filter_eps,
+                                       total_blocks=total_blocks))
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        plan = plan_mod.plan_multiply(mesh, engine, l)
+        plan.validate_blocks(x.nb_r, x.nb_c)
+        mm = plan_mod.build_shard_body(plan, **mm_kw)
+        sweep = _make_sweep(mm, x.dtype, filter_eps,
+                            total_blocks=total_blocks, psum_axes=("r", "c"))
+        blk = P("r", "c", None, None)
+        m2 = P("r", "c")
+        fn = shard_map(
+            sweep,
+            mesh=mesh,
+            # check_vma=False for the same reason as the engine executors
+            # (oracle-tested outputs; pallas bodies carry no vma)
+            check_vma=False,
+            in_specs=(blk, m2, m2, blk, m2),
+            out_specs=(blk, m2, m2, P(), P()),
+        )
+        return jax.jit(fn)
+
+    return plan_mod.get_chain_compiled(key, builder)
+
+
+class _ChainShape:
+    """Abstract operand of a chain program: just the key fields of
+    ``get_sweep_program``, no block data."""
+
+    def __init__(self, nb: int, bs, dtype):
+        self.nb_r = self.nb_c = nb
+        self.bs_r, self.bs_c = B._block_shape(bs)
+        self.dtype = jnp.dtype(dtype)
+
+
+def lower_sweep(
+    mesh,
+    nb: int,
+    bs: int,
+    *,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    backend: str = "jnp",
+    dtype=jnp.float32,
+    l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+):
+    """Lower (without executing) one fused sweep for HLO inspection — the
+    proof that a sweep performs no global gather: X enters and leaves in
+    the 2D home layout, so the only collectives are the engine's panel
+    moves and the scalar residual/occupancy all-reduces."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    shape = _ChainShape(nb, bs, dtype)
+    fn = get_sweep_program(shape, mesh, engine=engine, threshold=threshold,
+                           filter_eps=filter_eps, backend=backend, l=l,
+                           stack_capacity=stack_capacity, interpret=interpret)
+    bs_r, bs_c = shape.bs_r, shape.bs_c
+    if mesh is None:
+        blk = jax.ShapeDtypeStruct((nb, nb, bs_r, bs_c), dtype)
+        m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)
+        m2f = jax.ShapeDtypeStruct((nb, nb), jnp.float32)
+    else:
+        s_blk = NamedSharding(mesh, P("r", "c", None, None))
+        s_m2 = NamedSharding(mesh, P("r", "c"))
+        blk = jax.ShapeDtypeStruct((nb, nb, bs_r, bs_c), dtype, sharding=s_blk)
+        m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_, sharding=s_m2)
+        m2f = jax.ShapeDtypeStruct((nb, nb), jnp.float32, sharding=s_m2)
+    return fn.lower(blk, m2b, m2f, blk, m2b)
+
+
+# ---------------------------------------------------------------------------
+# iteration drivers
+# ---------------------------------------------------------------------------
+
+
+def sign_iteration_legacy(
     x0: B.BlockSparseMatrix,
     *,
     mesh=None,
@@ -47,31 +276,40 @@ def sign_iteration(
     max_iter: int = 50,
     tol: float = 1e-6,
     scale_input: bool = True,
+    backend: str = "jnp",
 ) -> tuple[B.BlockSparseMatrix, SignIterStats]:
-    """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0)."""
+    """The host-driven per-op loop (parity oracle / benchmark baseline):
+    two ``multiply()`` re-entries per sweep from replicated arrays, eager
+    inter-multiply algebra, a host residual sync every sweep.  With a
+    compacted ``backend`` every multiply walks X's concrete pattern — the
+    pattern cache (``plan.cache_stats()['pattern_hits']``) re-hits as the
+    iteration's sparsity structure stabilizes."""
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     x = _scale_to_unit_spectrum(x0) if scale_input else x0
-    occ = []
+    occ, res_trace = [], []
     n_mults = 0
     converged = False
     residual = float("inf")
     it = 0
     for it in range(1, max_iter + 1):
         x2 = multiply(
-            x, x, mesh, engine=engine, threshold=threshold, filter_eps=filter_eps
+            x, x, mesh, engine=engine, threshold=threshold,
+            filter_eps=filter_eps, backend=backend,
         )
         n_mults += 1
         # 3I - X^2
         y = B.add(B.scale(x2, -1.0), B.scale(ident, 3.0))
         xn = multiply(
-            x, y, mesh, engine=engine, threshold=threshold, filter_eps=filter_eps
+            x, y, mesh, engine=engine, threshold=threshold,
+            filter_eps=filter_eps, backend=backend,
         )
         xn = B.scale(xn, 0.5)
         n_mults += 1
         # convergence: || X_{n+1} - X_n ||_F / || X_n ||_F
         diff = B.add(xn, B.scale(x, -1.0))
         residual = float(diff.frobenius_norm() / jnp.maximum(xn.frobenius_norm(), 1e-30))
+        res_trace.append(residual)
         occ.append(float(xn.occupancy()))
         x = xn
         if residual < tol:
@@ -83,12 +321,129 @@ def sign_iteration(
         residual=residual,
         occupancy_trace=occ,
         multiplications=n_mults,
+        residual_trace=res_trace,
+        mode="legacy",
+        sync_every=1,
+        host_syncs=it,
     )
     return x, stats
 
 
+def sign_iteration(
+    x0: B.BlockSparseMatrix | B.ShardedBSM,
+    *,
+    mesh=None,
+    engine: str = "twofive",
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    max_iter: int = 50,
+    tol: float = 1e-6,
+    scale_input: bool = True,
+    mode: str = "fused",
+    sync_every: int = 1,
+    backend: str = "jnp",
+    l: int | None = None,
+    stack_capacity: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
+    """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0).
+
+    mode       — "fused" (device-resident sweep, default) or "legacy"
+                 (per-op host loop; parity oracle).
+    sync_every — fused only: host-sync the device-resident residual every
+                 k sweeps instead of every multiply.  With k > 1 the loop
+                 may run up to k-1 sweeps past convergence (the sign fixed
+                 point is stable, so extra sweeps only polish); residual
+                 and occupancy traces stay complete either way.
+    backend    — local stage for the fused sweep ("auto" degrades to
+                 "jnp": the sweep is traced, there is no concrete pattern
+                 to compact; "stacks"/"pallas" take ``stack_capacity`` as
+                 their static product bound, full cube when omitted).
+
+    A ShardedBSM ``x0`` stays sharded end-to-end and the result is a
+    ShardedBSM; a BlockSparseMatrix with ``mesh`` given is sharded once at
+    entry and gathered once at exit (the chain boundaries).
+    """
+    if mode == "legacy":
+        if isinstance(x0, B.ShardedBSM):
+            raise TypeError("legacy mode operates on replicated matrices; "
+                            "unshard first (bsm.unshard_bsm)")
+        return sign_iteration_legacy(
+            x0, mesh=mesh, engine=engine, threshold=threshold,
+            filter_eps=filter_eps, max_iter=max_iter, tol=tol,
+            scale_input=scale_input, backend=backend,
+        )
+    if mode != "fused":
+        raise ValueError(f"unknown mode {mode!r}; 'fused' or 'legacy'")
+    if sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+
+    sharded_in = isinstance(x0, B.ShardedBSM)
+    if sharded_in:
+        if mesh is not None and mesh is not x0.mesh and mesh != x0.mesh:
+            raise ValueError("mesh argument conflicts with operand mesh")
+        mesh = x0.mesh
+    nb, bs = x0.nb_r, x0.bs_r
+    ident = B.identity(nb, bs, x0.dtype)
+    if mesh is not None:
+        ident = B.shard_bsm(ident, mesh)
+        x = x0 if sharded_in else B.shard_bsm(x0, mesh)
+    else:
+        x = x0
+    x = _scale_to_unit_spectrum(x) if scale_input else x
+
+    sweep = None
+    xb, xm, xn = x.blocks, x.mask, x.norms
+    ib, im = ident.blocks, ident.mask
+    occ_trace: list[float] = []
+    res_trace: list[float] = []
+    pending: list[tuple] = []
+    converged = False
+    syncs = 0
+    it = 0
+    for it in range(1, max_iter + 1):
+        # fetched per sweep: the chain counters in plan.cache_stats() then
+        # record how many sweeps of this iteration reused one program
+        sweep = get_sweep_program(
+            x, mesh, engine=engine, threshold=threshold,
+            filter_eps=filter_eps, backend=backend, l=l,
+            stack_capacity=stack_capacity, interpret=interpret,
+        )
+        xb, xm, xn, res_d, occ_d = sweep(xb, xm, xn, ib, im)
+        pending.append((res_d, occ_d))
+        if it % sync_every == 0 or it == max_iter:
+            syncs += 1
+            for res_d, occ_d in pending:
+                r = float(res_d)
+                res_trace.append(r)
+                occ_trace.append(float(occ_d))
+                if r < tol:
+                    converged = True
+            pending = []
+            if converged:
+                break
+
+    if mesh is not None:
+        out = B.ShardedBSM(blocks=xb, mask=xm, norms=xn, mesh=mesh)
+        result = out if sharded_in else out.unshard()
+    else:
+        result = B.BlockSparseMatrix(blocks=xb, mask=xm, norms=xn)
+    stats = SignIterStats(
+        iterations=it,
+        converged=converged,
+        residual=res_trace[-1] if res_trace else float("inf"),
+        occupancy_trace=occ_trace,
+        multiplications=2 * it,
+        residual_trace=res_trace,
+        mode="fused",
+        sync_every=sync_every,
+        host_syncs=syncs,
+    )
+    return result, stats
+
+
 def density_matrix(
-    h: B.BlockSparseMatrix,
+    h: B.BlockSparseMatrix | B.ShardedBSM,
     mu: float,
     *,
     mesh=None,
@@ -97,11 +452,23 @@ def density_matrix(
     filter_eps: float = 0.0,
     max_iter: int = 60,
     tol: float = 1e-6,
-) -> tuple[B.BlockSparseMatrix, SignIterStats]:
-    """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I)."""
+    mode: str = "fused",
+    sync_every: int = 1,
+    backend: str = "jnp",
+) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
+    """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I).
+
+    The shift, sign iteration and projector assembly all run where ``h``
+    lives: a ShardedBSM Hamiltonian yields a ShardedBSM density matrix
+    with no intermediate gather (derived-norm algebra at both ends).
+    """
     nb, bs = h.nb_r, h.bs_r
     ident = B.identity(nb, bs, h.dtype)
-    shifted = B.add(h, B.scale(ident, -mu))
+    if isinstance(h, B.ShardedBSM):
+        ident = B.shard_bsm(ident, h.mesh)
+        shifted = ident.scale(-mu).add(h)
+    else:
+        shifted = B.add(h, B.scale(ident, -mu))
     sgn, stats = sign_iteration(
         shifted,
         mesh=mesh,
@@ -110,12 +477,20 @@ def density_matrix(
         filter_eps=filter_eps,
         max_iter=max_iter,
         tol=tol,
+        mode=mode,
+        sync_every=sync_every,
+        backend=backend,
     )
-    p = B.scale(B.add(ident, B.scale(sgn, -1.0)), 0.5)
+    if isinstance(sgn, B.ShardedBSM):
+        p = sgn.scale(-1.0).add(ident).scale(0.5)
+    else:
+        p = B.scale(B.add(ident, B.scale(sgn, -1.0)), 0.5)
     return p, stats
 
 
-def trace(m: B.BlockSparseMatrix) -> jnp.ndarray:
+def trace(m: B.BlockSparseMatrix | B.ShardedBSM) -> jnp.ndarray:
+    if isinstance(m, B.ShardedBSM):
+        return m.trace()
     diag_blocks = m.blocks[jnp.arange(m.nb_r), jnp.arange(m.nb_c)]
     diag_mask = m.mask[jnp.arange(m.nb_r), jnp.arange(m.nb_c)]
     tr = jnp.trace(diag_blocks, axis1=-2, axis2=-1)

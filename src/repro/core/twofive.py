@@ -43,7 +43,7 @@ def _permute(arrs, axes, pairs):
     return tuple(lax.ppermute(x, axes, list(pairs)) for x in arrs)
 
 
-def pull_executor(
+def pull_body(
     plan,
     *,
     threshold: float = 0.0,
@@ -51,7 +51,9 @@ def pull_executor(
     stack_capacity: int | None = None,
     interpret: bool | None = None,
 ):
-    """Algorithm 2 as static pulls on the 2D (r, c) mesh (any valid grid)."""
+    """The per-shard Algorithm-2 pull body (shards in, C shard out);
+    exposed so iteration chains can inline it into one enclosing
+    shard_map (``core/signiter.py``)."""
     mm_kw = dict(
         threshold=threshold, backend=backend,
         stack_capacity=stack_capacity, interpret=interpret,
@@ -59,8 +61,6 @@ def pull_executor(
     topo = plan.topo
     l_r, l_c, depth, s = topo.l_r, topo.l_c, topo.l, topo.side3d
     axes = plan.axes
-    blk = P("r", "c", None, None)
-    m2 = P("r", "c")
 
     def body(ab, am, an, bb, bm, bn):
         nr, nc = ab.shape[0], bb.shape[1]
@@ -143,8 +143,15 @@ def pull_executor(
             total_m = total_m | rm
         return total_b, total_m
 
+    return body
+
+
+def pull_executor(plan, **kw):
+    """Algorithm 2 as static pulls on the 2D (r, c) mesh (any valid grid)."""
+    blk = P("r", "c", None, None)
+    m2 = P("r", "c")
     return shard_map(
-        body,
+        pull_body(plan, **kw),
         mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are
@@ -155,7 +162,7 @@ def pull_executor(
     )
 
 
-def stacked_executor(
+def stacked_body(
     plan,
     *,
     threshold: float = 0.0,
@@ -164,29 +171,13 @@ def stacked_executor(
     stack_capacity: int | None = None,
     interpret: bool | None = None,
 ):
-    """The (l, r, c)-mesh 2.5D executor.
-
-    c_layout:
-      "2d"      — C replicated over l (psum), sharded (r, c): the paper's
-                  layout (C lives on the 2D grid).
-      "scatter" — C reduce-scattered over l along block rows: keeps the
-                  result distributed over all P devices (cheaper reduction,
-                  (L-1)/L instead of 2(L-1)/L traffic).
-    """
+    """The per-shard (l, r, c)-mesh 2.5D body (exposed for chain fusion,
+    like ``pull_body``); with c_layout="2d" the returned C shard is
+    replicated over ``l``, so chained multiplies compose."""
     ticks = plan.ticks
     groups = tuple(plan.layer_groups)
     uneven = len(set(groups)) > 1
     axes = plan.axes
-
-    blk_in = P("r", "c", None, None)  # replicated over the unmentioned 'l'
-    m2_in = P("r", "c")
-    if c_layout == "2d":
-        blk_out, m2_out = P("r", "c", None, None), P("r", "c")
-    elif c_layout == "scatter":
-        # psum_scatter splits each (r)-row panel over l: r-major, l-minor
-        blk_out, m2_out = P(("r", "l"), "c", None, None), P(("r", "l"), "c")
-    else:
-        raise ValueError(f"unknown c_layout {c_layout!r}")
 
     def body(ab, am, an, bb, bm, bn):
         # pre-shift with per-layer chunk offset: A_ij <- A_{i, j+i+start_l},
@@ -240,8 +231,30 @@ def stacked_executor(
         cmi = lax.psum_scatter(cmi, "l", scatter_dimension=0, tiled=True)
         return cb, cmi > 0
 
+    return body
+
+
+def stacked_executor(plan, *, c_layout: str = "2d", **kw):
+    """The (l, r, c)-mesh 2.5D executor.
+
+    c_layout:
+      "2d"      — C replicated over l (psum), sharded (r, c): the paper's
+                  layout (C lives on the 2D grid).
+      "scatter" — C reduce-scattered over l along block rows: keeps the
+                  result distributed over all P devices (cheaper reduction,
+                  (L-1)/L instead of 2(L-1)/L traffic).
+    """
+    blk_in = P("r", "c", None, None)  # replicated over the unmentioned 'l'
+    m2_in = P("r", "c")
+    if c_layout == "2d":
+        blk_out, m2_out = P("r", "c", None, None), P("r", "c")
+    elif c_layout == "scatter":
+        # psum_scatter splits each (r)-row panel over l: r-major, l-minor
+        blk_out, m2_out = P(("r", "l"), "c", None, None), P(("r", "l"), "c")
+    else:
+        raise ValueError(f"unknown c_layout {c_layout!r}")
     return shard_map(
-        body,
+        stacked_body(plan, c_layout=c_layout, **kw),
         mesh=plan.mesh,
         # check_vma=False: the pallas backend's pallas_call builds plain
         # ShapeDtypeStructs (no vma annotation); engine outputs are

@@ -213,12 +213,129 @@ def check_plan_cache():
     steady = sorted(times)[len(times) // 2]
     assert steady < first, (first, steady)
 
-    # the driving hot path: a sign-iteration run shares one program
+    # the driving hot path, legacy per-op loop: every multiply re-enters
+    # the plan cache and shares one program
     plan_mod.clear_cache()
-    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=4)
+    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=4,
+                           mode="legacy")
     s3 = plan_mod.cache_stats()
     assert s3["builds"] == 1 and s3["hits"] == st.multiplications - 1, s3
+    # fused mode: the whole sweep is ONE chain program, fetched per sweep
+    plan_mod.clear_cache()
+    _, st = sign_iteration(a, mesh=mesh, engine="twofive", max_iter=4)
+    s4 = plan_mod.cache_stats()
+    assert s4["builds"] == 1, s4  # one multiply body for both multiplies
+    assert s4["chain_misses"] == 1, s4
+    assert s4["chain_hits"] == st.iterations - 1, (s4, st.iterations)
     print(f"plan_cache OK first={first:.3f}s steady={steady:.4f}s")
+
+
+def check_signiter_sharded():
+    """The device-resident purification chain on a distributed mesh:
+
+    * fused sweep == legacy per-op loop (residual trace, occupancy trace,
+      converged X to 1e-5) across engines / thresholds / backends;
+    * a 10-sweep iteration compiles AT MOST ONE program per distinct
+      multiply shape (plan.cache_stats: builds == 1, one chain miss,
+      sweeps-1 chain hits);
+    * the fused step's compiled HLO performs no global gather — X enters
+      and leaves in the 2D home layout (onesided/twofive: zero all-gather
+      ops; the collectives are the engine's ppermutes and the scalar
+      residual all-reduce);
+    * ShardedBSM stays sharded end-to-end (C in the home layout) and
+      density_matrix on a ShardedBSM H returns a ShardedBSM P.
+    """
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.signiter import (
+        density_matrix,
+        lower_sweep,
+        sign_iteration,
+        sign_iteration_legacy,
+        trace,
+    )
+    from repro.launch.mesh import make_spgemm_mesh
+
+    x = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=0.6,
+                     pattern="banded", symmetric=True)
+    mesh2 = make_spgemm_mesh(p=2)
+    mesh3 = make_spgemm_mesh(p=2, l=2)
+
+    for thr, eps in ((0.0, 0.0), (1e-7, 1e-6)):
+        ref, st_ref = sign_iteration_legacy(
+            x, mesh=mesh2, engine="onesided", threshold=thr,
+            filter_eps=eps, max_iter=60, tol=1e-6)
+        assert st_ref.converged
+        rd = np.asarray(ref.to_dense())
+        for engine, mesh, backend in (
+            ("onesided", mesh2, "jnp"),
+            ("gather", mesh2, "jnp"),
+            ("cannon", mesh2, "jnp"),
+            ("twofive", mesh3, "jnp"),
+            ("onesided", mesh2, "stacks"),
+        ):
+            s, st = sign_iteration(
+                x, mesh=mesh, engine=engine, threshold=thr, filter_eps=eps,
+                max_iter=60, tol=1e-6, mode="fused", backend=backend)
+            tag = f"{engine}/{backend} t={thr}"
+            assert st.converged, tag
+            assert st.iterations == st_ref.iterations, tag
+            np.testing.assert_allclose(
+                st.residual_trace, st_ref.residual_trace,
+                rtol=1e-4, atol=1e-7, err_msg=tag)
+            np.testing.assert_allclose(
+                st.occupancy_trace, st_ref.occupancy_trace,
+                atol=1e-7, err_msg=tag)
+            np.testing.assert_allclose(
+                np.asarray(s.to_dense()), rd, rtol=1e-5, atol=1e-5,
+                err_msg=tag)
+
+    # --- cache: 10 sweeps, at most one program per distinct multiply shape
+    plan_mod.clear_cache()
+    _, st = sign_iteration(x, mesh=mesh2, engine="onesided",
+                           threshold=1e-7, filter_eps=1e-6,
+                           max_iter=10, tol=0.0, sync_every=5)
+    stats = plan_mod.cache_stats()
+    assert st.iterations == 10 and st.host_syncs == 2, st
+    assert stats["builds"] == 1, stats
+    assert stats["chain_misses"] == 1, stats
+    assert stats["chain_hits"] == 9, stats
+    # second chain on the same key: pure chain-cache hits, no new build
+    sign_iteration(x, mesh=mesh2, engine="onesided", threshold=1e-7,
+                   filter_eps=1e-6, max_iter=5, tol=0.0)
+    s2 = plan_mod.cache_stats()
+    assert s2["builds"] == 1 and s2["chain_misses"] == 1, s2
+
+    # --- no global gather in the fused step (jaxpr/HLO of one sweep)
+    for engine, mesh in (("onesided", mesh2), ("twofive", mesh3)):
+        hlo = lower_sweep(mesh, 8, 8, engine=engine, threshold=1e-7,
+                          filter_eps=1e-6).compile().as_text()
+        n_ag = sum("all-gather" in ln for ln in hlo.splitlines())
+        assert n_ag == 0, (engine, n_ag)
+
+    # --- ShardedBSM end-to-end: sharded in, sharded out, home layout
+    from jax.sharding import PartitionSpec as P
+
+    hx = B.shard_bsm(x, mesh2)
+    s, st = sign_iteration(hx, engine="onesided", threshold=1e-7,
+                           filter_eps=1e-6, max_iter=60, tol=1e-6)
+    assert isinstance(s, B.ShardedBSM)
+    assert s.blocks.sharding.spec == P("r", "c", None, None), (
+        s.blocks.sharding)
+    assert s.mask.sharding.spec == P("r", "c"), s.mask.sharding
+    ref, _ = sign_iteration_legacy(x, mesh=mesh2, engine="onesided",
+                                   threshold=1e-7, filter_eps=1e-6,
+                                   max_iter=60, tol=1e-6)
+    np.testing.assert_allclose(np.asarray(s.to_dense()),
+                               np.asarray(ref.to_dense()),
+                               rtol=1e-5, atol=1e-5)
+    p, stp = density_matrix(hx, 0.0, engine="onesided", threshold=1e-9,
+                            filter_eps=1e-8, max_iter=80, tol=1e-6)
+    assert isinstance(p, B.ShardedBSM) and stp.converged
+    dense = np.asarray(x.to_dense(), np.float64)
+    w = np.linalg.eigvalsh(dense)
+    assert abs(float(trace(p)) - int((w < 0.0).sum())) < 0.05
+    print("signiter_sharded OK")
 
 
 def check_comm_volume():
@@ -530,6 +647,7 @@ CHECKS = {
     "engines_rectangular": check_engines_rectangular,
     "plan_rectangular": check_plan_rectangular,
     "plan_cache": check_plan_cache,
+    "signiter_sharded": check_signiter_sharded,
     "comm_volume": check_comm_volume,
     "train_steps": check_train_steps,
     "serve_steps": check_serve_steps,

@@ -61,6 +61,13 @@ def test_plan_cache_no_relower():
     assert "plan_cache OK" in out
 
 
+def test_signiter_sharded_device_resident():
+    """Fused device-resident purification == legacy loop on a mesh; one
+    program per multiply shape; no global gather in the fused step."""
+    out = _run("signiter_sharded")
+    assert "signiter_sharded OK" in out
+
+
 def test_comm_volume_matches_paper_model():
     out = _run("comm_volume", "spgemm_scaling")
     assert "comm_volume OK" in out and "spgemm_scaling OK" in out

@@ -73,3 +73,90 @@ def test_two_multiplications_per_iteration():
     m = _sym_bsm(jax.random.key(4))
     _, stats = sign_iteration(m, max_iter=7, tol=0.0)
     assert stats.multiplications == 2 * stats.iterations
+
+
+# ---------------------------------------------------------------------------
+# fused device-resident sweep vs the legacy per-op loop (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "stacks"])
+@pytest.mark.parametrize("thr,eps", [(0.0, 0.0), (1e-7, 1e-6), (1e-4, 1e-4)])
+def test_fused_matches_legacy(backend, thr, eps):
+    """Same residual trace, occupancy trace and converged X to 1e-5."""
+    m = _sym_bsm(jax.random.key(5), nb=4, bs=6, occupancy=0.5)
+    s_leg, st_leg = sign_iteration(
+        m, threshold=thr, filter_eps=eps, max_iter=80, tol=1e-6,
+        mode="legacy")
+    s_fus, st_fus = sign_iteration(
+        m, threshold=thr, filter_eps=eps, max_iter=80, tol=1e-6,
+        mode="fused", backend=backend)
+    assert st_leg.converged and st_fus.converged
+    assert st_fus.iterations == st_leg.iterations
+    assert st_fus.multiplications == st_leg.multiplications
+    np.testing.assert_allclose(
+        st_fus.residual_trace, st_leg.residual_trace, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(
+        st_fus.occupancy_trace, st_leg.occupancy_trace, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(s_fus.to_dense()), np.asarray(s_leg.to_dense()),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_sync_every_converges_to_same_sign():
+    """sync_every > 1 trades host syncs for (at most k-1) extra polishing
+    sweeps; the converged sign matrix is unchanged."""
+    m = _sym_bsm(jax.random.key(6))
+    s1, st1 = sign_iteration(m, max_iter=80, tol=1e-6, sync_every=1)
+    s5, st5 = sign_iteration(m, max_iter=80, tol=1e-6, sync_every=5)
+    assert st1.converged and st5.converged
+    assert st1.iterations <= st5.iterations <= st1.iterations + 4
+    assert st5.host_syncs <= -(-st5.iterations // 5) + 1
+    assert st5.host_syncs < st5.iterations
+    # traces are complete despite the batched syncs
+    assert len(st5.residual_trace) == st5.iterations
+    np.testing.assert_allclose(
+        np.asarray(s5.to_dense()), np.asarray(s1.to_dense()), atol=1e-5)
+
+
+def test_fused_density_matrix_counts_states():
+    m = _sym_bsm(jax.random.key(7), nb=4, bs=6)
+    dense = np.asarray(m.to_dense(), np.float64)
+    w = np.linalg.eigvalsh(dense)
+    mu = float(np.median(w)) + 1e-3
+    p, stats = density_matrix(m, mu, max_iter=100, tol=1e-6,
+                              mode="fused", sync_every=3)
+    assert stats.converged and stats.mode == "fused"
+    assert float(trace(p)) == pytest.approx(int((w < mu).sum()), abs=1e-2)
+
+
+def test_pattern_cache_rehits_on_evolving_x():
+    """Per-chain pattern counters: the legacy/compacted path walks X's
+    concrete pattern every multiply; as the iteration's sparsity structure
+    stabilizes, the walks become pattern-cache re-hits (and the capacity
+    buckets keep the compiled-program count far below the multiply
+    count)."""
+    from repro.core import plan as plan_mod
+
+    m = _sym_bsm(jax.random.key(9), nb=4, bs=6, occupancy=0.5)
+    plan_mod.clear_cache()
+    _, st = sign_iteration(m, threshold=1e-6, filter_eps=1e-6, max_iter=80,
+                           tol=1e-6, mode="legacy", backend="stacks")
+    stats = plan_mod.cache_stats()
+    assert st.converged
+    # every multiply compacted a pattern; most were repeats of an earlier
+    # sweep's structure
+    walks = stats["pattern_hits"] + stats["pattern_misses"]
+    assert walks >= st.multiplications, (stats, st.multiplications)
+    assert stats["pattern_hits"] > st.multiplications // 2, (
+        stats, st.multiplications)
+    # capacity bucketing: far fewer compiled local programs than multiplies
+    assert stats["builds"] < st.multiplications // 2, stats
+
+
+def test_fused_rejects_bad_args():
+    m = _sym_bsm(jax.random.key(8))
+    with pytest.raises(ValueError):
+        sign_iteration(m, mode="turbo")
+    with pytest.raises(ValueError):
+        sign_iteration(m, sync_every=0)
