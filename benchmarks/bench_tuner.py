@@ -1,0 +1,197 @@
+"""Autotuner benchmark: engine="auto" vs the static (engine, L) oracle
+on the application-pattern corpus.
+
+The tuning PR's headline numbers, on CP2K-shaped inputs (banded DFT
+chain, exponential decay, Zipf hub rows — ``repro.tuner.corpus``):
+
+  * **oracle match** — the tuner's pick must land within 10% of the
+    measured-best candidate on EVERY corpus entry (same candidate, or a
+    statistical tie);
+  * **worst-case avoidance** — on at least one entry the worst static
+    ``(engine, L)`` choice (what a hardcoding caller could have shipped)
+    must cost >= 1.2x the tuned choice: this is the paper's point that
+    the winning variant is workload-dependent, so a fixed choice loses
+    somewhere;
+  * **warm-database resolution** — re-resolving every entry with the
+    persisted tuning DB performs ZERO timed trials
+    (``plan.cache_stats()['tuner_trials'] == 0``).
+
+Results go to BENCH_tuner.json (third CI perf-trajectory series) and the
+measured winners to the tuning-DB file (uploaded as a CI artifact, the
+warm-start for later runs).
+
+    python benchmarks/bench_tuner.py [--smoke] [--out BENCH_tuner.json]
+                                     [--db tuning_db.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro import tuner  # noqa: E402
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.engine import multiply, multiply_reference  # noqa: E402
+from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
+from repro.tuner.corpus import corpus  # noqa: E402
+from repro.tuner.measure import measure_candidates  # noqa: E402
+from repro.tuner.model import enumerate_candidates  # noqa: E402
+
+THRESHOLD = 1e-6
+
+
+def bench_entry(entry, mesh, reps: int, db_path: str) -> dict:
+    # fresh plan-layer state per entry, then ONE warm world for both the
+    # oracle table and the tuner's own trials: comparing a cold-compile
+    # measurement against a warm one would only measure jit state
+    plan_mod.clear_cache()
+    tuner.set_default_db(db_path)
+    a, b = entry.build()
+    feats = tuner.featurize(a, b, THRESHOLD)
+    am, bm = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
+    ok = am[:, :, None] & bm[None, :, :]
+
+    # measured oracle over the full candidate space: two passes, min-
+    # merged (the first also compiles and warms every program the tuner
+    # will re-time; the min filters one-off scheduler noise)
+    cands = enumerate_candidates(mesh, feats, ok=ok)
+    table: dict[str, float] = {}
+    for _ in range(2):
+        trials = measure_candidates(a, b, mesh, cands, threshold=THRESHOLD,
+                                    reps=reps)
+        for t in trials:
+            if t.ok:
+                table[t.candidate.label] = min(
+                    t.seconds, table.get(t.candidate.label, float("inf")))
+    # the tuner's own resolution (fresh decision, full candidate space,
+    # recorded into the DB for the warm phase)
+    db = tuner.get_default_db()
+    keys_before = set(db.records)
+    before = plan_mod.cache_stats()
+    dec = tuner.autotune(a, b, mesh, threshold=THRESHOLD,
+                         top_k=len(cands), reps=reps)
+    stats = plan_mod.cache_stats()
+    auto_label = dec.label.split("[")[0]
+    # the tuner's trials (persisted in its DB record) are one more
+    # measurement pass over the same warm programs — min-merge them so
+    # both sides of the oracle comparison use the best available estimate
+    # (no new record = a bucket-collision DB hit: nothing to merge)
+    for key in set(db.records) - keys_before:
+        for t in db.records[key]["trials"]:
+            if not t["error"] and t["label"] in table:
+                table[t["label"]] = min(table[t["label"]], t["seconds"])
+    best_label = min(table, key=table.get)
+    # the static oracle is over (engine, L) with the historical default
+    # local backend — exactly the choice a hardcoding caller ships
+    static = {lab: s for lab, s in table.items() if lab.endswith("/jnp")}
+    worst_static_label = max(static, key=static.get)
+    auto_s = table[auto_label]
+
+    # correctness guard: never report numbers off a wrong result
+    ref = multiply_reference(a, b, threshold=THRESHOLD)
+    got = multiply(a, b, mesh, engine="auto", threshold=THRESHOLD)
+    np.testing.assert_allclose(
+        np.asarray(got.to_dense()), np.asarray(ref.to_dense()),
+        rtol=1e-5, atol=1e-5,
+    )
+
+    return {
+        "entry": entry.name,
+        "kind": entry.kind,
+        "nb": entry.nb,
+        "bs": entry.bs,
+        "product_fill": feats.product_fill,
+        "out_fill": feats.out_fill,
+        "auto": auto_label,
+        "auto_source": dec.source,
+        "auto_ms": auto_s * 1e3,
+        "oracle_best": best_label,
+        "oracle_best_ms": table[best_label] * 1e3,
+        "worst_static": worst_static_label,
+        "worst_static_ms": static[worst_static_label] * 1e3,
+        "vs_oracle": auto_s / table[best_label],
+        "worst_over_auto": static[worst_static_label] / auto_s,
+        "tuner_trials": stats["tuner_trials"] - before["tuner_trials"],
+        "candidates": {lab: s * 1e3 for lab, s in table.items()},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--nb", type=int, default=None)
+    ap.add_argument("--bs", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_tuner.json")
+    ap.add_argument("--db", default="tuning_db.json",
+                    help="tuning-database artifact path")
+    args = ap.parse_args()
+
+    nb = args.nb or (8 if args.smoke else 16)
+    bs = args.bs or (8 if args.smoke else 16)
+    # the timed calls are milliseconds — compile time dominates the bench,
+    # so reps are cheap and buy measurement stability
+    reps = args.reps or (10 if args.smoke else 20)
+    if os.path.exists(args.db):
+        os.remove(args.db)  # this bench MEASURES; the warm phase re-reads
+
+    mesh = make_spgemm_mesh(p=2)
+    entries = corpus(nb=nb, bs=bs, smoke=args.smoke)
+    results = [bench_entry(e, mesh, reps, args.db) for e in entries]
+
+    # warm phase: a "fresh process" resolving from the persisted DB must
+    # perform zero timed trials on every corpus entry
+    plan_mod.clear_cache()
+    tuner.set_default_db(args.db)
+    for entry in entries:
+        a, b = entry.build()
+        tuner.autotune(a, b, mesh, threshold=THRESHOLD)
+    warm = plan_mod.cache_stats()
+    assert warm["tuner_trials"] == 0, warm
+    assert warm["tuner_hits"] == len(entries), warm
+
+    # acceptance: oracle match on EVERY entry, worst-static >= 1.2x
+    # somewhere (the workload-dependence the paper demonstrates)
+    for r in results:
+        assert r["vs_oracle"] <= 1.10, r
+    spread = max(r["worst_over_auto"] for r in results)
+    assert spread >= 1.2, [
+        (r["entry"], r["worst_over_auto"]) for r in results]
+
+    report = {
+        "bench": "tuner_corpus",
+        "mesh": {"r": 2, "c": 2},
+        "threshold": THRESHOLD,
+        "reps": reps,
+        "entries": results,
+        "warm_db": {"tuner_trials": warm["tuner_trials"],
+                    "tuner_hits": warm["tuner_hits"],
+                    "records": len(tuner.get_default_db() or ())},
+        "max_worst_over_auto": spread,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"{'entry':>18} {'fill':>6} {'auto':>18} {'ms':>8} "
+          f"{'oracle':>18} {'vs':>5} {'worst/auto':>10}")
+    for r in results:
+        print(f"{r['entry']:>18} {r['product_fill']:>6.3f} "
+              f"{r['auto']:>18} {r['auto_ms']:>8.3f} "
+              f"{r['oracle_best']:>18} {r['vs_oracle']:>5.2f} "
+              f"{r['worst_over_auto']:>10.2f}")
+    print(f"warm db: {warm['tuner_hits']} hits, 0 trials "
+          f"-> wrote {args.out} + {args.db}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """End-to-end driver: linear-scaling DFT density-matrix purification.
 
-    python examples/linear_scaling_dft.py
+    python examples/linear_scaling_dft.py [--tuning-db tuning_db.json]
 
 The paper's driving application (CP2K): compute the density matrix
 P = 1/2 (I - sign(H - mu I)) of a sparse model Hamiltonian WITHOUT
@@ -14,10 +14,17 @@ residual stays on the mesh and the host syncs it every ``sync_every``
 sweeps.  The plan-layer cache counters printed at the end show the whole
 purification compiled exactly one program.
 
+With ``--tuning-db`` the engine is chosen by the pattern-aware autotuner
+(``engine="auto"``, DESIGN.md §5): H's banded pattern is featurized, the
+Eq. 6/7 model prunes, short trials pick the winner, and the decision
+persists — a second run resolves measurement-free from the database.
+Without the flag the static 2.5D engine is used as before.
+
 Validates the physics observable trace(P) == number of occupied states
 against a dense eigendecomposition, and reports the occupancy trajectory
 (the sparsity the filtering maintains — the paper's premise).
 """
+import argparse
 import os
 
 os.environ["XLA_FLAGS"] = (
@@ -32,6 +39,7 @@ import time
 import jax
 import numpy as np
 
+from repro import tuner
 from repro.core import bsm as B
 from repro.core import plan as plan_mod
 from repro.core.signiter import density_matrix, trace
@@ -39,6 +47,11 @@ from repro.launch.mesh import make_spgemm_mesh
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning-database path: autotune the engine "
+                    "(engine='auto'); omitted = static twofive")
+    args = ap.parse_args()
     # sparse model Hamiltonian: banded block structure (near-sighted
     # operator), symmetric, ~10% block occupancy — H2O-DFT-LS-like
     h = B.random_bsm(
@@ -53,15 +66,25 @@ def main() -> None:
     print(f"H: {n}x{n}, block occupancy {float(h.occupancy()):.1%}, "
           f"{n_occ} states below mu={mu:.4f}")
 
-    mesh = make_spgemm_mesh(p=2, l=2)  # the 2.5D engine, L=2
+    if args.tuning_db:
+        # autotuned engine on a 2D mesh: the tuner is free to pick the
+        # 2.5D pull engine with a *virtual* depth (or not)
+        mesh = make_spgemm_mesh(p=2)
+        engine = "auto"
+    else:
+        mesh = make_spgemm_mesh(p=2, l=2)  # static: the 2.5D engine, L=2
+        engine = "twofive"
     # shard H once: the whole purification runs on the shards (one
     # compiled sweep per dispatch), P comes back sharded — the only
     # gathers below are the explicit chain-boundary to_dense() calls
     h_sharded = B.shard_bsm(h, mesh)
     plan_mod.clear_cache()
+    if args.tuning_db:
+        tuner.set_default_db(args.tuning_db)  # after clear_cache (which
+        # resets the tuner binding along with every other cache level)
     t0 = time.time()
     p, stats = density_matrix(
-        h_sharded, mu, engine="twofive",
+        h_sharded, mu, engine=engine,
         threshold=1e-9, filter_eps=1e-8, max_iter=100, tol=1e-6,
         mode="fused", sync_every=4,
     )
@@ -76,8 +99,13 @@ def main() -> None:
           f"(sync_every={stats.sync_every}), cache: "
           f"{cache['builds']} program build(s), "
           f"{cache['chain_hits']} fused-sweep reuses")
+    if engine == "auto":
+        print(f"autotuned engine: {cache['tuner_trials']} trial(s), "
+              f"{cache['tuner_hits']} db/cache hit(s) "
+              f"-> {args.tuning_db}")
     assert isinstance(p, B.ShardedBSM)  # P never left the mesh
-    assert cache["builds"] <= 1, cache
+    # one chain program; extra builds can only be tuner trials (cold DB)
+    assert cache["builds"] <= 1 + cache["tuner_trials"], cache
     print(f"trace(P) = {tr:.4f}  (want {n_occ} occupied states)")
     print(f"occupancy trajectory: "
           f"{[f'{o:.0%}' for o in stats.occupancy_trace[:8]]}...")

@@ -140,6 +140,63 @@ def plan_volume(
     )
 
 
+def device_memory_bytes(
+    plan,
+    nb: int,
+    bs: int,
+    *,
+    itemsize: float = 4.0,
+    c_layout: str = "2d",
+    stack_capacity: int = 0,
+) -> float:
+    """Eq. (6) rendered in bytes: per-device memory footprint of one
+    multiplication executed from ``plan``.
+
+    Three terms, mirroring the paper's accounting:
+
+    * the home shards of A, B and C (the O(1) baseline);
+    * temporary panel buffers, counted with the paper's §3 buffer model
+      (``Topology.total_buffers``: 4 for PTP, 6 for OS1, L+6 / L+sqrt(L)+4
+      for OSL — the O(L) growth of Eq. (6)) at the panel granularity the
+      plan actually moves, plus the L-1 partial-C accumulators of the
+      pull formulation; the gather plan instead stages the full gathered
+      row/column panels;
+    * the compacted-backend stack arrays when ``stack_capacity`` > 0:
+      gathered A/B operands, the product buffer (f32) and the seven
+      int32 index arrays of ``kernels.stacks.ProductStacks``.
+
+    The tuner prunes every candidate whose footprint exceeds the
+    per-device budget — the one decision the measured trials must never
+    be allowed to make (an OOM trial is not a data point).
+    """
+    topo = plan.topo
+    nr, nc = nb // plan.p_r, nb // plan.p_c
+    shard = _panel_bytes(nr, nc, bs, itemsize)
+    total = 3.0 * shard  # A, B, C home shards
+    if plan.kind == "ring":
+        total += 4.0 * shard  # PTP: 4 temporaries (paper §3)
+    elif plan.kind == "gather":
+        total += _panel_bytes(nr, nb, bs, itemsize)  # gathered A row panel
+        total += _panel_bytes(nb, nc, bs, itemsize)  # gathered B col panel
+    elif plan.kind == "pull":
+        sub = max(
+            _panel_bytes(nr, nc // plan.ca, bs, itemsize),  # A subpanel
+            _panel_bytes(nr // plan.cb, nc, bs, itemsize),  # B subpanel
+        )
+        total += topo.total_buffers * sub
+        total += (topo.l - 1) * shard  # partial C panels of the L targets
+    elif plan.kind == "stacked":
+        total += 4.0 * shard  # double-buffered ring panels
+        # reduction buffer over the depth axis
+        total += shard if c_layout == "2d" else shard / topo.l
+    else:
+        raise ValueError(plan.kind)
+    if stack_capacity > 0:
+        gemm = (bs * bs * 3) * 4.0  # gathered a, b + f32 product per entry
+        total += stack_capacity * (gemm + 7 * 4.0)
+    return total
+
+
 def mesh25d_volume(
     s: int, l: int, s_a: float, s_b: float, s_c: float
 ) -> VolumeReport:

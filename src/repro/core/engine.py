@@ -48,13 +48,18 @@ from repro.core.bsm import (
     block_norms,
     filter_bsm,
 )
-from repro.core.local_mm import local_filtered_mm
+from repro.core.local_mm import (
+    GATHER_OVERHEAD,
+    backend_local_cost,
+    local_filtered_mm,
+)
 
 ENGINES = ("cannon", "onesided", "gather", "twofive")
 
-# auto heuristic: surviving-product fill above which the dense einsum wins
-# (gather/scatter overhead ~matches the dense MXU work around 1/4 fill)
-AUTO_DENSE_FILL = 0.25
+# surviving-product fill at which the dense einsum and the compacted
+# backends break even under the shared analytic model
+# (``local_mm.backend_local_cost``); kept as a named constant for tests
+AUTO_DENSE_FILL = 1.0 / GATHER_OVERHEAD
 
 
 def _is_concrete(*arrays) -> bool:
@@ -75,12 +80,15 @@ def _host_pair_filter(a: BlockSparseMatrix, b: BlockSparseMatrix,
 
 def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
                    threshold: float = 0.0, *, ok=None) -> str:
-    """Occupancy-driven local-backend selection (the ``"auto"`` policy).
+    """Cost-model-driven local-backend selection (the ``"auto"`` policy).
 
-    Dense einsum for high fill, compacted list for low fill; the compacted
-    flavor is the Pallas kernel on real TPU and the jnp
-    gather-GEMM-scatter elsewhere.  Traced inputs (inside someone else's
-    jit) fall back to ``jnp`` — no concrete pattern to compact.
+    Delegates to the shared analytic model
+    (``local_mm.backend_local_cost``, also used by the tuner's candidate
+    ranking — DESIGN.md §5): dense einsum when the full-cube MXU work
+    undercuts the compacted path's gathered products, compacted list
+    otherwise; the compacted flavor is the Pallas kernel on real TPU and
+    the jnp gather-GEMM-scatter elsewhere.  Traced inputs (inside someone
+    else's jit) fall back to ``jnp`` — no concrete pattern to compact.
 
     ``ok`` — optional precomputed concrete filter cube, so one host walk
     serves both this heuristic and the capacity bound in ``multiply``.
@@ -90,7 +98,12 @@ def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
             return "jnp"
         ok = _host_pair_filter(a, b, threshold)
     fill = float(ok.mean()) if ok.size else 0.0
-    if fill > AUTO_DENSE_FILL:
+    ni, nk = a.nb_r, a.nb_c
+    nj = b.nb_c
+    dims = (ni, nk, nj, a.bs_r, a.bs_c, b.bs_c)
+    dense = backend_local_cost(*dims, fill=1.0, backend="jnp")
+    compact = backend_local_cost(*dims, fill=fill, backend="stacks")
+    if dense <= compact:
         return "jnp"
     return "pallas" if jax.default_backend() == "tpu" else "stacks"
 
@@ -194,7 +207,7 @@ def multiply(
     engine: str = "twofive",
     threshold: float = 0.0,
     filter_eps: float | None = None,
-    backend: str = "jnp",
+    backend: str | None = None,
     c_layout: str = "2d",
     l: int | None = None,
     stack_capacity: int | None = None,
@@ -202,6 +215,12 @@ def multiply(
 ) -> BlockSparseMatrix | ShardedBSM:
     """Distributed filtered C = A . B.
 
+    engine     — one of ``ENGINES``, or ``"auto"``: the pattern-aware
+                 tuner (``repro.tuner``) picks engine, depth L, local
+                 backend and stack capacity from the concrete sparsity
+                 pattern — analytic Eq. 6/7 pruning, then short measured
+                 trials, with winners persisted in the tuning DB so later
+                 runs resolve without timing anything.
     threshold  — on-the-fly filter: skip block products with
                  norm(A_ik) * norm(B_kj) <= threshold.
     filter_eps — post-multiplication filter: drop result blocks with
@@ -209,7 +228,10 @@ def multiply(
     l          — depth override for the 2D-mesh ``twofive`` pull engine
                  (square grids; non-square grids force L = mx/mn).
     backend    — local stage: "jnp" | "stacks" | "pallas" | "auto"
-                 (occupancy heuristic, see ``choose_backend``).
+                 (occupancy heuristic, see ``choose_backend``).  The
+                 default (None) is "jnp" for static engines; under
+                 ``engine="auto"`` it leaves the backend to the tuner —
+                 pass an explicit backend to pin it.
     stack_capacity — static surviving-product bound for the compacted
                  backends; derived automatically from the concrete
                  pattern when omitted (exact single-device, sound
@@ -221,8 +243,15 @@ def multiply(
     no gather, no re-shard; post-filtering happens shard-local with
     derived norms.  Both operands must be sharded on the same mesh.
     """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    if engine != "auto" and engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; one of {ENGINES} or 'auto'"
+        )
+    # None = the caller left the backend open: static engines get the
+    # historical "jnp" default, the tuner gets the full backend space
+    pinned = backend if backend not in (None, "auto") else None
+    if backend is None:
+        backend = "jnp"
     if isinstance(a, ShardedBSM) or isinstance(b, ShardedBSM):
         if not (isinstance(a, ShardedBSM) and isinstance(b, ShardedBSM)):
             raise TypeError(
@@ -235,7 +264,19 @@ def multiply(
             raise ValueError("mesh argument conflicts with operand mesh")
         if c_layout != "2d":
             raise ValueError("sharded chains require c_layout='2d'")
-        if backend == "auto":
+        if engine == "auto":
+            # full tuner resolution: one host walk of the device-resident
+            # pattern, amortized by the decision cache across repeats
+            from repro import tuner
+
+            dec = tuner.autotune(
+                a, b, a.mesh, threshold=threshold, backend=pinned,
+                l=l, interpret=interpret,
+            )
+            engine, l, backend = dec.engine, dec.l, dec.backend
+            if stack_capacity is None:
+                stack_capacity = dec.stack_capacity
+        elif backend == "auto":
             # the auto heuristic walks the concrete pattern on the host —
             # a round-trip the device-resident path exists to avoid
             backend = "jnp"
@@ -246,6 +287,21 @@ def multiply(
         )
         eps = threshold if filter_eps is None else filter_eps
         return c.filter(eps) if eps > 0.0 else c
+    if engine == "auto":
+        if mesh is None:
+            engine = "twofive"  # single-device: the engine is vestigial
+        else:
+            # delegate the whole (engine, L, backend, capacity) decision
+            # to the tuner (repro.tuner, DESIGN.md §5)
+            from repro import tuner
+
+            dec = tuner.autotune(
+                a, b, mesh, threshold=threshold, backend=pinned,
+                l=l, interpret=interpret,
+            )
+            engine, l, backend = dec.engine, dec.l, dec.backend
+            if stack_capacity is None:
+                stack_capacity = dec.stack_capacity
     # one host walk of the concrete filter cube serves both the auto
     # heuristic and the distributed capacity bound
     ok_np = None

@@ -43,6 +43,42 @@ from repro.kernels.stacks import (
 
 BACKENDS = ("jnp", "stacks", "pallas")
 
+# Effective-FLOP penalty of the compacted backends' gather/scatter stage
+# relative to the dense einsum's streaming MXU access: the dense/compacted
+# crossover sits where fill * GATHER_OVERHEAD == 1 (0.25 — DBCSR's batched
+# GEMM wins at low occupancy, dense MXU work wins when the cube is mostly
+# full; calibrated against benchmarks/bench_local_mm.py's sweep).
+GATHER_OVERHEAD = 4.0
+
+
+def backend_local_cost(
+    ni: int,
+    nk: int,
+    nj: int,
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    *,
+    fill: float,
+    backend: str,
+) -> float:
+    """Analytic cost (effective FLOPs) of one local-stage call.
+
+    The generalization of the old fixed occupancy threshold: ``jnp``
+    always pays the dense cube (the einsum contracts everything), the
+    compacted backends pay the surviving products times the
+    gather/scatter overhead factor.  Shared by ``engine.choose_backend``
+    and the tuner's candidate model (``repro.tuner.model``) so the
+    single-device heuristic and the distributed autotuner agree on the
+    crossover — including for rectangular atomic blocks.
+    """
+    dense = 2.0 * ni * nk * nj * bs_r * bs_k * bs_c
+    if backend == "jnp":
+        return dense
+    if backend in ("stacks", "pallas"):
+        return GATHER_OVERHEAD * fill * dense
+    raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+
 
 def pair_filter(
     a_mask: jax.Array,

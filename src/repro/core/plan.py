@@ -40,6 +40,17 @@ shape and *capacity bucket* — patterns with equal bucketed product counts
 share one executable.  ``cache_stats()`` exposes hit/miss/build counters
 for tests and benchmarks.
 
+Autotuned dispatch
+------------------
+
+``execute`` / ``execute_sharded`` accept ``engine="auto"``: the decision
+layer above this cache (``repro.tuner``, DESIGN.md §5) resolves
+``(engine, L, backend, stack_capacity)`` from the concrete sparsity
+pattern — analytic Eq. 6/7 pruning, then short measured trials whose
+winners persist in a tuning database.  Tuner decisions are counted in
+``cache_stats()`` (``tuner_hits`` / ``tuner_misses`` / ``tuner_trials``)
+and dropped by ``clear_cache()`` like every other cache level.
+
 Pattern cache
 -------------
 
@@ -367,6 +378,9 @@ class CacheStats:
     pattern_misses: int = 0
     chain_hits: int = 0  # fused chain-step program reuse (sign iteration)
     chain_misses: int = 0
+    tuner_hits: int = 0  # engine="auto" decisions served without trials
+    tuner_misses: int = 0  # decisions that needed analytic rank / trials
+    tuner_trials: int = 0  # candidates actually timed by the tuner
 
     def as_dict(self) -> dict:
         return {
@@ -378,6 +392,9 @@ class CacheStats:
             "pattern_misses": self.pattern_misses,
             "chain_hits": self.chain_hits,
             "chain_misses": self.chain_misses,
+            "tuner_hits": self.tuner_hits,
+            "tuner_misses": self.tuner_misses,
+            "tuner_trials": self.tuner_trials,
         }
 
 
@@ -388,18 +405,37 @@ _bound_cache: OrderedDict[tuple, int] = OrderedDict()
 _stats = CacheStats()
 
 
+_extra_caches: list = []  # clear() callables of satellite layers (tuner)
+
+
+def register_cache(clear_fn) -> None:
+    """Register a satellite cache's clear callable: ``clear_cache()``
+    must drop *every* cache level (program, pattern, chain, tuner) so
+    test modules and drivers start from a genuinely clean slate."""
+    if clear_fn not in _extra_caches:
+        _extra_caches.append(clear_fn)
+
+
 def cache_stats() -> dict:
-    """Program/pattern-cache counters (hits / misses / builds / ...)."""
+    """Program/pattern/chain/tuner-cache counters (hits / misses / ...)."""
     return _stats.as_dict()
 
 
 def clear_cache() -> None:
+    """Drop ALL plan-layer caches and zero every counter: compiled
+    programs (incl. chain steps), pattern product-lists, capacity bounds,
+    the compiled-schedule LRU (``plan_multiply``) and any registered
+    satellite caches (the tuner's decision cache + default-DB binding)."""
     _program_cache.clear()
     _pattern_cache.clear()
     _bound_cache.clear()
+    plan_multiply.cache_clear()
+    for fn in _extra_caches:
+        fn()
     _stats.hits = _stats.misses = _stats.builds = _stats.evictions = 0
     _stats.pattern_hits = _stats.pattern_misses = 0
     _stats.chain_hits = _stats.chain_misses = 0
+    _stats.tuner_hits = _stats.tuner_misses = _stats.tuner_trials = 0
 
 
 # ---------------------------------------------------------------------------
@@ -688,6 +724,10 @@ def execute(a, b, mesh, engine: str, **kw):
     """
     from repro.core.bsm import BlockSparseMatrix, block_norms
 
+    if engine == "auto":
+        from repro.tuner import resolve_multiply
+
+        engine, kw = resolve_multiply(a, b, mesh, kw)
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype, **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
@@ -708,6 +748,12 @@ def execute_sharded(a, b, engine: str, **kw):
     mesh = a.mesh
     if kw.pop("c_layout", "2d") != "2d":
         raise ValueError("sharded chains require c_layout='2d'")
+    if engine == "auto":
+        # one host walk of the (concrete, device-resident) pattern; the
+        # tuner's decision cache makes repeats free for a stable pattern
+        from repro.tuner import resolve_multiply
+
+        engine, kw = resolve_multiply(a, b, mesh, kw)
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
                       c_layout="2d", **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
@@ -726,6 +772,12 @@ def get_chain_compiled(key: tuple, builder):
     the ordinary ``builds`` counter, so "at most one program per distinct
     multiply shape across a 10-sweep iteration" is assertable from
     ``cache_stats()`` alone.
+
+    Chains with ``engine="auto"`` resolve the engine through the tuner
+    *before* keying (``signiter.sign_iteration``): the chain key always
+    carries a concrete engine, and the tuner's decision join the same
+    ``cache_stats()`` counters (``tuner_hits`` / ``tuner_misses`` /
+    ``tuner_trials``).
     """
     key = ("chain",) + tuple(key)
     prog = _program_cache.get(key)

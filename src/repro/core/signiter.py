@@ -64,6 +64,27 @@ def _scale_any(x, s):
     return x.scale(s) if isinstance(x, B.ShardedBSM) else B.scale(x, s)
 
 
+def _resolve_engine(x, mesh, engine: str, threshold: float,
+                    l: int | None) -> tuple[str, int | None]:
+    """``engine="auto"`` for an iteration: ONE tuner resolution on the
+    initial pattern (X ~ X0 . X0, the purification's own multiply shape),
+    then every sweep of the chain runs the chosen (engine, L).
+
+    Chains are tuned with ``chain=True``: only chain-safe candidates
+    (dense local backend) are considered, because the fused sweep is
+    traced once while the sparsity pattern evolves underneath it — see
+    ``tuner.model.chain_safe``.
+    """
+    if engine != "auto":
+        return engine, l
+    if mesh is None:
+        return "twofive", l  # single-device: the engine is vestigial
+    from repro import tuner
+
+    dec = tuner.autotune(x, x, mesh, threshold=threshold, l=l, chain=True)
+    return dec.engine, dec.l
+
+
 def _scale_to_unit_spectrum(x):
     """Scale X0 so its spectrum lies in [-1, 1] (Frobenius bound)."""
     nrm = x.frobenius_norm()
@@ -165,6 +186,12 @@ def get_sweep_program(
     one dispatch of one SPMD program — and one program build per distinct
     multiply shape, shared by both multiplies.
     """
+    if engine == "auto":
+        raise ValueError(
+            "resolve engine='auto' before building a chain program "
+            "(sign_iteration does this via the tuner); the chain key "
+            "must carry a concrete engine"
+        )
     if backend == "auto":
         # auto walks the concrete pattern on the host; inside the fused
         # (traced) sweep there is no concrete pattern — dense einsum it is
@@ -277,13 +304,17 @@ def sign_iteration_legacy(
     tol: float = 1e-6,
     scale_input: bool = True,
     backend: str = "jnp",
+    l: int | None = None,
 ) -> tuple[B.BlockSparseMatrix, SignIterStats]:
     """The host-driven per-op loop (parity oracle / benchmark baseline):
     two ``multiply()`` re-entries per sweep from replicated arrays, eager
     inter-multiply algebra, a host residual sync every sweep.  With a
     compacted ``backend`` every multiply walks X's concrete pattern — the
     pattern cache (``plan.cache_stats()['pattern_hits']``) re-hits as the
-    iteration's sparsity structure stabilizes."""
+    iteration's sparsity structure stabilizes.  ``engine="auto"`` is
+    resolved ONCE on the initial pattern (not per multiply): the tuner
+    decision holds for the whole iteration."""
+    engine, l = _resolve_engine(x0, mesh, engine, threshold, l)
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     x = _scale_to_unit_spectrum(x0) if scale_input else x0
@@ -295,14 +326,14 @@ def sign_iteration_legacy(
     for it in range(1, max_iter + 1):
         x2 = multiply(
             x, x, mesh, engine=engine, threshold=threshold,
-            filter_eps=filter_eps, backend=backend,
+            filter_eps=filter_eps, backend=backend, l=l,
         )
         n_mults += 1
         # 3I - X^2
         y = B.add(B.scale(x2, -1.0), B.scale(ident, 3.0))
         xn = multiply(
             x, y, mesh, engine=engine, threshold=threshold,
-            filter_eps=filter_eps, backend=backend,
+            filter_eps=filter_eps, backend=backend, l=l,
         )
         xn = B.scale(xn, 0.5)
         n_mults += 1
@@ -371,7 +402,7 @@ def sign_iteration(
         return sign_iteration_legacy(
             x0, mesh=mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, max_iter=max_iter, tol=tol,
-            scale_input=scale_input, backend=backend,
+            scale_input=scale_input, backend=backend, l=l,
         )
     if mode != "fused":
         raise ValueError(f"unknown mode {mode!r}; 'fused' or 'legacy'")
@@ -383,6 +414,7 @@ def sign_iteration(
         if mesh is not None and mesh is not x0.mesh and mesh != x0.mesh:
             raise ValueError("mesh argument conflicts with operand mesh")
         mesh = x0.mesh
+    engine, l = _resolve_engine(x0, mesh, engine, threshold, l)
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     if mesh is not None:

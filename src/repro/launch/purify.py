@@ -2,7 +2,7 @@
 long-running service loop.
 
     PYTHONPATH=src python -m repro.launch.purify --nb 16 --bs 8 \
-        --p 2 --l 2 --engine twofive --repeats 3 --sync-every 4
+        --p 2 --repeats 3 --sync-every 4 --tuning-db tuning_db.json
 
 The production rendering of the paper's driving workload: build a sparse
 model Hamiltonian, shard it ONCE onto the SpGEMM mesh, and run repeated
@@ -12,6 +12,14 @@ entirely device-resident — the fused sign-iteration engine of
 later one is pure cache: the chain-step program, the multiply plan and
 the jit executable are all reused (``plan.cache_stats()`` is printed per
 repeat; ``builds`` must stay flat).
+
+Engine selection is autotuned (DESIGN.md §5): with ``--tuning-db`` the
+driver runs ``engine="auto"`` — the pattern-aware tuner picks (engine, L)
+for H's sparsity pattern, measuring short trials on a cold database and
+resolving *measurement-free* on a warm one; winners persist to the DB
+file for the next launch.  Without a tuning DB the driver falls back to
+the static ``--engine`` choice (default twofive) — a production loop
+should not silently re-measure on every start.
 
 On real hardware the same driver runs on a TPU slice mesh; here the
 device count is faked for a laptop-scale proof (set
@@ -30,8 +38,13 @@ def main(argv=None) -> int:
     ap.add_argument("--bs", type=int, default=8, help="atomic block size")
     ap.add_argument("--p", type=int, default=2, help="(r, c) grid side")
     ap.add_argument("--l", type=int, default=1, help="2.5D depth (l axis)")
-    ap.add_argument("--engine", default="twofive",
-                    choices=("cannon", "onesided", "gather", "twofive"))
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "cannon", "onesided", "gather",
+                             "twofive"))
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning-database JSON path: enables engine "
+                    "autotuning (warm-started when the file exists, "
+                    "created/updated after measuring)")
     ap.add_argument("--occupancy", type=float, default=0.10)
     ap.add_argument("--threshold", type=float, default=1e-9)
     ap.add_argument("--filter-eps", type=float, default=1e-8)
@@ -57,6 +70,7 @@ def main(argv=None) -> int:
 
     import jax
 
+    from repro import tuner
     from repro.core import bsm as B
     from repro.core import plan as plan_mod
     from repro.core.signiter import density_matrix, trace
@@ -70,10 +84,20 @@ def main(argv=None) -> int:
     )
     mu = 0.0
     plan_mod.clear_cache()
+    if engine == "auto":
+        if args.tuning_db:
+            tuner.set_default_db(args.tuning_db)  # after clear_cache: it
+            # resets the tuner binding along with every other cache level
+        else:
+            # no DB to consult or persist to: static fallback — a service
+            # loop must not re-measure on every launch
+            engine = "twofive"
 
     print(f"purify: H {h.shape[0]}x{h.shape[0]} "
           f"({float(h.occupancy()):.1%} blocks), mesh {dict(mesh.shape)}, "
-          f"engine {engine}, sync_every {args.sync_every}")
+          f"engine {engine}"
+          + (f" (db {args.tuning_db})" if engine == "auto" else "")
+          + f", sync_every {args.sync_every}")
     h_dev = B.shard_bsm(h, mesh)  # the one chain-boundary scatter
     for rep in range(args.repeats):
         t0 = time.perf_counter()
@@ -91,16 +115,26 @@ def main(argv=None) -> int:
               f"[{sweeps_s:.1f} sweeps/s], converged={stats.converged}, "
               f"trace(P)={float(trace(p)):.2f}, "
               f"cache builds={cache['builds']} "
-              f"chain {cache['chain_hits']}h/{cache['chain_misses']}m")
+              f"chain {cache['chain_hits']}h/{cache['chain_misses']}m "
+              f"tuner {cache['tuner_hits']}h/{cache['tuner_misses']}m/"
+              f"{cache['tuner_trials']}t")
         # SCF-like drift: perturb H on-device and re-purify (same pattern
         # -> every cache level hits; the chain program is reused as-is)
         h_dev = h_dev.scale(1.0 + 1e-3 * (rep + 1))
     final = plan_mod.cache_stats()
-    assert final["builds"] <= 1, final
+    # the chain program is compiled exactly once; program builds beyond it
+    # can only come from the tuner's measured trials (cold DB), never from
+    # the purification loop itself
     assert final["chain_misses"] == 1, final
+    assert final["builds"] <= 1 + final["tuner_trials"], final
+    assert final["tuner_misses"] <= 1, final  # one decision per pattern
     print(f"purify OK: one compiled chain step served "
           f"{final['chain_hits'] + 1} sweeps across {args.repeats} "
-          f"purifications (builds={final['builds']})")
+          f"purifications (builds={final['builds']}, "
+          f"trials={final['tuner_trials']})")
+    db = tuner.get_default_db()
+    if db is not None and db.path:
+        print(f"tuning db: {len(db)} record(s) at {db.path}")
     return 0
 
 

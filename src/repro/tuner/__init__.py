@@ -1,0 +1,300 @@
+"""Pattern-aware autotuning runtime (DESIGN.md §5).
+
+The decision layer above the plan cache: given a concrete operand pair
+and a mesh, pick ``(engine, L, backend, stack_capacity)`` — the choices
+the paper shows are workload-dependent (2D vs 2.5D, depth L, local
+backend) — instead of making every caller hardcode them.
+
+Decision flow (each stage short-circuits the ones after it):
+
+    features ──> decision cache ──> tuning DB ──> analytic prune ──> measure
+    (features.py)   (exact pattern)   (db.py,        (model.py,       (measure.py,
+                                      bucketed)      Eq. 6/7)         top-k trials)
+
+* ``featurize`` reduces the pair to occupancies / product fill / bandwidth;
+* the in-memory decision cache re-hits the *exact* pattern signature
+  (hot loops re-multiplying one pattern resolve for free);
+* the persisted :class:`~repro.tuner.db.TuningDB` re-hits the *feature
+  bucket* (later runs — purify drivers, serving — are measurement-free);
+* the analytic model enumerates feasible candidates, prices them with the
+  paper's comm-volume model (Eq. 7) + roofline local FLOPs, and prunes
+  any whose Eq. (6) memory footprint exceeds the per-device budget;
+* short timed trials of the surviving top-k (through the compiled-program
+  cache, so the winner is already hot) have the final word.
+
+Counters join ``plan.cache_stats()``: ``tuner_hits`` (decisions served
+without trials), ``tuner_misses`` (decisions that needed trials),
+``tuner_trials`` (candidates actually timed).  ``plan.clear_cache()``
+drops the decision cache and resets the default DB binding.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.tuner.corpus import CorpusEntry, corpus, make_mask  # noqa: F401
+from repro.tuner.db import TuningDB, make_key
+from repro.tuner.features import PairFeatures, feature_bucket, featurize  # noqa: F401
+from repro.tuner.measure import best_trial, measure_candidates
+from repro.tuner.model import (
+    Candidate,
+    ModelReport,  # noqa: F401
+    chain_safe,
+    choose_local_backend,  # noqa: F401
+    device_memory_budget,
+    enumerate_candidates,  # noqa: F401
+    estimate_candidate,
+    mesh_signature,
+    rank_candidates,
+)
+
+__all__ = [
+    "Decision", "autotune", "resolve_multiply", "set_default_db",
+    "get_default_db", "TuningDB", "Candidate", "PairFeatures",
+    "featurize", "feature_bucket", "rank_candidates", "corpus",
+]
+
+
+@dataclass(frozen=True)
+class Decision:
+    """A resolved (engine, L, backend, capacity) choice and where it
+    came from: "cache" | "db" | "measured" | "analytic"."""
+
+    engine: str
+    l: int | None
+    backend: str
+    stack_capacity: int | None
+    source: str
+    measured_s: float | None = None
+
+    @property
+    def label(self) -> str:
+        tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
+        return f"{tag}/{self.backend}[{self.source}]"
+
+
+_CACHE_MAXSIZE = 128
+_decision_cache: OrderedDict[tuple, Decision] = OrderedDict()
+_default_db: TuningDB | None = None
+
+
+def set_default_db(db: TuningDB | str | None) -> TuningDB | None:
+    """Bind the process-wide tuning DB (a :class:`TuningDB` or a path,
+    warm-started when the file exists).  ``None`` unbinds."""
+    global _default_db
+    _default_db = TuningDB.load_or_create(db) if isinstance(db, str) else db
+    return _default_db
+
+
+def get_default_db() -> TuningDB | None:
+    return _default_db
+
+
+def _reset() -> None:
+    """Drop all tuner state (registered with ``plan.clear_cache``)."""
+    global _default_db
+    _decision_cache.clear()
+    _default_db = None
+
+
+plan_mod.register_cache(_reset)
+
+
+def _constraints(engines, backends, l, chain: bool) -> tuple:
+    return (
+        "chain" if chain else "mult",
+        ",".join(engines) if engines else "*",
+        ",".join(backends) if backends else "*",
+        0 if l is None else int(l),
+    )
+
+
+def _operand_key(a, b, mesh, constraints: tuple, threshold: float,
+                 budget: float, measure: bool, tdb) -> tuple:
+    """Decision-cache key from the operand *masks and norms* — NOT the
+    O(nb^3) filter cube, so a decision-cache hit costs two 2D digests
+    (the cube is only materialized on the miss path).  Budget, mode and
+    DB binding are part of the key: a decision made under one budget (or
+    analytically) must never answer for another."""
+    import hashlib
+
+    from repro.kernels.stacks import pattern_signature
+
+    h = hashlib.sha1(pattern_signature(np.asarray(a.mask, bool)))
+    h.update(pattern_signature(np.asarray(b.mask, bool)))
+    if threshold > 0.0:  # the filter cube depends on norms too
+        h.update(np.asarray(a.norms, np.float32).tobytes())
+        h.update(np.asarray(b.norms, np.float32).tobytes())
+    return (h.digest(), mesh_signature(mesh), constraints,
+            str(np.dtype(a.dtype)), float(threshold), float(budget),
+            bool(measure), id(tdb) if tdb is not None else None)
+
+
+def _capacity_for(cand: Candidate, ok, mesh) -> int | None:
+    """Always re-derive compacted capacities from the *concrete* pattern:
+    a DB/bucket hit must never smuggle in a stale (unsound) bound."""
+    if cand.backend == "jnp":
+        return None
+    return plan_mod.get_device_capacity(ok, mesh, cand.engine)
+
+
+def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
+    """Rehydrate a DB record into a candidate VALID for this exact
+    (mesh, pattern) — feature buckets are coarse, so a record measured at
+    a different block grid can share the bucket while being
+    topology-invalid here.  Re-runs the same validity gates
+    ``enumerate_candidates`` applies; None = treat as a miss."""
+    cand = Candidate(rec["engine"], rec["l"], rec["backend"])
+    try:
+        plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
+        plan.validate_blocks(feats.nb_r, feats.nb_c)
+    except ValueError:
+        return None
+    if cand.backend == "jnp":
+        return cand
+    cap = _capacity_for(cand, ok, mesh)
+    if not cap:
+        return None  # empty pattern: the compacted program has no work
+    return Candidate(cand.engine, cand.l, cand.backend, cap)
+
+
+def autotune(
+    a,
+    b,
+    mesh,
+    *,
+    threshold: float = 0.0,
+    engines: tuple[str, ...] | None = None,
+    backend: str | None = None,
+    l: int | None = None,
+    chain: bool = False,
+    top_k: int = 3,
+    reps: int = 2,
+    budget_bytes: float | None = None,
+    db: TuningDB | None = None,
+    measure: bool = True,
+    interpret: bool | None = None,
+) -> Decision:
+    """Resolve ``(engine, L, backend, stack_capacity)`` for one operand
+    pair on one mesh.
+
+    ``backend`` / ``l`` / ``engines`` pin parts of the decision (the
+    tuner only chooses what the caller left open).  ``chain=True``
+    restricts to chain-safe candidates (dense local backend: a fused
+    iteration's pattern evolves under a traced sweep, so static compacted
+    capacities from the initial pattern would be unsound).
+    ``measure=False`` stops after the analytic ranking (no device work —
+    usable on abstract meshes).
+    """
+    if mesh is None:
+        raise ValueError("autotune requires a mesh (the decision space is "
+                         "the distributed engine/depth/backend choice)")
+    from repro.core.engine import _host_pair_filter
+
+    backends = (backend,) if backend else (("jnp",) if chain else None)
+    constraints = _constraints(engines, backends, l, chain)
+    budget = device_memory_budget() if budget_bytes is None else budget_bytes
+    tdb = db if db is not None else _default_db
+    key = _operand_key(a, b, mesh, constraints, threshold, budget,
+                       measure, tdb)
+
+    hit = _decision_cache.get(key)
+    if hit is not None:
+        plan_mod._stats.tuner_hits += 1
+        _decision_cache.move_to_end(key)
+        return hit
+
+    feats = featurize(a, b, threshold)
+    ok = _host_pair_filter(a, b, threshold)
+    db_key = make_key(feature_bucket(feats), mesh_signature(mesh),
+                      constraints, feats.dtype)
+
+    def finish(dec: Decision) -> Decision:
+        _decision_cache[key] = dec
+        if len(_decision_cache) > _CACHE_MAXSIZE:
+            _decision_cache.popitem(last=False)
+        return dec
+
+    if tdb is not None:
+        rec = tdb.lookup(db_key)
+        if rec is not None:
+            cand = _db_candidate(rec, ok, mesh, feats)
+            if (
+                cand is not None
+                and estimate_candidate(cand, mesh, feats,
+                                       budget_bytes=budget).feasible
+                and (not chain or chain_safe(cand))
+            ):
+                plan_mod._stats.tuner_hits += 1
+                return finish(Decision(
+                    engine=cand.engine, l=cand.l, backend=cand.backend,
+                    stack_capacity=cand.stack_capacity, source="db",
+                    measured_s=rec.get("measured_s"),
+                ))
+            # invalid here / stale (budget, constraints): fall through
+
+    report = rank_candidates(
+        mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
+        budget_bytes=budget, top_k=top_k if measure else 1,
+    )
+    if chain:
+        ranked = tuple(e for e in report.ranked if chain_safe(e.candidate))
+        if not ranked:
+            raise ValueError("no chain-safe candidate survives the prune")
+        report = ModelReport(ranked=ranked, pruned=report.pruned)
+
+    if not measure:
+        best = report.ranked[0].candidate
+        plan_mod._stats.tuner_misses += 1
+        return finish(Decision(
+            engine=best.engine, l=best.l, backend=best.backend,
+            stack_capacity=best.stack_capacity, source="analytic",
+        ))
+
+    plan_mod._stats.tuner_misses += 1
+    trials = measure_candidates(
+        a, b, mesh, [e.candidate for e in report.ranked],
+        threshold=threshold, interpret=interpret, reps=reps,
+    )
+    plan_mod._stats.tuner_trials += len(trials)
+    win = best_trial(trials)
+    cand = win.candidate
+    if tdb is not None:
+        tdb.record(db_key, {
+            "engine": cand.engine, "l": cand.l, "backend": cand.backend,
+            "measured_s": win.seconds,
+            "trials": [
+                {"label": t.candidate.label, "seconds": t.seconds,
+                 "error": t.error}
+                for t in trials
+            ],
+        })
+    return finish(Decision(
+        engine=cand.engine, l=cand.l, backend=cand.backend,
+        stack_capacity=cand.stack_capacity, source="measured",
+        measured_s=win.seconds,
+    ))
+
+
+def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
+    """``engine="auto"`` resolution for ``plan.execute`` /
+    ``plan.execute_sharded``: returns the concrete engine plus the
+    keyword set with the tuner's L / backend / capacity filled in (the
+    caller's explicit choices are honored as constraints)."""
+    kw = dict(kw)
+    backend = kw.get("backend")
+    dec = autotune(
+        a, b, mesh,
+        threshold=kw.get("threshold", 0.0),
+        backend=None if backend in (None, "auto") else backend,
+        l=kw.get("l"),
+        interpret=kw.get("interpret"),
+    )
+    kw["backend"] = dec.backend
+    kw["l"] = dec.l
+    if kw.get("stack_capacity") is None:
+        kw["stack_capacity"] = dec.stack_capacity
+    return dec.engine, kw

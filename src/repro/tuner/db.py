@@ -1,0 +1,82 @@
+"""Persisted tuning database (DESIGN.md §5).
+
+A flat JSON file mapping ``(feature bucket, mesh shape, constraint set,
+dtype)`` keys to the measured winning candidate — DBCSR's autotuned
+parameter sets, per workload class instead of per kernel shape
+(arXiv:1910.13555).  With a warm DB the tuner performs **zero** timed
+trials: ``launch/purify.py`` / ``examples/linear_scaling_dft.py`` resolve
+``engine="auto"`` by lookup alone, and ``plan.cache_stats()`` proves it
+(``tuner_trials`` stays flat).
+
+The file format is versioned and append-friendly: records carry their
+measured seconds and the losing trials, so a later re-tune can compare.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+SCHEMA = "repro-tuning-db-v1"
+
+
+def make_key(bucket: tuple, mesh_sig: tuple, constraints: tuple,
+             dtype: str) -> str:
+    """Deterministic string key (JSON object keys must be strings)."""
+    return json.dumps(
+        [list(bucket), [list(p) for p in mesh_sig], list(constraints), dtype],
+        separators=(",", ":"),
+    )
+
+
+class TuningDB:
+    """In-memory record store with optional JSON persistence."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.records: dict[str, dict[str, Any]] = {}
+
+    # ---- persistence ---------------------------------------------------
+    @classmethod
+    def load(cls, path: str) -> "TuningDB":
+        db = cls(path)
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("schema") != SCHEMA:
+            raise ValueError(
+                f"{path}: unknown tuning-db schema {data.get('schema')!r}"
+            )
+        db.records = data.get("records", {})
+        return db
+
+    @classmethod
+    def load_or_create(cls, path: str) -> "TuningDB":
+        """Warm-start from ``path`` when it exists, else an empty DB that
+        will persist there on the first ``save()``."""
+        if path and os.path.exists(path):
+            return cls.load(path)
+        return cls(path)
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("TuningDB has no path; pass save(path=...)")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"schema": SCHEMA, "records": self.records}, f,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: readers never see a torn file
+        self.path = path
+        return path
+
+    # ---- records -------------------------------------------------------
+    def lookup(self, key: str) -> dict | None:
+        return self.records.get(key)
+
+    def record(self, key: str, decision: dict) -> None:
+        self.records[key] = decision
+        if self.path:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self.records)

@@ -1,0 +1,135 @@
+"""Sparsity-pattern featurization for the autotuning runtime (DESIGN.md §5).
+
+The paper's central empirical point is that the winning algorithm variant
+depends on the *application* sparsity pattern — banded near-sighted
+operators, exponential-decay fill, heterogeneous row loads — not just on
+the process count.  This module reduces a concrete BSM operand pair to the
+small feature vector the tuner keys its decisions on:
+
+* occupancies of A and B and the **product fill** (surviving (i, k, j)
+  triples / cube) computed from the *boolean mask product*
+  ``A_mask @ B_mask`` — exact for threshold 0, an upper bound otherwise
+  (the norm filter only removes products);
+* the estimated output fill (blocks of C with at least one contribution),
+  which decides whether post-filtering will keep the pattern sparse;
+* block-row bandwidth of both operands (the near-sightedness of the
+  operator — banded patterns keep fill-in local, random patterns do not);
+* panel byte sizes, which set the communication-volume scale of Eq. (7).
+
+``feature_bucket`` coarsens the vector (log2 shape classes, occupancy
+deciles) into the persisted tuning-database key: patterns that land in the
+same bucket share one measured decision, exactly like the capacity buckets
+of the compiled-program cache (``kernels/stacks.py``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import asdict, dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PairFeatures:
+    """Tuning features of one (A, B) multiply operand pair."""
+
+    nb_r: int
+    nb_k: int
+    nb_c: int
+    bs_r: int
+    bs_k: int
+    bs_c: int
+    dtype: str
+    occ_a: float  # block occupancy of A
+    occ_b: float  # block occupancy of B
+    n_products: int  # surviving (i, k, j) triples (mask product)
+    product_fill: float  # n_products / (nb_r * nb_k * nb_c)
+    out_fill: float  # fraction of C blocks with >= 1 contribution
+    bandwidth_a: float  # block-row bandwidth of A, normalized by nb
+    bandwidth_b: float
+    panel_kb: float  # one A home-shard-row panel triple, kilobytes
+
+    @property
+    def cube(self) -> int:
+        return self.nb_r * self.nb_k * self.nb_c
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+def _bandwidth(mask: np.ndarray) -> int:
+    """Largest |i - j| over occupied blocks (0 for empty/diagonal-only)."""
+    idx = np.argwhere(mask)
+    if idx.size == 0:
+        return 0
+    return int(np.abs(idx[:, 0] - idx[:, 1]).max())
+
+
+def _itemsize(dtype) -> int:
+    return int(np.dtype(str(np.dtype(dtype))).itemsize)
+
+
+def featurize(a, b, threshold: float = 0.0) -> PairFeatures:
+    """Feature vector of a concrete BSM pair (host-side, no device work).
+
+    The product count comes from the integer mask product — one
+    (nb_r, nb_k) x (nb_k, nb_c) matmul instead of materializing the
+    (nb_r, nb_k, nb_c) filter cube, so featurizing stays cheap at block
+    grids far larger than the compaction path walks.
+    """
+    am = np.asarray(a.mask, bool)
+    bm = np.asarray(b.mask, bool)
+    counts = am.astype(np.int64) @ bm.astype(np.int64)  # products per C block
+    n_products = int(counts.sum())
+    nb_r, nb_k = am.shape
+    nb_c = bm.shape[1]
+    cube = nb_r * nb_k * nb_c
+    bs_r, bs_k, bs_c = a.bs_r, a.bs_c, b.bs_c
+    itemsize = _itemsize(a.dtype)
+    # one block-row panel triple of A (blocks + mask + norms), the unit the
+    # engines move per pull — the s_a of Eq. (7) in bytes
+    panel_kb = nb_k * (bs_r * bs_k * itemsize + 1 + 4) / 1024.0
+    return PairFeatures(
+        nb_r=nb_r,
+        nb_k=nb_k,
+        nb_c=nb_c,
+        bs_r=bs_r,
+        bs_k=bs_k,
+        bs_c=bs_c,
+        dtype=str(np.dtype(a.dtype)),
+        occ_a=float(am.mean()) if am.size else 0.0,
+        occ_b=float(bm.mean()) if bm.size else 0.0,
+        n_products=n_products,
+        product_fill=n_products / cube if cube else 0.0,
+        out_fill=float((counts > 0).mean()) if counts.size else 0.0,
+        bandwidth_a=_bandwidth(am) / max(nb_r, 1),
+        bandwidth_b=_bandwidth(bm) / max(nb_k, 1),
+        panel_kb=panel_kb,
+    )
+
+
+def _log2_class(x: int) -> int:
+    return int(round(math.log2(max(int(x), 1))))
+
+
+def _decile(x: float, step: float = 0.1) -> int:
+    return min(int(x / step), int(round(1.0 / step)))
+
+
+def feature_bucket(f: PairFeatures) -> tuple:
+    """Coarse, stable bucket of a feature vector — the tuning-DB key part.
+
+    Shapes collapse to log2 classes, occupancies and fills to deciles:
+    application reruns with drifting-but-similar patterns (SCF loops,
+    serving traffic) re-hit one measured decision instead of re-tuning.
+    """
+    return (
+        "fb1",  # bucket-schema version (bump when fields change)
+        _log2_class(f.nb_r), _log2_class(f.nb_k), _log2_class(f.nb_c),
+        _log2_class(f.bs_r), _log2_class(f.bs_k), _log2_class(f.bs_c),
+        f.dtype,
+        _decile(f.occ_a), _decile(f.occ_b),
+        _decile(f.product_fill, 0.05),
+        _decile(f.out_fill),
+        _decile(f.bandwidth_a), _decile(f.bandwidth_b),
+    )

@@ -1,0 +1,107 @@
+"""Measured trials: the tuner's ground truth (DESIGN.md §5).
+
+The analytic model ranks; short timed trials decide.  Every trial runs
+through the ordinary ``engine.multiply`` path, so the compiled programs it
+builds land in (and are later served from) the plan layer's program cache —
+tuning is not wasted work: the winning candidate's executable is already
+hot when the application multiplies for real.
+
+Timing discipline: one untimed warm-up call per candidate (compile +
+cache fill), then ``reps`` *interleaved* timed rounds — each round times
+every candidate once, with ``block_until_ready`` — keeping the minimum
+per candidate.  Interleaving matters: machine-load drift during the pass
+hits all candidates alike instead of biasing whichever happened to run
+last, and the minimum filters one-off scheduler noise (the standard for
+microbenchmarks of cached programs; cf. benchmarks/bench_plan_cache.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.tuner.model import Candidate
+
+
+@dataclass(frozen=True)
+class Trial:
+    candidate: Candidate
+    seconds: float  # min over interleaved timed rounds of one multiply
+    error: str = ""  # non-empty when the trial failed (candidate skipped)
+
+    @property
+    def ok(self) -> bool:
+        return not self.error
+
+
+def measure_candidates(
+    a,
+    b,
+    mesh,
+    candidates,
+    *,
+    threshold: float = 0.0,
+    interpret: bool | None = None,
+    reps: int = 2,
+) -> list[Trial]:
+    """Time one multiply per candidate through the cached engine path.
+
+    Operands may be replicated ``BlockSparseMatrix`` (mesh passed through)
+    or ``ShardedBSM`` (already on the mesh — the trial measures exactly
+    the device-resident path the application will run).  A candidate that
+    fails to build/execute is returned with its error instead of aborting
+    the whole tuning pass.
+    """
+    from repro.core.bsm import ShardedBSM
+    from repro.core.engine import multiply
+
+    sharded = isinstance(a, ShardedBSM)
+
+    def make_run(c):
+        def run():
+            return multiply(
+                a, b, None if sharded else mesh,
+                engine=c.engine, threshold=threshold, backend=c.backend,
+                l=c.l, stack_capacity=c.stack_capacity, interpret=interpret,
+            )
+
+        return run
+
+    runners: dict[int, object] = {}
+    best: dict[int, float] = {}
+    errors: dict[int, str] = {}
+    for i, cand in enumerate(candidates):
+        run = make_run(cand)
+        try:
+            jax.block_until_ready(run().blocks)  # warm-up: compile/caches
+            runners[i] = run
+            best[i] = float("inf")
+        except Exception as e:  # noqa: BLE001 - surface per-candidate
+            errors[i] = repr(e)
+    for _ in range(reps):  # interleaved rounds (see module docstring)
+        for i, run in list(runners.items()):
+            try:
+                t0 = time.perf_counter()
+                out = run()
+                jax.block_until_ready(out.blocks)
+                best[i] = min(best[i], time.perf_counter() - t0)
+            except Exception as e:  # noqa: BLE001 - contain per candidate
+                errors[i] = repr(e)
+                del runners[i]  # a failed candidate is out of the race
+                del best[i]
+    return [
+        Trial(candidate=cand, seconds=best.get(i, float("inf")),
+              error=errors.get(i, ""))
+        for i, cand in enumerate(candidates)
+    ]
+
+
+def best_trial(trials) -> Trial:
+    ok = [t for t in trials if t.ok]
+    if not ok:
+        raise ValueError(
+            "every measured candidate failed: "
+            + "; ".join(f"{t.candidate.label}: {t.error}" for t in trials)
+        )
+    return min(ok, key=lambda t: t.seconds)

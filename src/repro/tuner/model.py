@@ -1,0 +1,290 @@
+"""Analytic candidate model: enumerate, cost, and prune (DESIGN.md §5).
+
+The tuner's first stage is purely analytic — no device work.  For a mesh
+and a feature vector it enumerates every feasible ``(engine, L, backend,
+stack_capacity)`` combination, prices each one with
+
+* the paper's communication-volume model evaluated on the *actual
+  compiled schedule* (``commvolume.plan_volume``, Eq. (7) incl.
+  non-square grids), converted to seconds at the roofline ICI rate, and
+* the local-stage roofline FLOP models (``roofline.hlo_cost``), dense
+  cube for the ``jnp`` backend, surviving-products for the compacted
+  backends (with the gather/scatter overhead factor that sets the
+  dense/compacted crossover — ``local_mm.backend_local_cost``),
+
+and prunes every candidate whose per-device memory footprint — the
+Eq. (6) buffer model (``commvolume.device_memory_bytes``) plus the
+compacted stack arrays sized by ``plan.get_device_capacity`` — exceeds
+the per-device budget.  The surviving candidates, ranked by modeled time,
+are what ``tuner.measure`` actually times: the analytic stage exists to
+keep the measured stage short, exactly as in DBCSR's autotuning
+(arXiv:1910.13555) and Hong et al.'s sparsity-aware algorithm selection
+(arXiv:2408.14558).
+
+Absolute times use TPU-v5e roofline constants, so on other hardware they
+are wrong in scale but consistent in *ranking* — which is all the prune
+needs; measurement has the final word.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import commvolume
+from repro.core import plan as plan_mod
+from repro.core.local_mm import backend_local_cost
+from repro.core.topology import validate_l
+from repro.roofline import ICI_BW, PEAK_FLOPS
+from repro.tuner.features import PairFeatures
+
+# per-device memory budget for candidate pruning: TPU v5e HBM with a 10%
+# reserve, overridable for tests / other targets
+_DEFAULT_BUDGET = 0.9 * 16e9
+
+
+def device_memory_budget() -> float:
+    """Per-device byte budget (``REPRO_DEVICE_MEMORY_BYTES`` overrides)."""
+    raw = os.environ.get("REPRO_DEVICE_MEMORY_BYTES", "").strip()
+    return float(raw) if raw else _DEFAULT_BUDGET
+
+
+# modeled per-tick dispatch/latency overhead: serializes the many-tick
+# schedules (Cannon's V hops) against the one-shot gather engine even when
+# their byte volumes tie.  Seconds; coarse on purpose — measurement refines.
+TICK_OVERHEAD_S = 20e-6
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the tuner's decision space."""
+
+    engine: str
+    l: int | None = None  # depth for twofive pull plans (None = plan default)
+    backend: str = "jnp"
+    stack_capacity: int | None = None  # compacted backends: device bound
+
+    @property
+    def label(self) -> str:
+        tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
+        return f"{tag}/{self.backend}"
+
+
+@dataclass(frozen=True)
+class Estimate:
+    """Analytic cost of one candidate on one (mesh, features) pair."""
+
+    candidate: Candidate
+    comm_s: float
+    compute_s: float
+    mem_bytes: float
+    feasible: bool
+    reason: str = ""  # why infeasible (empty when feasible)
+
+    @property
+    def total_s(self) -> float:
+        return self.comm_s + self.compute_s
+
+
+@dataclass(frozen=True)
+class ModelReport:
+    """Ranked feasible candidates + everything that was pruned."""
+
+    ranked: tuple[Estimate, ...]  # feasible, best modeled time first
+    pruned: tuple[Estimate, ...] = field(default=())
+
+
+def mesh_signature(mesh) -> tuple:
+    """Hashable, JSON-able identity of a mesh for decision/DB keys."""
+    return tuple((name, int(mesh.shape[name])) for name in mesh.axis_names)
+
+
+def valid_square_depths(p: int) -> list[int]:
+    """Depths L > 1 valid on a square p x p grid (paper §3 rule)."""
+    return [k * k for k in range(2, p + 1) if p % k == 0]
+
+
+def enumerate_candidates(
+    mesh,
+    feats: PairFeatures,
+    *,
+    ok=None,
+    engines: tuple[str, ...] | None = None,
+    backends: tuple[str, ...] | None = None,
+    l: int | None = None,
+) -> list[Candidate]:
+    """All (engine, L, backend, capacity) points feasible for ``mesh``.
+
+    ``ok`` — optional concrete filter cube; with it the compacted
+    backends get their exact bucketed per-device capacity
+    (``plan.get_device_capacity``), without it they are skipped (no sound
+    static bound to hand the compiled program).  ``engines`` / ``l`` /
+    ``backends`` restrict the space (caller-pinned choices).
+    """
+    axes = tuple(mesh.axis_names)
+    if backends is None:
+        import jax
+
+        backends = ("jnp", "pallas") if jax.default_backend() == "tpu" \
+            else ("jnp", "stacks")
+
+    pairs: list[tuple[str, int | None]] = []
+    if "l" in axes:
+        # stacked (l, r, c) mesh: the depth is physical, twofive only
+        pairs = [("twofive", None)]
+    else:
+        p_r, p_c = int(mesh.shape["r"]), int(mesh.shape["c"])
+        if p_r == p_c:
+            pairs = [("cannon", None), ("onesided", None), ("gather", None)]
+            pairs += [("twofive", d) for d in valid_square_depths(p_r)]
+        else:
+            pairs = [("onesided", None), ("gather", None)]
+            mn, mx = min(p_r, p_c), max(p_r, p_c)
+            if validate_l(p_r, p_c, mx // mn) and mx // mn > 1:
+                pairs.append(("twofive", mx // mn))
+    if engines is not None:
+        pairs = [(e, d) for e, d in pairs if e in engines]
+    if l is not None:
+        pairs = [(e, d) for e, d in pairs
+                 if (d == l if e == "twofive" else False) or e != "twofive"]
+
+    out: list[Candidate] = []
+    for engine, depth in pairs:
+        try:
+            plan = plan_mod.plan_multiply(mesh, engine, depth)
+            plan.validate_blocks(feats.nb_r, feats.nb_c)
+        except ValueError:
+            continue  # block grid does not divide this topology
+        for backend in backends:
+            if backend == "jnp":
+                out.append(Candidate(engine, depth, "jnp", None))
+            elif ok is not None:
+                cap = plan_mod.get_device_capacity(ok, mesh, engine)
+                if cap > 0:
+                    out.append(Candidate(engine, depth, backend, cap))
+    return out
+
+
+def _n_devices(mesh) -> int:
+    n = 1
+    for name in mesh.axis_names:
+        n *= int(mesh.shape[name])
+    return n
+
+
+def estimate_candidate(
+    cand: Candidate,
+    mesh,
+    feats: PairFeatures,
+    *,
+    budget_bytes: float | None = None,
+) -> Estimate:
+    """Model one candidate: comm seconds + local-compute seconds + the
+    Eq. (6) memory-feasibility verdict."""
+    budget = device_memory_budget() if budget_bytes is None else budget_bytes
+    plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
+    itemsize = float(np.dtype(feats.dtype).itemsize)
+    vol = commvolume.plan_volume(plan, feats.nb_r, feats.bs_r,
+                                 itemsize=itemsize)
+    comm_s = vol.total / ICI_BW + plan.ticks * TICK_OVERHEAD_S
+
+    ndev = _n_devices(mesh)
+    if cand.backend == "jnp":
+        fill = 1.0  # dense einsum contracts the full cube
+    else:
+        fill = feats.product_fill
+    local = backend_local_cost(
+        feats.nb_r, feats.nb_k, feats.nb_c,
+        feats.bs_r, feats.bs_k, feats.bs_c,
+        fill=fill, backend=cand.backend,
+    )
+    compute_s = local / ndev / PEAK_FLOPS
+
+    mem = commvolume.device_memory_bytes(
+        plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
+        stack_capacity=cand.stack_capacity or 0,
+    )
+    feasible = mem <= budget
+    reason = "" if feasible else (
+        f"memory {mem / 1e9:.2f} GB exceeds budget {budget / 1e9:.2f} GB "
+        f"(Eq. 6, L={plan.topo.l})"
+    )
+    return Estimate(
+        candidate=cand, comm_s=comm_s, compute_s=compute_s,
+        mem_bytes=mem, feasible=feasible, reason=reason,
+    )
+
+
+def rank_candidates(
+    mesh,
+    feats: PairFeatures,
+    *,
+    ok=None,
+    engines: tuple[str, ...] | None = None,
+    backends: tuple[str, ...] | None = None,
+    l: int | None = None,
+    budget_bytes: float | None = None,
+    top_k: int | None = None,
+) -> ModelReport:
+    """Enumerate -> estimate -> prune -> rank.  Raises ``ValueError`` when
+    no candidate fits the per-device memory budget (the caller must then
+    shrink the problem or raise the budget — silently over-committing
+    device memory is the one thing the tuner must never do)."""
+    cands = enumerate_candidates(
+        mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
+    )
+    if not cands:
+        raise ValueError(
+            f"no engine candidate fits mesh {mesh_signature(mesh)} and "
+            f"block grid {feats.nb_r}x{feats.nb_c}"
+        )
+    ests = [
+        estimate_candidate(c, mesh, feats, budget_bytes=budget_bytes)
+        for c in cands
+    ]
+    feasible = sorted((e for e in ests if e.feasible), key=lambda e: e.total_s)
+    pruned = tuple(e for e in ests if not e.feasible)
+    if not feasible:
+        raise ValueError(
+            "every candidate exceeds the per-device memory budget: "
+            + "; ".join(f"{e.candidate.label}: {e.reason}" for e in pruned)
+        )
+    if top_k is not None:
+        feasible = feasible[:top_k]
+    return ModelReport(ranked=tuple(feasible), pruned=pruned)
+
+
+def choose_local_backend(
+    ni: int, nk: int, nj: int,
+    bs_r: int, bs_k: int, bs_c: int,
+    fill: float,
+) -> str:
+    """Dense-vs-compacted local backend from the analytic cost model —
+    the generalization of the old fixed occupancy threshold: the
+    crossover now follows ``local_mm.backend_local_cost`` (and therefore
+    moves with rectangular block shapes), instead of a hard-coded fill.
+    Returns "jnp" or the compacted family's platform flavor."""
+    import jax
+
+    dense = backend_local_cost(ni, nk, nj, bs_r, bs_k, bs_c,
+                               fill=1.0, backend="jnp")
+    compact = backend_local_cost(ni, nk, nj, bs_r, bs_k, bs_c,
+                                 fill=fill, backend="stacks")
+    if dense <= compact:
+        return "jnp"
+    return "pallas" if jax.default_backend() == "tpu" else "stacks"
+
+
+def chain_safe(cand: Candidate) -> bool:
+    """Whether a candidate is sound for a *fused iteration chain*: the
+    sweep is traced once and the sparsity pattern evolves underneath it
+    (fill-in), so a static stack capacity derived from the initial
+    pattern could silently drop products mid-iteration.  Only the dense
+    local backend is chain-safe."""
+    return cand.backend == "jnp"
+
+
+def _sqrt_l_note(l: int) -> str:  # pragma: no cover - debug helper
+    return f"sqrt(L)={math.isqrt(l)}"

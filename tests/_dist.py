@@ -338,6 +338,97 @@ def check_signiter_sharded():
     print("signiter_sharded OK")
 
 
+def check_tuner_auto():
+    """engine="auto" on real multi-device meshes (DESIGN.md §5):
+
+    * the tuned multiply equals the single-device filtered oracle on
+      square, rectangular and stacked meshes (replicated AND sharded
+      operands);
+    * the decision is Eq. (6)-feasible and, on a rectangular grid, never
+      an engine the topology forbids (cannon);
+    * a warm tuning DB resolves with ZERO timed trials — the production
+      property the persisted database exists for;
+    * sign_iteration(engine="auto") matches the static legacy loop and
+      keys ONE chain program (the tuner resolves before the chain key).
+    """
+    import tempfile
+
+    from repro import tuner
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.engine import multiply, multiply_reference
+    from repro.core.signiter import sign_iteration, sign_iteration_legacy
+    from repro.launch.mesh import make_spgemm_mesh
+
+    a = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=0.3,
+                     pattern="decay", symmetric=True)
+    b = B.random_bsm(jax.random.key(1), nb=8, bs=8, occupancy=0.3,
+                     pattern="decay")
+    thr = 1e-6
+    ref = np.asarray(multiply_reference(a, b, threshold=thr).to_dense())
+
+    from jax.sharding import Mesh
+
+    meshes = [
+        make_spgemm_mesh(p=2),
+        Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("r", "c")),
+        make_spgemm_mesh(p=2, l=2),
+    ]
+    for mesh in meshes:
+        plan_mod.clear_cache()
+        c = multiply(a, b, mesh, engine="auto", threshold=thr)
+        np.testing.assert_allclose(np.asarray(c.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=str(dict(mesh.shape)))
+        s = plan_mod.cache_stats()
+        assert s["tuner_misses"] == 1 and s["tuner_trials"] >= 1, s
+
+    # rectangular grid: the decision can never be cannon (square-only)
+    mesh24 = meshes[1]
+    dec = tuner.autotune(a, b, mesh24, threshold=thr)
+    assert dec.engine != "cannon", dec
+
+    # sharded operands stay sharded through the tuned path
+    mesh2 = meshes[0]
+    plan_mod.clear_cache()
+    c = multiply(B.shard_bsm(a, mesh2), B.shard_bsm(b, mesh2),
+                 engine="auto", threshold=thr)
+    assert isinstance(c, B.ShardedBSM)
+    np.testing.assert_allclose(np.asarray(c.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+
+    # warm DB: zero timed trials in a "fresh process"
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "db.json")
+        plan_mod.clear_cache()
+        tuner.set_default_db(path)
+        multiply(a, b, mesh2, engine="auto", threshold=thr)
+        assert plan_mod.cache_stats()["tuner_trials"] >= 1
+        plan_mod.clear_cache()
+        tuner.set_default_db(path)
+        multiply(a, b, mesh2, engine="auto", threshold=thr)
+        s = plan_mod.cache_stats()
+        assert s["tuner_trials"] == 0 and s["tuner_hits"] == 1, s
+
+    # autotuned purification == static legacy loop; one chain program
+    plan_mod.clear_cache()
+    x = a
+    want, st_ref = sign_iteration_legacy(
+        x, mesh=mesh2, engine="onesided", threshold=1e-7, filter_eps=1e-6,
+        max_iter=60, tol=1e-6)
+    plan_mod.clear_cache()
+    got, st = sign_iteration(x, mesh=mesh2, engine="auto", threshold=1e-7,
+                             filter_eps=1e-6, max_iter=60, tol=1e-6)
+    assert st.converged and st.iterations == st_ref.iterations
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(want.to_dense()),
+                               rtol=1e-5, atol=1e-5)
+    s = plan_mod.cache_stats()
+    assert s["chain_misses"] == 1, s  # tuner resolved BEFORE the chain key
+    assert s["builds"] <= 1 + s["tuner_trials"], s
+    print("tuner_auto OK")
+
+
 def check_comm_volume():
     """Measured HLO collective bytes track the paper's volume model:
 
@@ -648,6 +739,7 @@ CHECKS = {
     "plan_rectangular": check_plan_rectangular,
     "plan_cache": check_plan_cache,
     "signiter_sharded": check_signiter_sharded,
+    "tuner_auto": check_tuner_auto,
     "comm_volume": check_comm_volume,
     "train_steps": check_train_steps,
     "serve_steps": check_serve_steps,

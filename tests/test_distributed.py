@@ -68,6 +68,14 @@ def test_signiter_sharded_device_resident():
     assert "signiter_sharded OK" in out
 
 
+def test_tuner_auto_multi_device():
+    """engine="auto": tuned multiplies == oracle on 2x2/2x4/stacked
+    meshes, warm-DB resolution is measurement-free, autotuned
+    purification matches the static loop."""
+    out = _run("tuner_auto")
+    assert "tuner_auto OK" in out
+
+
 def test_comm_volume_matches_paper_model():
     out = _run("comm_volume", "spgemm_scaling")
     assert "comm_volume OK" in out and "spgemm_scaling OK" in out

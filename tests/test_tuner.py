@@ -1,0 +1,400 @@
+"""Autotuning runtime: features, candidate model, pruning soundness, the
+tuning DB, the corpus, and the all-caches clear_cache contract.
+
+The candidate model and the Eq. (6) memory prune are *analytic* — they
+are property-tested here on abstract meshes (no devices needed), across
+rectangular grids and uneven depths.  End-to-end ``engine="auto"``
+resolution runs on a real 1x1 mesh (single CPU device); the multi-device
+behavior is covered by tests/_dist.py::check_tuner_auto.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro import tuner
+from repro.core import bsm as B
+from repro.core import plan as plan_mod
+from repro.core.commvolume import device_memory_bytes
+from repro.core.engine import multiply, multiply_reference
+from repro.tuner import (
+    Candidate,
+    TuningDB,
+    autotune,
+    feature_bucket,
+    featurize,
+    rank_candidates,
+)
+from repro.tuner.corpus import corpus, make_mask
+from repro.tuner.db import make_key
+from repro.tuner.model import (
+    enumerate_candidates,
+    estimate_candidate,
+    valid_square_depths,
+)
+
+
+class FakeMesh:
+    """Mesh stand-in for analytic-only tuning: axis names + sizes, no
+    devices.  Hash/eq by shape so ``plan_multiply``'s LRU treats equal
+    shapes as one topology."""
+
+    def __init__(self, **shape: int):
+        self._shape = dict(shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return dict(self._shape)
+
+    def __hash__(self):
+        return hash(tuple(self._shape.items()))
+
+    def __eq__(self, other):
+        return isinstance(other, FakeMesh) and other._shape == self._shape
+
+
+def _pair(nb=8, bs=4, occupancy=0.2, seed=0, pattern="decay"):
+    a = B.random_bsm(jax.random.key(seed), nb=nb, bs=bs,
+                     occupancy=occupancy, pattern=pattern)
+    b = B.random_bsm(jax.random.key(seed + 1), nb=nb, bs=bs,
+                     occupancy=occupancy, pattern=pattern)
+    return a, b
+
+
+def _ok_cube(a, b):
+    am, bm = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
+    return am[:, :, None] & bm[None, :, :]
+
+
+# ---- features --------------------------------------------------------------
+
+
+def test_featurize_counts_match_cube():
+    a, b = _pair(nb=10, bs=4, occupancy=0.3)
+    f = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    # the boolean mask product is EXACT at threshold 0
+    assert f.n_products == int(ok.sum())
+    assert f.product_fill == pytest.approx(ok.mean())
+    assert f.out_fill == pytest.approx(ok.any(axis=1).mean())
+    assert f.occ_a == pytest.approx(np.asarray(a.mask).mean())
+
+
+def test_featurize_bandwidth_banded():
+    a = B.random_bsm(jax.random.key(0), nb=12, bs=4, occupancy=0.1,
+                     pattern="banded", bandwidth=2)
+    f = featurize(a, a, 0.0)
+    assert f.bandwidth_a == pytest.approx(2 / 12)
+    assert f.nb_r == f.nb_k == 12 and f.bs_r == 4
+
+
+def test_feature_bucket_stable_and_discriminating():
+    a, b = _pair(nb=8, occupancy=0.2, seed=0)
+    f1 = featurize(a, b, 0.0)
+    assert feature_bucket(f1) == feature_bucket(featurize(a, b, 0.0))
+    big_a, big_b = _pair(nb=16, occupancy=0.2, seed=0)
+    assert feature_bucket(f1) != feature_bucket(featurize(big_a, big_b, 0.0))
+
+
+# ---- corpus ----------------------------------------------------------------
+
+
+def test_corpus_masks():
+    for kind in ("dft_chain", "exp_decay", "zipf"):
+        m = make_mask(kind, 16, jax.random.key(3), occupancy=0.2, bandwidth=2)
+        assert m.shape == (16, 16) and m.dtype == bool
+        assert m[np.arange(16), np.arange(16)].all()  # dominant diagonal
+        m2 = make_mask(kind, 16, jax.random.key(3), occupancy=0.2, bandwidth=2)
+        np.testing.assert_array_equal(m, m2)  # deterministic per key
+
+
+def test_corpus_zipf_is_heavy_tailed():
+    m = make_mask("zipf", 32, jax.random.key(0), occupancy=0.15,
+                  zipf_alpha=1.4)
+    rows = m.sum(axis=1)
+    assert rows.max() >= 4 * np.median(rows)  # hub rows dominate
+
+
+def test_corpus_entries_build():
+    for entry in corpus(smoke=True):
+        a, b = entry.build()
+        assert a.nb_r == entry.nb and a.bs_r == entry.bs
+        a2, b2 = entry.build()
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(a2.mask))
+        if entry.kind != "zipf":  # DFT families: symmetric H, B is H
+            np.testing.assert_array_equal(
+                np.asarray(a.mask), np.asarray(a.mask).T)
+
+
+# ---- candidate enumeration -------------------------------------------------
+
+
+def test_valid_square_depths():
+    assert valid_square_depths(2) == [4]
+    assert valid_square_depths(4) == [4, 16]
+    assert valid_square_depths(6) == [4, 9, 36]
+    assert valid_square_depths(3) == [9]
+
+
+def test_enumerate_square_vs_rectangular():
+    a, b = _pair(nb=8)
+    f = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    sq = enumerate_candidates(FakeMesh(r=2, c=2), f, ok=ok)
+    engines = {(c.engine, c.l) for c in sq}
+    assert ("cannon", None) in engines and ("twofive", 4) in engines
+    rect = enumerate_candidates(FakeMesh(r=2, c=4), f, ok=ok)
+    engines = {(c.engine, c.l) for c in rect}
+    assert ("cannon", None) not in engines  # square grids only
+    assert ("twofive", 2) in engines  # forced L = mx/mn
+    # mx > mn^2: the paper's rule forbids a 2.5D factorization
+    wide = enumerate_candidates(FakeMesh(r=2, c=8), f, ok=ok)
+    assert all(c.engine != "twofive" for c in wide)
+    stacked = enumerate_candidates(FakeMesh(l=2, r=2, c=2), f, ok=ok)
+    assert {c.engine for c in stacked} == {"twofive"}
+
+
+def test_enumerate_respects_constraints():
+    a, b = _pair(nb=8)
+    f = featurize(a, b, 0.0)
+    only = enumerate_candidates(FakeMesh(r=2, c=2), f,
+                                engines=("gather",), backends=("jnp",))
+    assert {(c.engine, c.backend) for c in only} == {("gather", "jnp")}
+    # without a concrete cube there is no sound capacity: compacted
+    # backends must be skipped, never guessed
+    nocube = enumerate_candidates(FakeMesh(r=2, c=2), f,
+                                  backends=("jnp", "stacks"))
+    assert {c.backend for c in nocube} == {"jnp"}
+
+
+# ---- Eq. (6) memory pruning: the property the tuner must never break -------
+
+_MESHES = [
+    {"r": 2, "c": 2},
+    {"r": 2, "c": 4},
+    {"r": 4, "c": 2},  # rectangular, forced virtual L = 2
+    {"r": 6, "c": 2},  # rectangular with mx > mn^2: no 2.5D factorization
+    {"r": 6, "c": 6},  # square with uneven L=9 (9 does not divide V=6)
+    {"r": 2, "c": 8},  # no valid 2.5D factorization at all
+    {"l": 2, "r": 2, "c": 2},
+]
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    mesh_shape=st.sampled_from(_MESHES),
+    budget=st.sampled_from([3e5, 1e6, 5e6, 1e8]),
+    occupancy=st.floats(min_value=0.05, max_value=0.6),
+)
+def test_prune_never_selects_over_budget(mesh_shape, budget, occupancy):
+    """The tuner NEVER selects a candidate whose Eq. (6) footprint
+    (incl. the device_stack_bound-sized stack arrays) exceeds the
+    per-device budget — across rectangular meshes and uneven L; when
+    nothing fits, it refuses rather than over-committing."""
+    mesh = FakeMesh(**mesh_shape)
+    a, b = _pair(nb=24, bs=4, occupancy=occupancy, seed=7)
+    f = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    try:
+        report = rank_candidates(mesh, f, ok=ok, budget_bytes=budget)
+    except ValueError:
+        # refusal is the sound outcome when every candidate is too big:
+        # verify at least the cheapest engine really exceeds the budget
+        est = estimate_candidate(Candidate("gather"), mesh, f,
+                                 budget_bytes=budget)
+        assert est.mem_bytes > budget
+        return
+    assert report.ranked, "feasible report must be non-empty"
+    for est in report.ranked:
+        assert est.feasible
+        assert est.mem_bytes <= budget, est
+        # independent recomputation from the plan tables
+        plan = plan_mod.plan_multiply(mesh, est.candidate.engine,
+                                      est.candidate.l)
+        mem = device_memory_bytes(
+            plan, f.nb_r, f.bs_r, itemsize=4.0,
+            stack_capacity=est.candidate.stack_capacity or 0,
+        )
+        assert mem == pytest.approx(est.mem_bytes)
+        assert mem <= budget
+    # compacted candidates carry the exact bucketed device bound
+    for est in report.ranked:
+        c = est.candidate
+        if c.backend != "jnp":
+            assert c.stack_capacity == plan_mod.get_device_capacity(
+                ok, mesh, c.engine)
+
+
+def test_analytic_decision_is_feasible():
+    """autotune(measure=False) on an abstract mesh returns a decision
+    whose footprint fits the budget."""
+    plan_mod.clear_cache()
+    mesh = FakeMesh(r=4, c=2)
+    a, b = _pair(nb=16, bs=4, occupancy=0.2)
+    dec = autotune(a, b, mesh, budget_bytes=1e8, measure=False)
+    est = estimate_candidate(
+        Candidate(dec.engine, dec.l, dec.backend, dec.stack_capacity),
+        mesh, featurize(a, b, 0.0), budget_bytes=1e8)
+    assert dec.source == "analytic" and est.feasible
+    s = plan_mod.cache_stats()
+    assert s["tuner_misses"] == 1 and s["tuner_trials"] == 0
+
+
+# ---- tuning DB -------------------------------------------------------------
+
+
+def test_db_roundtrip(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path)
+    key = make_key(("fb1", 3), (("r", 2), ("c", 2)), ("mult", "*", "*", 0),
+                   "float32")
+    db.record(key, {"engine": "gather", "l": None, "backend": "jnp",
+                    "measured_s": 1e-3})
+    db2 = TuningDB.load(path)
+    assert db2.lookup(key)["engine"] == "gather"
+    assert TuningDB.load_or_create(path).lookup(key) is not None
+    assert len(TuningDB.load_or_create(str(tmp_path / "missing.json"))) == 0
+
+
+def test_db_hit_revalidated_for_this_topology():
+    """A DB record must be re-run through the enumeration validity gates
+    on every hit: a corrupt / hand-copied / schema-drifted record (an L
+    the paper's rule forbids, an engine the grid shape excludes, a
+    compacted backend on an empty pattern) must fall through to a fresh
+    decision instead of crashing later in plan compilation."""
+    from repro.tuner import _db_candidate
+
+    mesh = FakeMesh(r=2, c=4)
+    a, b = _pair(nb=8, bs=4, occupancy=0.3)
+    feats = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    # cannon is square-grid-only: invalid on 2x4 no matter what the
+    # record says
+    assert _db_candidate({"engine": "cannon", "l": None, "backend": "jnp"},
+                         ok, mesh, feats) is None
+    # L=3 violates the paper rule on this grid (forced L is 2)
+    assert _db_candidate({"engine": "twofive", "l": 3, "backend": "jnp"},
+                         ok, mesh, feats) is None
+    # compacted backend over an empty pattern: no sound program to run
+    assert _db_candidate({"engine": "gather", "l": None,
+                          "backend": "stacks"},
+                         np.zeros_like(ok), mesh, feats) is None
+    good = _db_candidate({"engine": "gather", "l": None, "backend": "jnp"},
+                         ok, mesh, feats)
+    assert good is not None and good.engine == "gather"
+    # end-to-end: a poisoned record in the right bucket falls through to
+    # a fresh valid decision, not a crash in plan.validate_blocks
+    plan_mod.clear_cache()
+    db = TuningDB()
+    db.record(make_key(feature_bucket(feats),
+                       tuner.mesh_signature(mesh),
+                       ("mult", "*", "*", 0), feats.dtype),
+              {"engine": "cannon", "l": None, "backend": "jnp"})
+    dec = autotune(a, b, mesh, db=db, measure=False)
+    assert dec.engine != "cannon"
+    s = plan_mod.cache_stats()
+    assert s["tuner_misses"] == 1 and s["tuner_hits"] == 0, s
+
+
+def test_decision_cache_keys_on_budget():
+    """A decision made under one memory budget must never answer for
+    another — the Eq. (6) guarantee would silently break otherwise."""
+    plan_mod.clear_cache()
+    mesh = FakeMesh(r=2, c=2)
+    a, b = _pair(nb=16, bs=4, occupancy=0.2)
+    autotune(a, b, mesh, budget_bytes=1e9, measure=False)
+    autotune(a, b, mesh, budget_bytes=5e5, measure=False)
+    s = plan_mod.cache_stats()
+    assert s["tuner_misses"] == 2 and s["tuner_hits"] == 0, s
+    # same budget twice IS a cache hit
+    autotune(a, b, mesh, budget_bytes=5e5, measure=False)
+    assert plan_mod.cache_stats()["tuner_hits"] == 1
+
+
+def test_db_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema": "something-else", "records": {}}')
+    with pytest.raises(ValueError):
+        TuningDB.load(str(path))
+
+
+# ---- end-to-end engine="auto" on a real (1x1) mesh -------------------------
+
+
+def test_auto_multiply_matches_reference():
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=8, bs=8, occupancy=0.25)
+    plan_mod.clear_cache()
+    c = multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    ref = multiply_reference(a, b, threshold=1e-6)
+    np.testing.assert_allclose(np.asarray(c.to_dense()),
+                               np.asarray(ref.to_dense()),
+                               rtol=1e-5, atol=1e-5)
+    s1 = plan_mod.cache_stats()
+    assert s1["tuner_misses"] == 1 and s1["tuner_trials"] >= 1
+    # repeated pattern: decision-cache hit, zero new trials
+    multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    s2 = plan_mod.cache_stats()
+    assert s2["tuner_hits"] == s1["tuner_hits"] + 1
+    assert s2["tuner_trials"] == s1["tuner_trials"]
+
+
+def test_auto_warm_db_runs_zero_trials(tmp_path):
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=8, bs=8, occupancy=0.25, seed=3)
+    path = str(tmp_path / "db.json")
+    plan_mod.clear_cache()
+    tuner.set_default_db(path)
+    multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    assert plan_mod.cache_stats()["tuner_trials"] >= 1
+    assert len(tuner.get_default_db()) == 1
+    # a fresh process is simulated by clear_cache (drops decisions AND
+    # the DB binding) + re-binding the persisted file
+    plan_mod.clear_cache()
+    tuner.set_default_db(path)
+    multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    s = plan_mod.cache_stats()
+    assert s["tuner_trials"] == 0 and s["tuner_misses"] == 0, s
+    assert s["tuner_hits"] == 1, s
+
+
+# ---- clear_cache drops EVERY cache level (regression) ----------------------
+
+
+def test_clear_cache_drops_all_caches(tmp_path):
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=8, bs=8, occupancy=0.2, seed=5)
+    plan_mod.clear_cache()
+    tuner.set_default_db(str(tmp_path / "db.json"))
+    # populate every level: program + pattern + chain + tuner caches
+    multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    multiply(a, b, mesh, engine="gather", threshold=1e-6, backend="stacks")
+    from repro.core.signiter import sign_iteration
+
+    sign_iteration(a, mesh=mesh, engine="onesided", max_iter=2, tol=0.0)
+    stats = plan_mod.cache_stats()
+    assert stats["builds"] > 0 and stats["chain_misses"] == 1
+    assert stats["pattern_misses"] > 0 and stats["tuner_misses"] == 1
+    assert plan_mod.plan_multiply.cache_info().currsize > 0
+
+    plan_mod.clear_cache()
+    assert all(v == 0 for v in plan_mod.cache_stats().values()), (
+        plan_mod.cache_stats())
+    assert len(plan_mod._program_cache) == 0
+    assert len(plan_mod._pattern_cache) == 0
+    assert len(plan_mod._bound_cache) == 0
+    assert plan_mod.plan_multiply.cache_info().currsize == 0
+    assert len(tuner._decision_cache) == 0
+    assert tuner.get_default_db() is None  # DB binding reset too
+    # and the next resolution really is a cold miss
+    multiply(a, b, mesh, engine="auto", threshold=1e-6)
+    s = plan_mod.cache_stats()
+    assert s["tuner_misses"] == 1 and s["misses"] >= 1
