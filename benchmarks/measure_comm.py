@@ -11,6 +11,11 @@ compiled programs:
   * 2.5D volume drops vs L=1 and obeys Eq. (7)         [Fig. 3]
   * the plan-layer volume model predicts the measured bytes of every
     engine, including non-square (P_R != P_C) grids    [plan_volume]
+  * compressed transport cuts a 10%-occupancy multiply's bytes-on-wire
+    to <= 35% of the dense-transport bytes, and the sparsity-aware
+    volume model (Eq. (7) scaled by panel occupancy, exact bucketed
+    capacities) predicts the measured compressed HLO bytes too
+    [plan_volume(transport=...), DESIGN.md §3]
 """
 import os
 
@@ -23,6 +28,8 @@ import sys  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+import numpy as np  # noqa: E402
+
 from repro.core import plan as plan_mod  # noqa: E402
 from repro.core.commvolume import plan_volume  # noqa: E402
 from repro.core.engine import lower_multiply  # noqa: E402
@@ -30,17 +37,49 @@ from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
 from repro.roofline.hlo_cost import analyze_hlo  # noqa: E402
 
 NB, BS = 16, 8
+NB_SPARSE = 32  # the 10%-occupancy compressed-transport scenario
 
 
-def measure(mesh, engine, **kw) -> float:
-    lowered = lower_multiply(mesh, NB, BS, engine=engine, **kw)
+def measure(mesh, engine, nb=NB, **kw) -> float:
+    lowered = lower_multiply(mesh, nb, BS, engine=engine, **kw)
     rep = analyze_hlo(lowered.compile().as_text(), default_group=mesh.size)
     return rep.collective_wire_bytes
 
 
-def modeled(mesh, engine, c_layout="2d") -> float:
+def modeled(mesh, engine, nb=NB, c_layout="2d", transport=None) -> float:
     plan = plan_mod.plan_multiply(mesh, engine)
-    return plan_volume(plan, NB, BS, c_layout=c_layout).total
+    return plan_volume(plan, nb, BS, c_layout=c_layout,
+                       transport=transport).total
+
+
+def sparse_mask(nb: int) -> np.ndarray:
+    """Deterministic ~10%-occupancy banded mask ((i + j) % 10 == 0)."""
+    i = np.arange(nb)[:, None]
+    j = np.arange(nb)[None, :]
+    return np.asarray((i + j) % 10 == 0)
+
+
+def compressed_rows(rows) -> None:
+    """Compressed vs dense transport on the 10%-occupancy pattern: the
+    wire-byte ratio and the sparsity-aware model's fidelity (the
+    acceptance gates of the transport layer)."""
+    mask = sparse_mask(NB_SPARSE)
+    occ = float(mask.mean())
+    for engine, p in (("onesided", 4), ("cannon", 4), ("gather", 4)):
+        mesh = make_spgemm_mesh(p=p)
+        tr = plan_mod.get_transport(mask, mask, mesh, engine,
+                                    mode="compressed")
+        dense = measure(mesh, engine, nb=NB_SPARSE)
+        comp = measure(mesh, engine, nb=NB_SPARSE, transport=tr)
+        m = modeled(mesh, engine, nb=NB_SPARSE, transport=tr)
+        ratio = comp / dense
+        rows.append(
+            (f"measured/{engine}+ct/p{p}/bytes_per_dev", round(comp),
+             f"occ {occ:.2f}: x{ratio:.2f} of dense {dense:.0f}; "
+             f"model {m:.0f}: x{comp / m:.2f}")
+        )
+        assert ratio <= 0.35, (engine, ratio, comp, dense)
+        assert 0.8 < comp / m < 1.25, (engine, comp, m)
 
 
 def main() -> None:
@@ -90,6 +129,8 @@ def main() -> None:
         assert 0.8 < v1 / m1 < 1.25, (p_r, p_c, v1, m1)
         assert 0.8 < vl / ml < 1.25, (p_r, p_c, vl, ml)
         assert vl < v1, (p_r, p_c, vl, v1)  # 2.5D wins on non-square too
+
+    compressed_rows(rows)
 
     for name, val, note in rows:
         print(f"{name},{val},{note}")

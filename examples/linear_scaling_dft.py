@@ -7,7 +7,7 @@ P = 1/2 (I - sign(H - mu I)) of a sparse model Hamiltonian WITHOUT
 diagonalization, via the Newton-Schulz sign iteration (Eq. (3)) — two
 filtered block-sparse multiplications per iteration on the 2.5D engine.
 
-Runs the device-resident iteration engine (DESIGN.md §4): H is sharded
+Runs the device-resident iteration engine (DESIGN.md §5): H is sharded
 once at the chain boundary, every sweep is ONE dispatch of one compiled
 program (both multiplies + the inter-multiply algebra fused), the
 residual stays on the mesh and the host syncs it every ``sync_every``
@@ -15,7 +15,7 @@ sweeps.  The plan-layer cache counters printed at the end show the whole
 purification compiled exactly one program.
 
 With ``--tuning-db`` the engine is chosen by the pattern-aware autotuner
-(``engine="auto"``, DESIGN.md §5): H's banded pattern is featurized, the
+(``engine="auto"``, DESIGN.md §6): H's banded pattern is featurized, the
 Eq. 6/7 model prunes, short trials pick the winner, and the decision
 persists — a second run resolves measurement-free from the database.
 Without the flag the static 2.5D engine is used as before.

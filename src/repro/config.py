@@ -280,6 +280,29 @@ def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtyp
 # ---------------------------------------------------------------------------
 
 
+def transport_mode() -> str:
+    """Configured panel-transport mode: "auto" | "dense" | "compressed".
+
+    ``REPRO_TRANSPORT`` overrides (debugging / forcing a path): "dense"
+    pins the bit-exact full-panel permutes, "compressed" forces
+    occupancy-compressed packing (requires concrete operand patterns),
+    unset/"auto" lets the plan layer choose per pattern from the bucketed
+    capacity fill (``repro.core.transport.resolve_mode``).  Plumbed
+    through ``plan.resolve_transport`` the same way
+    ``REPRO_PALLAS_INTERPRET`` flows into the Pallas wrappers.
+    """
+    import os
+
+    raw = os.environ.get("REPRO_TRANSPORT", "auto").strip().lower()
+    if raw in ("", "auto"):
+        return "auto"
+    if raw in ("dense", "compressed"):
+        return raw
+    raise ValueError(
+        f"REPRO_TRANSPORT={raw!r}: expected auto | dense | compressed"
+    )
+
+
 def pallas_interpret() -> bool | None:
     """Configured Pallas interpret mode, or None for platform auto-detect.
 

@@ -186,7 +186,7 @@ def axpy(s, x: BlockSparseMatrix, y: BlockSparseMatrix) -> BlockSparseMatrix:
 
 
 # ---------------------------------------------------------------------------
-# ShardedBSM: device-resident block-sparse matrices (DESIGN.md §2, §4)
+# ShardedBSM: device-resident block-sparse matrices (DESIGN.md §2, §5)
 # ---------------------------------------------------------------------------
 
 
@@ -322,7 +322,7 @@ def shard_bsm(m: BlockSparseMatrix | ShardedBSM, mesh) -> ShardedBSM:
     """Scatter a BlockSparseMatrix to its 2D home layout on ``mesh``.
 
     The inverse of :meth:`ShardedBSM.unshard`; the two are the explicit
-    chain boundaries of DESIGN.md §4.  Idempotent on an already-sharded
+    chain boundaries of DESIGN.md §5.  Idempotent on an already-sharded
     matrix of the same mesh.
     """
     if isinstance(m, ShardedBSM):

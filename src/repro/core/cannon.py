@@ -18,8 +18,17 @@ One-sided streaming variant (OS1 of the paper, ``onesided``):
     case of the generalized pull executor in ``repro.core.twofive`` (the
     paper's OSL with L = 1 == OS1), so it also runs on non-square grids.
 
-Both engines communicate V*(S_A+S_B) per device (PTP additionally pre-shifts)
-— exactly the PTP == OS1 volume equality of Table 2.
+Communication goes through the shared transport layer
+(``repro.core.transport``, DESIGN.md §3): panels move either dense
+(blocks + mask; norms are never shipped — recomputed on arrival) or
+occupancy-compressed (packed blocks + indices, wire bytes proportional to
+occupancy), and the tick loop is double-buffered — the ring hop feeding
+tick t+1 is issued *before* the GEMM of tick t, so XLA overlaps the
+permute with the multiply the way the paper's non-blocking rgets do.
+
+Both engines communicate V*(S_A+S_B) per device (PTP additionally
+pre-shifts) under dense transport — exactly the PTP == OS1 volume
+equality of Table 2; compressed transport scales both by panel occupancy.
 """
 from __future__ import annotations
 
@@ -28,16 +37,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import pcast, shard_map
+from repro.core import transport as T
 from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
-
-
-def _panel_mm(carry_c, a, b, mm_kw):
-    (cb, cm) = carry_c
-    ab, am, an = a
-    bb, bm, bn = b
-    dcb, dcm = local_filtered_mm(ab, am, an, bb, bm, bn, **mm_kw)
-    return cb + dcb, cm | dcm
 
 
 def ring_body(
@@ -47,6 +49,7 @@ def ring_body(
     backend: str = "jnp",
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport: T.PanelTransport = T.DENSE,
 ):
     """The per-shard PTP Cannon body (shards in, C shard out).
 
@@ -61,15 +64,24 @@ def ring_body(
     )
     axes = plan.axes
     ticks = plan.ticks
+    tr = transport
 
     def body(ab, am, an, bb, bm, bn):
+        del an, bn  # norms never ride the ring (recomputed at compute time)
+        sa, sb = am.shape, bm.shape
+
+        def compute(pa, pb, cb, cm):
+            xb, xm = T.dense_view(tr, pa, *sa)
+            yb, ym = T.dense_view(tr, pb, *sb)
+            dcb, dcm = local_filtered_mm(
+                xb, xm, T.panel_norms(xb, threshold),
+                yb, ym, T.panel_norms(yb, threshold), **mm_kw,
+            )
+            return cb + dcb, cm | dcm
+
         # --- pre-shift (Algorithm 1): A_ij <- A_{i,(j+i)}, B_ij <- B_{(i+j),j}
-        ab, am, an = (
-            lax.ppermute(x, axes, list(plan.pre_a)) for x in (ab, am, an)
-        )
-        bb, bm, bn = (
-            lax.ppermute(x, axes, list(plan.pre_b)) for x in (bb, bm, bn)
-        )
+        pa = T.permute(T.ingest(tr, tr.cap_a, ab, am), axes, plan.pre_a)
+        pb = T.permute(T.ingest(tr, tr.cap_b, bb, bm), axes, plan.pre_b)
 
         cb = jnp.zeros(
             (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
@@ -78,28 +90,28 @@ def ring_body(
         cb = pcast(cb, axes, to="varying")
         cm = pcast(cm, axes, to="varying")
 
-        def tick(carry, _):
-            ab, am, an, bb, bm, bn, cb, cm = carry
-            cb, cm = _panel_mm(
-                (cb, cm), (ab, am, an), (bb, bm, bn), mm_kw
-            )
-            ab, am, an = (
-                lax.ppermute(x, "c", list(plan.shift_a)) for x in (ab, am, an)
-            )
-            bb, bm, bn = (
-                lax.ppermute(x, "r", list(plan.shift_b)) for x in (bb, bm, bn)
-            )
-            return (ab, am, an, bb, bm, bn, cb, cm), None
+        if ticks == 1:
+            return compute(pa, pb, cb, cm)
 
-        if ticks > 1:
-            (ab, am, an, bb, bm, bn, cb, cm), _ = lax.scan(
-                tick, (ab, am, an, bb, bm, bn, cb, cm), None, length=ticks - 1
+        # --- double-buffered ring: the hop for tick t+1 is in flight
+        # before the GEMM of tick t runs (paper §4 comm/compute overlap)
+        na = T.permute(pa, "c", plan.shift_a)
+        nb_ = T.permute(pb, "r", plan.shift_b)
+
+        def tick(carry, _):
+            pa, pb, na, nb_, cb, cm = carry
+            fa = T.permute(na, "c", plan.shift_a)
+            fb = T.permute(nb_, "r", plan.shift_b)
+            cb, cm = compute(pa, pb, cb, cm)
+            return (na, nb_, fa, fb, cb, cm), None
+
+        if ticks > 2:
+            (pa, pb, na, nb_, cb, cm), _ = lax.scan(
+                tick, (pa, pb, na, nb_, cb, cm), None, length=ticks - 2
             )
-        # final tick: compute only, no trailing shift (paper's itick==nticks)
-        cb, cm = _panel_mm(
-            (cb, cm), (ab, am, an), (bb, bm, bn), mm_kw
-        )
-        return cb, cm
+        # last two ticks: compute only, no trailing shift (itick==nticks)
+        cb, cm = compute(pa, pb, cb, cm)
+        return compute(na, nb_, cb, cm)
 
     return body
 

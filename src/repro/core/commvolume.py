@@ -80,20 +80,57 @@ def scaling_per_process(p: int, l: int, n_elems: float) -> float:
 
 
 def _panel_bytes(rows: int, cols: int, bs: int, itemsize: float) -> float:
-    """Wire bytes of one (rows x cols)-block panel *triple* as the engines
-    move it: blocks (itemsize), occupation mask (1 byte), norms (4 bytes)."""
-    blocks = rows * cols * bs * bs * itemsize
-    mask = rows * cols * 1.0
-    norms = rows * cols * 4.0
-    return blocks + mask + norms
+    """Wire bytes of one (rows x cols)-block panel as the engines move it
+    under dense transport: blocks (itemsize) + occupation mask (1 byte).
+    Norms never ride the wire any more — they are recomputed from the
+    received blocks (``transport.panel_norms``)."""
+    return rows * cols * (bs * bs * itemsize + 1.0)
+
+
+def _packed_bytes(entries: float, bs: int, itemsize: float) -> float:
+    """Wire bytes of one compressed panel: ``entries`` packed blocks plus
+    the one-based int32 index array (``transport.pack_panel``)."""
+    return entries * (bs * bs * itemsize + 4.0)
+
+
+def _transport_spec(transport) -> tuple[str, float | None, float | None]:
+    """Normalize a transport argument for the volume model: mode plus
+    exact per-panel capacities when available (a resolved
+    ``PanelTransport``), or None capacities for the occupancy-scaled
+    analytic flavor (mode given as the string "compressed")."""
+    if transport is None or transport == "dense":
+        return "dense", None, None
+    if transport == "compressed":
+        return "compressed", None, None
+    if getattr(transport, "mode", None) in ("dense", "compressed"):
+        if transport.mode == "dense":
+            return "dense", None, None
+        return "compressed", float(transport.cap_a), float(transport.cap_b)
+    raise ValueError(f"unknown transport spec {transport!r}")
 
 
 def plan_volume(
-    plan, nb: int, bs: int, *, itemsize: float = 4.0, c_layout: str = "2d"
+    plan,
+    nb: int,
+    bs: int,
+    *,
+    itemsize: float = 4.0,
+    c_layout: str = "2d",
+    transport=None,
+    occ_a: float = 1.0,
+    occ_b: float = 1.0,
 ) -> VolumeReport:
     """Predicted per-device collective wire bytes of one multiplication
     executed from ``plan`` — the paper's volume model evaluated on the
     *actual compiled schedule*, valid for non-square grids too.
+
+    Sparsity-aware: under compressed transport each A/B hop ships packed
+    blocks + indices instead of the dense panel, so the Eq. (7) A/B term
+    scales with panel occupancy.  ``transport`` may be a resolved
+    ``transport.PanelTransport`` (exact bucketed capacities — what
+    ``benchmarks/measure_comm.py`` asserts against the compiled HLO) or
+    the string ``"compressed"`` with ``occ_a``/``occ_b`` (the tuner's
+    analytic flavor: entries ~= occupancy x panel blocks, no bucketing).
 
     Mirrors the accounting conventions of ``roofline.hlo_cost.analyze_hlo``
     so ``benchmarks/measure_comm.py`` can compare measured vs. modeled:
@@ -103,30 +140,51 @@ def plan_volume(
     topo = plan.topo
     p_r, p_c, depth = plan.p_r, plan.p_c, topo.l
     nr, nc = nb // p_r, nb // p_c
+    mode, cap_a, cap_b = _transport_spec(transport)
+
+    def hop_a(rows: int, cols: int) -> float:
+        if mode == "compressed":
+            n = cap_a if cap_a is not None else occ_a * rows * cols
+            return _packed_bytes(n, bs, itemsize)
+        return _panel_bytes(rows, cols, bs, itemsize)
+
+    def hop_b(rows: int, cols: int) -> float:
+        if mode == "compressed":
+            n = cap_b if cap_b is not None else occ_b * rows * cols
+            return _packed_bytes(n, bs, itemsize)
+        return _panel_bytes(rows, cols, bs, itemsize)
 
     if plan.kind == "pull":
         wa = nc // plan.ca  # A subpanel block-cols (= nb / V)
         wb = nr // plan.cb  # B subpanel block-rows
         ab = 0.0
         for g in range(plan.ticks):
-            ab += len(plan.a_pulls[g]) * _panel_bytes(nr, wa, bs, itemsize)
-            ab += len(plan.b_pulls[g]) * _panel_bytes(wb, nc, bs, itemsize)
-        # L-1 partial-C sends: blocks + mask (no norms before reduction)
+            ab += len(plan.a_pulls[g]) * hop_a(nr, wa)
+            ab += len(plan.b_pulls[g]) * hop_b(wb, nc)
+        # L-1 partial-C sends: blocks + mask (always dense — the partial
+        # panels are accumulator state, not home panels with known bounds)
         c = len(plan.c_rounds) * (nr * nc * bs * bs * itemsize + nr * nc)
         name = f"pull-os{depth}"
     elif plan.kind == "ring":
-        hop = _panel_bytes(nr, nc, bs, itemsize)
-        ab = 2.0 * hop + (plan.ticks - 1) * 2.0 * hop  # pre-shift + hops
+        # pre-shift + (ticks - 1) double-buffered hops of A and B
+        ab = plan.ticks * (hop_a(nr, nc) + hop_b(nr, nc))
         c = 0.0
         name = "ring-ptp"
     elif plan.kind == "gather":
-        ga = _panel_bytes(nr, nb, bs, itemsize) * (p_c - 1) / p_c
-        gb = _panel_bytes(nb, nc, bs, itemsize) * (p_r - 1) / p_r
+        if mode == "compressed":
+            # untiled all-gather of each shard's packed buffer + indices:
+            # (p-1)/p of the gathered (p, capacity, ...) output
+            na = cap_a if cap_a is not None else occ_a * nr * nc
+            nb_e = cap_b if cap_b is not None else occ_b * nr * nc
+            ga = (p_c - 1) * _packed_bytes(na, bs, itemsize)
+            gb = (p_r - 1) * _packed_bytes(nb_e, bs, itemsize)
+        else:
+            ga = _panel_bytes(nr, nb, bs, itemsize) * (p_c - 1) / p_c
+            gb = _panel_bytes(nb, nc, bs, itemsize) * (p_r - 1) / p_r
         ab, c = ga + gb, 0.0
         name = "gather"
     elif plan.kind == "stacked":
-        hop = _panel_bytes(nr, nc, bs, itemsize)
-        ab = 2.0 * hop + (plan.ticks - 1) * 2.0 * hop
+        ab = plan.ticks * (hop_a(nr, nc) + hop_b(nr, nc))
         cb = nr * nc * bs * bs * itemsize + nr * nc * 4.0  # blocks + i32 mask
         if c_layout == "2d":
             c = 2.0 * cb * (depth - 1) / depth  # all-reduce over l
@@ -135,6 +193,8 @@ def plan_volume(
         name = f"stacked-l{depth}"
     else:
         raise ValueError(plan.kind)
+    if mode == "compressed":
+        name += "+ct"
     return VolumeReport(
         name, p_r, p_c, depth, plan.ticks, ab, c, ab + c
     )
@@ -158,9 +218,12 @@ def device_memory_bytes(
     * temporary panel buffers, counted with the paper's §3 buffer model
       (``Topology.total_buffers``: 4 for PTP, 6 for OS1, L+6 / L+sqrt(L)+4
       for OSL — the O(L) growth of Eq. (6)) at the panel granularity the
-      plan actually moves, plus the L-1 partial-C accumulators of the
-      pull formulation; the gather plan instead stages the full gathered
-      row/column panels;
+      plan actually moves, PLUS the extra in-flight panel generation the
+      double-buffered pipelining keeps (three generations per operand on
+      the ring engines, one prefetched tick group for the pull
+      formulation — DESIGN.md §3), plus the L-1 partial-C accumulators
+      of the pull formulation; the gather plan instead stages the full
+      gathered row/column panels;
     * the compacted-backend stack arrays when ``stack_capacity`` > 0:
       gathered A/B operands, the product buffer (f32) and the seven
       int32 index arrays of ``kernels.stacks.ProductStacks``.
@@ -168,13 +231,20 @@ def device_memory_bytes(
     The tuner prunes every candidate whose footprint exceeds the
     per-device budget — the one decision the measured trials must never
     be allowed to make (an OOM trial is not a data point).
+
+    Panel temporaries are counted at their dense size regardless of
+    transport: compressed buffers are strictly smaller (packed blocks +
+    indices, unpacked transiently for the GEMM), so the dense accounting
+    stays a sound upper bound for the prune.
     """
     topo = plan.topo
     nr, nc = nb // plan.p_r, nb // plan.p_c
     shard = _panel_bytes(nr, nc, bs, itemsize)
     total = 3.0 * shard  # A, B, C home shards
     if plan.kind == "ring":
-        total += 4.0 * shard  # PTP: 4 temporaries (paper §3)
+        # pipelined ring: three panel generations per operand in flight
+        # (current / next / prefetched hop — cannon.ring_body)
+        total += 6.0 * shard
     elif plan.kind == "gather":
         total += _panel_bytes(nr, nb, bs, itemsize)  # gathered A row panel
         total += _panel_bytes(nb, nc, bs, itemsize)  # gathered B col panel
@@ -184,9 +254,12 @@ def device_memory_bytes(
             _panel_bytes(nr // plan.cb, nc, bs, itemsize),  # B subpanel
         )
         total += topo.total_buffers * sub
+        # the prefetched next tick group's panel set (pull pipelining)
+        total += (topo.l_r + topo.l_c) * sub
         total += (topo.l - 1) * shard  # partial C panels of the L targets
     elif plan.kind == "stacked":
-        total += 4.0 * shard  # double-buffered ring panels
+        # pipelined ring panels: three generations per operand
+        total += 6.0 * shard
         # reduction buffer over the depth axis
         total += shard if c_layout == "2d" else shard / topo.l
     else:

@@ -84,7 +84,7 @@ def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
 
     Delegates to the shared analytic model
     (``local_mm.backend_local_cost``, also used by the tuner's candidate
-    ranking — DESIGN.md §5): dense einsum when the full-cube MXU work
+    ranking — DESIGN.md §6): dense einsum when the full-cube MXU work
     undercuts the compacted path's gathered products, compacted list
     otherwise; the compacted flavor is the Pallas kernel on real TPU and
     the jnp gather-GEMM-scatter elsewhere.  Traced inputs (inside someone
@@ -212,15 +212,17 @@ def multiply(
     l: int | None = None,
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport=None,
 ) -> BlockSparseMatrix | ShardedBSM:
     """Distributed filtered C = A . B.
 
     engine     — one of ``ENGINES``, or ``"auto"``: the pattern-aware
                  tuner (``repro.tuner``) picks engine, depth L, local
-                 backend and stack capacity from the concrete sparsity
-                 pattern — analytic Eq. 6/7 pruning, then short measured
-                 trials, with winners persisted in the tuning DB so later
-                 runs resolve without timing anything.
+                 backend, stack capacity and panel transport from the
+                 concrete sparsity pattern — analytic Eq. 6/7 pruning,
+                 then short measured trials, with winners persisted in
+                 the tuning DB so later runs resolve without timing
+                 anything.
     threshold  — on-the-fly filter: skip block products with
                  norm(A_ik) * norm(B_kj) <= threshold.
     filter_eps — post-multiplication filter: drop result blocks with
@@ -237,6 +239,14 @@ def multiply(
                  pattern when omitted (exact single-device, sound
                  per-device bound distributed).
     interpret  — Pallas execution mode (None = platform auto-detect).
+    transport  — panel transport: a ``transport.PanelTransport``, or
+                 "auto" | "dense" | "compressed" (None = the configured
+                 default, ``REPRO_TRANSPORT``/auto).  "auto" packs only
+                 occupied blocks into bounded buffers when the pattern's
+                 fill is low (wire bytes scale with occupancy — DESIGN.md
+                 §3) and keeps the bit-exact dense panels otherwise; the
+                 plan layer derives sound per-panel capacities from the
+                 concrete masks (``plan.get_transport``).
 
     ShardedBSM operands take the device-resident path: the multiply runs
     on the shards (``plan.execute_sharded``) and returns a ShardedBSM —
@@ -272,10 +282,16 @@ def multiply(
             dec = tuner.autotune(
                 a, b, a.mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
+                transport=_transport_pin(transport),
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
                 stack_capacity = dec.stack_capacity
+            if transport is None or transport == "auto":
+                # adopt the tuner's measured mode (as resolve_multiply
+                # does) — "auto" left in place would re-resolve through
+                # the static crossover and could contradict the trials
+                transport = dec.transport
         elif backend == "auto":
             # the auto heuristic walks the concrete pattern on the host —
             # a round-trip the device-resident path exists to avoid
@@ -284,6 +300,7 @@ def multiply(
             a, b, engine,
             threshold=threshold, backend=backend, l=l,
             stack_capacity=stack_capacity, interpret=interpret,
+            transport=transport,
         )
         eps = threshold if filter_eps is None else filter_eps
         return c.filter(eps) if eps > 0.0 else c
@@ -291,17 +308,21 @@ def multiply(
         if mesh is None:
             engine = "twofive"  # single-device: the engine is vestigial
         else:
-            # delegate the whole (engine, L, backend, capacity) decision
-            # to the tuner (repro.tuner, DESIGN.md §5)
+            # delegate the whole (engine, L, backend, capacity, transport)
+            # decision to the tuner (repro.tuner, DESIGN.md §6)
             from repro import tuner
 
             dec = tuner.autotune(
                 a, b, mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
+                transport=_transport_pin(transport),
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
                 stack_capacity = dec.stack_capacity
+            if transport is None or transport == "auto":
+                # adopt the tuner's measured mode (see the sharded path)
+                transport = dec.transport
     # one host walk of the concrete filter cube serves both the auto
     # heuristic and the distributed capacity bound
     ok_np = None
@@ -330,11 +351,24 @@ def multiply(
             a, b, mesh, engine,
             threshold=threshold, backend=backend, c_layout=c_layout, l=l,
             stack_capacity=stack_capacity, interpret=interpret,
+            transport=transport,
         )
     eps = threshold if filter_eps is None else filter_eps
     if eps > 0.0:
         c = filter_bsm(c, eps)
     return c
+
+
+def _transport_pin(transport) -> str | None:
+    """The tuner constraint a caller-supplied transport implies: explicit
+    modes pin the decision, ``None``/"auto" leave it to the tuner."""
+    from repro.core.transport import PanelTransport
+
+    if isinstance(transport, PanelTransport):
+        return transport.mode
+    if transport in ("dense", "compressed"):
+        return transport
+    return None
 
 
 def lower_multiply(
@@ -350,10 +384,16 @@ def lower_multiply(
     l: int | None = None,
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport=None,
 ):
     """Lower (without executing) one multiplication for HLO inspection —
     the source of the measured collective bytes in the benchmarks.  Shares
-    the plan-layer program cache with ``multiply``."""
+    the plan-layer program cache with ``multiply``.
+
+    ``transport`` must be a resolved ``PanelTransport`` (or None = dense):
+    lowering is abstract, so there is no pattern to resolve "auto" from —
+    derive capacities from a concrete mask via ``plan.get_transport``.
+    """
     fn = plan_mod.get_compiled(
         mesh,
         engine,
@@ -366,6 +406,7 @@ def lower_multiply(
         l=l,
         stack_capacity=stack_capacity,
         interpret=interpret,
+        transport=transport,
     )
     blk = jax.ShapeDtypeStruct((nb, nb, bs, bs), dtype)
     m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)

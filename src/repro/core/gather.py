@@ -21,10 +21,10 @@ predicted-volume model).
 """
 from __future__ import annotations
 
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import transport as T
 from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
 
@@ -36,21 +36,28 @@ def gather_body(
     backend: str = "jnp",
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport: T.PanelTransport = T.DENSE,
 ):
     """The per-shard all-gather body (exposed for chain fusion — the
     panel all-gathers here are the engine's *internal* pulls, not a
-    C gather; C comes home sharded)."""
+    C gather; C comes home sharded).
+
+    The gathers go through the transport layer: dense moves blocks +
+    mask (norms recomputed after the gather), compressed all-gathers
+    each home shard's packed buffer — still one fused collective pair
+    per operand, with bytes proportional to occupancy.
+    """
+    tr = transport
 
     def body(ab, am, an, bb, bm, bn):
+        del an, bn  # norms are not gathered (recomputed from the blocks)
         # pull the full block row of A / block column of B from home
-        ab = lax.all_gather(ab, "c", axis=1, tiled=True)
-        am = lax.all_gather(am, "c", axis=1, tiled=True)
-        an = lax.all_gather(an, "c", axis=1, tiled=True)
-        bb = lax.all_gather(bb, "r", axis=0, tiled=True)
-        bm = lax.all_gather(bm, "r", axis=0, tiled=True)
-        bn = lax.all_gather(bn, "r", axis=0, tiled=True)
+        ab, am = T.all_gather_panels(tr, tr.cap_a, ab, am, "c", axis=1)
+        bb, bm = T.all_gather_panels(tr, tr.cap_b, bb, bm, "r", axis=0)
         return local_filtered_mm(
-            ab, am, an, bb, bm, bn, threshold=threshold, backend=backend,
+            ab, am, T.panel_norms(ab, threshold),
+            bb, bm, T.panel_norms(bb, threshold),
+            threshold=threshold, backend=backend,
             stack_capacity=stack_capacity, interpret=interpret,
         )
 

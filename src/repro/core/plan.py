@@ -32,8 +32,22 @@ Compiled-program cache
 
 ``get_compiled`` returns a jitted shard_map program, LRU-cached on
 ``(mesh, engine, nb, bs, dtype, threshold, backend, c_layout, l,
-stack_capacity, interpret)`` so the hot paths (sign iteration, serving,
-benchmark loops) never retrace or re-lower after the first call.
+stack_capacity, interpret, transport)`` so the hot paths (sign
+iteration, serving, benchmark loops) never retrace or re-lower after the
+first call.
+
+Panel transport
+---------------
+
+Engines no longer inline their communication: panel movement goes
+through ``repro.core.transport`` (DESIGN.md §3), either ``dense``
+(bit-exact full-panel permutes, norms dropped from the wire) or
+``compressed`` (occupancy-packed buffers whose capacities are derived
+soundly per device here, like PR 2's stack bounds).  ``get_transport``
+resolves mode + capacities from the concrete operand masks (LRU-cached
+on the pattern signatures; ``REPRO_TRANSPORT`` overrides the mode) and
+the result joins the program-cache key; ``transport_*`` counters in
+``cache_stats()`` expose the resolutions.
 ``get_local_compiled`` does the same for the single-device compacted
 local stage (the ``stacks``/``pallas`` backends), keyed on block-grid
 shape and *capacity bucket* — patterns with equal bucketed product counts
@@ -44,7 +58,7 @@ Autotuned dispatch
 ------------------
 
 ``execute`` / ``execute_sharded`` accept ``engine="auto"``: the decision
-layer above this cache (``repro.tuner``, DESIGN.md §5) resolves
+layer above this cache (``repro.tuner``, DESIGN.md §6) resolves
 ``(engine, L, backend, stack_capacity)`` from the concrete sparsity
 pattern — analytic Eq. 6/7 pruning, then short measured trials whose
 winners persist in a tuning database.  Tuner decisions are counted in
@@ -381,6 +395,10 @@ class CacheStats:
     tuner_hits: int = 0  # engine="auto" decisions served without trials
     tuner_misses: int = 0  # decisions that needed analytic rank / trials
     tuner_trials: int = 0  # candidates actually timed by the tuner
+    transport_hits: int = 0  # transport resolutions served from the cache
+    transport_misses: int = 0  # resolutions that walked the masks
+    transport_dense: int = 0  # fresh resolutions that chose dense panels
+    transport_compressed: int = 0  # ... that chose compressed panels
 
     def as_dict(self) -> dict:
         return {
@@ -395,6 +413,10 @@ class CacheStats:
             "tuner_hits": self.tuner_hits,
             "tuner_misses": self.tuner_misses,
             "tuner_trials": self.tuner_trials,
+            "transport_hits": self.transport_hits,
+            "transport_misses": self.transport_misses,
+            "transport_dense": self.transport_dense,
+            "transport_compressed": self.transport_compressed,
         }
 
 
@@ -402,6 +424,7 @@ _CACHE_MAXSIZE = 128
 _program_cache: OrderedDict[tuple, object] = OrderedDict()
 _pattern_cache: OrderedDict[bytes, tuple] = OrderedDict()
 _bound_cache: OrderedDict[tuple, int] = OrderedDict()
+_transport_cache: OrderedDict[tuple, object] = OrderedDict()
 _stats = CacheStats()
 
 
@@ -424,11 +447,13 @@ def cache_stats() -> dict:
 def clear_cache() -> None:
     """Drop ALL plan-layer caches and zero every counter: compiled
     programs (incl. chain steps), pattern product-lists, capacity bounds,
-    the compiled-schedule LRU (``plan_multiply``) and any registered
-    satellite caches (the tuner's decision cache + default-DB binding)."""
+    transport resolutions, the compiled-schedule LRU (``plan_multiply``)
+    and any registered satellite caches (the tuner's decision cache +
+    default-DB binding)."""
     _program_cache.clear()
     _pattern_cache.clear()
     _bound_cache.clear()
+    _transport_cache.clear()
     plan_multiply.cache_clear()
     for fn in _extra_caches:
         fn()
@@ -436,6 +461,8 @@ def clear_cache() -> None:
     _stats.pattern_hits = _stats.pattern_misses = 0
     _stats.chain_hits = _stats.chain_misses = 0
     _stats.tuner_hits = _stats.tuner_misses = _stats.tuner_trials = 0
+    _stats.transport_hits = _stats.transport_misses = 0
+    _stats.transport_dense = _stats.transport_compressed = 0
 
 
 # ---------------------------------------------------------------------------
@@ -526,6 +553,133 @@ def get_device_capacity(ok, mesh, engine: str) -> int:
     return cap
 
 
+def get_transport(
+    mask_a,
+    mask_b,
+    mesh,
+    engine: str,
+    l: int | None = None,
+    mode: str = "auto",
+):
+    """Resolve the panel transport for one (pattern pair, mesh, engine).
+
+    Derives the sound bucketed per-panel capacities from the concrete
+    operand masks — the maximum occupied-block count over every A / B
+    panel the plan's schedule ships (whole shards for ring / stacked /
+    gather, virtual-grid subpanels for the pull formulation) — and
+    applies the ``auto`` crossover (``transport.resolve_mode``).
+    LRU-cached on the pattern signatures like the product lists, so a
+    repeated pattern re-derives nothing; counted by the ``transport_*``
+    fields of ``cache_stats()``.
+    """
+    import numpy as np
+
+    from repro.core import transport as T
+    from repro.kernels.stacks import pattern_signature
+
+    am = np.asarray(mask_a, bool)
+    bm = np.asarray(mask_b, bool)
+    key = (
+        "transport", pattern_signature(am), pattern_signature(bm),
+        tuple((n, int(mesh.shape[n])) for n in mesh.axis_names),
+        engine, l, mode,
+    )
+    hit = _transport_cache.get(key)
+    if hit is not None:
+        _stats.transport_hits += 1
+        _transport_cache.move_to_end(key)
+        return hit
+    _stats.transport_misses += 1
+    plan = plan_multiply(mesh, engine, l)
+    (ar, ac), (br, bc) = T.plan_panel_parts(plan)
+    cap_a = T.bucket(T.panel_nnz_bound(am, ar, ac))
+    cap_b = T.bucket(T.panel_nnz_bound(bm, br, bc))
+    blocks_a = (am.shape[0] // ar) * (am.shape[1] // ac)
+    blocks_b = (bm.shape[0] // br) * (bm.shape[1] // bc)
+    resolved = T.resolve_mode(mode, cap_a, cap_b, blocks_a, blocks_b)
+    if resolved == "compressed":
+        tr = T.PanelTransport("compressed", cap_a, cap_b)
+        _stats.transport_compressed += 1
+    else:
+        tr = T.DENSE
+        _stats.transport_dense += 1
+    _transport_cache[key] = tr
+    if len(_transport_cache) > _CACHE_MAXSIZE:
+        _transport_cache.popitem(last=False)
+        _stats.evictions += 1
+    return tr
+
+
+def resolve_transport(spec, a, b, mesh, engine: str, l: int | None = None):
+    """Normalize a transport spec to a concrete ``PanelTransport``.
+
+    ``spec`` may be a ready ``PanelTransport`` (revalidated against this
+    engine's panel partition — see below), a mode string (``"auto"`` /
+    ``"dense"`` / ``"compressed"``), or ``None`` — the configured
+    default (``config.transport_mode``, overridable via
+    ``REPRO_TRANSPORT``).  Mode strings other than ``"dense"`` need
+    concrete operand masks to derive capacities from; traced operands
+    fall back to dense under ``auto`` (no pattern to pack against — the
+    same degradation ``backend="auto"`` applies) and are an error under
+    a forced ``"compressed"``.
+
+    An explicit compressed ``PanelTransport`` is checked against the
+    sound bounds of THIS (mesh, engine, pattern): capacities derived for
+    one plan kind (e.g. pull subpanels) can under-cover another's panels
+    (e.g. cannon's whole shards), and ``pack_panel`` truncates silently —
+    under-capacity must be an error here, never a wrong C.  Traced
+    operands skip the check (no pattern to validate against).
+    """
+    import jax
+
+    from repro.core import transport as T
+
+    traced = (
+        isinstance(a.mask, jax.core.Tracer)
+        or isinstance(b.mask, jax.core.Tracer)
+    )
+    if isinstance(spec, T.PanelTransport):
+        if spec.compressed and not traced:
+            # compare against the RAW per-panel bounds (not the bucketed
+            # capacities get_transport hands out): any capacity covering
+            # the true maximum occupied count is sound
+            import numpy as np
+
+            plan = plan_multiply(mesh, engine, l)
+            (ar, ac), (br, bc) = T.plan_panel_parts(plan)
+            need_a = T.panel_nnz_bound(np.asarray(a.mask, bool), ar, ac)
+            need_b = T.panel_nnz_bound(np.asarray(b.mask, bool), br, bc)
+            if spec.cap_a < need_a or spec.cap_b < need_b:
+                raise ValueError(
+                    f"transport capacities ({spec.cap_a}, {spec.cap_b}) "
+                    f"under-cover the {engine!r} plan's panels "
+                    f"(need >= ({need_a}, {need_b})): packing would "
+                    "silently drop blocks"
+                )
+        return spec
+    if spec is None:
+        from repro.config import transport_mode
+
+        mode = transport_mode()
+    else:
+        mode = spec
+    if mode == "dense":
+        return T.DENSE
+    if mode not in ("auto", "compressed"):
+        raise ValueError(
+            f"unknown transport {mode!r}; a PanelTransport or one of "
+            "auto | dense | compressed"
+        )
+    if traced:
+        if mode == "compressed":
+            raise ValueError(
+                "transport='compressed' needs concrete operand patterns "
+                "to derive sound panel capacities (operands are traced)"
+            )
+        return T.DENSE
+    return get_transport(a.mask, b.mask, mesh, engine, l, mode)
+
+
 def get_local_compiled(
     ni: int,
     nk: int,
@@ -595,17 +749,20 @@ def get_local_compiled(
 
 def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
                   c_layout: str, stack_capacity: int | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, transport=None):
     """Construct (untraced) the shard_map executor for a plan."""
     if c_layout != "2d" and plan.kind != "stacked":
         raise ValueError(
             f"c_layout={c_layout!r} needs the stacked (l, r, c) mesh; "
             f"the {plan.kind!r} plan keeps C in the 2D (r, c) layout"
         )
+    from repro.core import transport as T
+
     _stats.builds += 1
     kw = dict(
         threshold=threshold, backend=backend,
         stack_capacity=stack_capacity, interpret=interpret,
+        transport=transport if transport is not None else T.DENSE,
     )
     if plan.kind == "ring":
         from repro.core.cannon import ring_executor
@@ -628,7 +785,7 @@ def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
 
 def build_shard_body(plan: MultiplyPlan, *, threshold: float, backend: str,
                      stack_capacity: int | None = None,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None, transport=None):
     """The engine's raw per-shard body: ``(ab, am, an, bb, bm, bn) ->
     (cb, cm)`` on shards, no shard_map wrapper.
 
@@ -638,11 +795,19 @@ def build_shard_body(plan: MultiplyPlan, *, threshold: float, backend: str,
     them, which is what makes the fused chain step a single cheap
     dispatch.  C always comes home in the 2D (r, c) layout (the stacked
     plan uses its c_layout="2d" psum), so chained calls compose.
+
+    ``transport`` defaults to dense: chains are traced once while the
+    sparsity pattern evolves underneath them, so a static compressed
+    capacity from the initial pattern would be unsound — the same reason
+    chains pin the dense local backend (``tuner.model.chain_safe``).
     """
+    from repro.core import transport as T
+
     _stats.builds += 1
     kw = dict(
         threshold=threshold, backend=backend,
         stack_capacity=stack_capacity, interpret=interpret,
+        transport=transport if transport is not None else T.DENSE,
     )
     if plan.kind == "ring":
         from repro.core.cannon import ring_body
@@ -676,14 +841,23 @@ def get_compiled(
     l: int | None = None,
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport=None,
 ):
     """Jitted multiply program for the key, LRU-cached.
 
     Repeated multiplies with the same key return the *same* jitted callable,
     so jax's compilation cache is hit and no retracing/relowering happens —
     the per-call dispatch cost collapses to argument handling.
+
+    ``transport`` must already be concrete here (a ``PanelTransport`` or
+    None = dense): mode and capacities are part of the key, so callers
+    resolve patterns *before* keying (``execute`` / ``execute_sharded``
+    via :func:`resolve_transport`) — an auto decision must never get
+    baked into a None-keyed entry.
     """
     import jax
+
+    from repro.core import transport as T
 
     if backend == "pallas" and interpret is None:
         # resolve before keying (as in get_local_compiled): the
@@ -691,9 +865,18 @@ def get_compiled(
         from repro.kernels.ops import _default_interpret
 
         interpret = _default_interpret()
+    if transport is None:
+        transport = T.DENSE
+    elif not isinstance(transport, T.PanelTransport):
+        raise TypeError(
+            "get_compiled takes a resolved PanelTransport (or None = "
+            f"dense), got {transport!r}; resolve mode strings with "
+            "plan.resolve_transport first"
+        )
     key = (
         mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
         float(threshold), backend, c_layout, l, stack_capacity, interpret,
+        transport.key,
     )
     prog = _program_cache.get(key)
     if prog is not None:
@@ -706,6 +889,7 @@ def get_compiled(
     fn = build_program(
         plan, threshold=threshold, backend=backend, c_layout=c_layout,
         stack_capacity=stack_capacity, interpret=interpret,
+        transport=transport,
     )
     prog = jax.jit(fn)
     _program_cache[key] = prog
@@ -728,6 +912,9 @@ def execute(a, b, mesh, engine: str, **kw):
         from repro.tuner import resolve_multiply
 
         engine, kw = resolve_multiply(a, b, mesh, kw)
+    kw["transport"] = resolve_transport(
+        kw.get("transport"), a, b, mesh, engine, kw.get("l")
+    )
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype, **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
@@ -754,6 +941,15 @@ def execute_sharded(a, b, engine: str, **kw):
         from repro.tuner import resolve_multiply
 
         engine, kw = resolve_multiply(a, b, mesh, kw)
+    # transport resolution under the default "auto" costs one host pull
+    # + digest of the 2D masks PER CALL (the signature hash, not the
+    # cache lookup, is the cost — it must sync the device-resident
+    # mask).  Latency-critical async loops that cannot afford the sync
+    # pin the mode (transport="dense" / REPRO_TRANSPORT=dense skips the
+    # walk entirely); fused chains (signiter) never reach here.
+    kw["transport"] = resolve_transport(
+        kw.get("transport"), a, b, mesh, engine, kw.get("l")
+    )
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
                       c_layout="2d", **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)

@@ -7,7 +7,7 @@ Each iteration is two block-sparse multiplications with on-the-fly and
 post-multiplication filtering — exactly the workload DBCSR is built for
 (SpGEMM > 80% of CP2K linear-scaling runtime).
 
-Two execution modes (DESIGN.md §4):
+Two execution modes (DESIGN.md §5):
 
 ``fused`` (default) — the device-resident iteration engine.  The operands
     are sharded ONCE at the chain boundary (``bsm.shard_bsm``) and the whole
@@ -196,6 +196,12 @@ def get_sweep_program(
         # auto walks the concrete pattern on the host; inside the fused
         # (traced) sweep there is no concrete pattern — dense einsum it is
         backend = "jnp"
+    # panel transport is pinned dense for the same reason: the sweep is
+    # traced once while the sparsity pattern evolves underneath it, so a
+    # compressed capacity derived from the initial pattern would silently
+    # drop fill-in blocks mid-iteration (chain safety — tuner.model.
+    # chain_safe).  Dense transport still gets the norm-free wire format
+    # and the double-buffered pipelining from the shared layer.
     if backend == "pallas" and interpret is None:
         from repro.kernels.ops import _default_interpret
 
@@ -220,6 +226,7 @@ def get_sweep_program(
 
         plan = plan_mod.plan_multiply(mesh, engine, l)
         plan.validate_blocks(x.nb_r, x.nb_c)
+        # transport=None -> dense inside build_shard_body (chain-safe)
         mm = plan_mod.build_shard_body(plan, **mm_kw)
         sweep = _make_sweep(mm, x.dtype, filter_eps,
                             total_blocks=total_blocks, psum_axes=("r", "c"))

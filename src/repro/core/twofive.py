@@ -1,7 +1,7 @@
 """2.5D communication-reducing SpGEMM engine (the paper's OSL, Algorithm 2).
 
 Two executors, both thin interpreters of a
-:class:`repro.core.plan.MultiplyPlan` (see DESIGN.md §2-§3):
+:class:`repro.core.plan.MultiplyPlan` (see DESIGN.md §3-§4):
 
 ``pull_executor``  — Algorithm 2 run directly on the 2D (r, c) process grid
     with the depth axis *virtual*, exactly as in the paper: the 2D block
@@ -22,11 +22,20 @@ Two executors, both thin interpreters of a
     sends fused into the ICI-native collective.  Uneven chunks (L does not
     divide the grid side) are handled by masking ticks past a layer's chunk.
 
-Per-device communicated volume: the pull executor moves Eq. (7) verbatim —
-(V/sqrt(L))(S_A+S_B) panel pulls plus (L-1) S_C partial sends per process;
-the stacked executor moves (s/L)(S_A+S_B) panels + (L-1)/L S_C ==
-O(1/sqrt(P L)) with P = L s^2 — the same asymptotics in mesh coordinates
-(see commvolume.mesh25d_volume and commvolume.plan_volume).
+Panel movement goes through the shared transport layer
+(``repro.core.transport``, DESIGN.md §3): dense (blocks + mask, norms
+recomputed on arrival) or occupancy-compressed (packed blocks + one-based
+indices — partial-permutation safe, so the pull formulation's rget rounds
+compress too).  Both executors pipeline: the pull executor issues tick
+group g+1's permutes before group g's pairwise products, the stacked
+executor double-buffers its ring exactly like ``cannon.ring_body``.
+
+Per-device communicated volume under dense transport: the pull executor
+moves Eq. (7) verbatim — (V/sqrt(L))(S_A+S_B) panel pulls plus (L-1) S_C
+partial sends per process; the stacked executor moves (s/L)(S_A+S_B)
+panels + (L-1)/L S_C == O(1/sqrt(P L)) with P = L s^2 — the same
+asymptotics in mesh coordinates (see commvolume.mesh25d_volume and
+commvolume.plan_volume, which also models the compressed wire format).
 """
 from __future__ import annotations
 
@@ -35,12 +44,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import pcast, shard_map
+from repro.core import transport as T
 from repro.core.bsm import BlockSparseMatrix
 from repro.core.local_mm import local_filtered_mm
-
-
-def _permute(arrs, axes, pairs):
-    return tuple(lax.ppermute(x, axes, list(pairs)) for x in arrs)
 
 
 def pull_body(
@@ -50,6 +56,7 @@ def pull_body(
     backend: str = "jnp",
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport: T.PanelTransport = T.DENSE,
 ):
     """The per-shard Algorithm-2 pull body (shards in, C shard out);
     exposed so iteration chains can inline it into one enclosing
@@ -61,12 +68,49 @@ def pull_body(
     topo = plan.topo
     l_r, l_c, depth, s = topo.l_r, topo.l_c, topo.l, topo.side3d
     axes = plan.axes
+    tr = transport
 
     def body(ab, am, an, bb, bm, bn):
+        del an, bn  # norms are not pulled (recomputed per received panel)
         nr, nc = ab.shape[0], bb.shape[1]
         wa = ab.shape[1] // plan.ca  # A subpanel width (block cols)
         wb = bb.shape[0] // plan.cb  # B subpanel height (block rows)
         dtype = ab.dtype
+
+        def pull_group(g):
+            """Issue every one-sided pull of tick group ``g`` and return
+            the accumulated dense (blocks, mask) panel per slot."""
+            a_pan = [
+                (
+                    jnp.zeros((nr, wa) + ab.shape[2:], dtype),
+                    jnp.zeros((nr, wa), bool),
+                )
+                for _ in range(l_r)
+            ]
+            b_pan = [
+                (
+                    jnp.zeros((wb, nc) + bb.shape[2:], dtype),
+                    jnp.zeros((wb, nc), bool),
+                )
+                for _ in range(l_c)
+            ]
+            for rd in plan.a_pulls[g]:
+                sl = slice(rd.q * wa, (rd.q + 1) * wa)
+                st = T.ingest(tr, tr.cap_a, ab[:, sl], am[:, sl])
+                rb, rm = T.dense_view(
+                    tr, T.permute(st, axes, rd.pairs), nr, wa
+                )
+                pb, pm = a_pan[rd.slot]
+                a_pan[rd.slot] = (pb + rb, pm | rm)
+            for rd in plan.b_pulls[g]:
+                sl = slice(rd.q * wb, (rd.q + 1) * wb)
+                st = T.ingest(tr, tr.cap_b, bb[sl], bm[sl])
+                rb, rm = T.dense_view(
+                    tr, T.permute(st, axes, rd.pairs), wb, nc
+                )
+                pb, pm = b_pan[rd.slot]
+                b_pan[rd.slot] = (pb + rb, pm | rm)
+            return a_pan, b_pan
 
         # partial C accumulators, one per target panel slot t = j3*L_R + i3
         c_blk = [
@@ -75,50 +119,26 @@ def pull_body(
         ]
         c_msk = [jnp.zeros((nr, nc), bool) for _ in range(depth)]
 
+        # pipelined groups: group g+1's pulls are issued before group g's
+        # pairwise products consume the current panels (rget overlap, §4)
+        cur = pull_group(0)
         for g in range(plan.ticks):
-            # ---- one-sided pulls of this tick group ----------------------
-            a_pan = [
-                (
-                    jnp.zeros((nr, wa) + ab.shape[2:], dtype),
-                    jnp.zeros((nr, wa), bool),
-                    jnp.zeros((nr, wa), an.dtype),
-                )
-                for _ in range(l_r)
-            ]
-            b_pan = [
-                (
-                    jnp.zeros((wb, nc) + bb.shape[2:], dtype),
-                    jnp.zeros((wb, nc), bool),
-                    jnp.zeros((wb, nc), bn.dtype),
-                )
-                for _ in range(l_c)
-            ]
-            for rd in plan.a_pulls[g]:
-                sl = slice(rd.q * wa, (rd.q + 1) * wa)
-                rb, rm, rn = _permute(
-                    (ab[:, sl], am[:, sl], an[:, sl]), axes, rd.pairs
-                )
-                pb, pm, pn = a_pan[rd.slot]
-                a_pan[rd.slot] = (pb + rb, pm | rm, pn + rn)
-            for rd in plan.b_pulls[g]:
-                sl = slice(rd.q * wb, (rd.q + 1) * wb)
-                rb, rm, rn = _permute(
-                    (bb[sl], bm[sl], bn[sl]), axes, rd.pairs
-                )
-                pb, pm, pn = b_pan[rd.slot]
-                b_pan[rd.slot] = (pb + rb, pm | rm, pn + rn)
-
+            nxt = pull_group(g + 1) if g + 1 < plan.ticks else None
+            a_pan, b_pan = cur
+            a_n = [T.panel_norms(pb, threshold) for pb, _ in a_pan]
+            b_n = [T.panel_norms(pb, threshold) for pb, _ in b_pan]
             # ---- the L pairwise panel products of this group -------------
             for i3 in range(l_r):
                 for j3 in range(l_c):
                     t = j3 * l_r + i3
-                    pa, pam, pan_ = a_pan[i3]
-                    pb, pbm, pbn = b_pan[j3]
+                    pa, pam = a_pan[i3]
+                    pb, pbm = b_pan[j3]
                     dcb, dcm = local_filtered_mm(
-                        pa, pam, pan_, pb, pbm, pbn, **mm_kw
+                        pa, pam, a_n[i3], pb, pbm, b_n[j3], **mm_kw
                     )
                     c_blk[t] = c_blk[t] + dcb
                     c_msk[t] = c_msk[t] | dcm
+            cur = nxt
 
         if depth == 1:
             return c_blk[0], c_msk[0]
@@ -170,6 +190,7 @@ def stacked_body(
     c_layout: str = "2d",
     stack_capacity: int | None = None,
     interpret: bool | None = None,
+    transport: T.PanelTransport = T.DENSE,
 ):
     """The per-shard (l, r, c)-mesh 2.5D body (exposed for chain fusion,
     like ``pull_body``); with c_layout="2d" the returned C shard is
@@ -178,12 +199,37 @@ def stacked_body(
     groups = tuple(plan.layer_groups)
     uneven = len(set(groups)) > 1
     axes = plan.axes
+    tr = transport
 
     def body(ab, am, an, bb, bm, bn):
+        del an, bn  # norms never ride the ring (recomputed at compute time)
+        sa, sb = am.shape, bm.shape
+        mm_kw = dict(
+            threshold=threshold, backend=backend,
+            stack_capacity=stack_capacity, interpret=interpret,
+        )
+        my_groups = jnp.take(
+            jnp.asarray(groups, jnp.int32), lax.axis_index("l")
+        )
+
+        def compute(pa, pb, cb, cm, t):
+            xb, xm = T.dense_view(tr, pa, *sa)
+            yb, ym = T.dense_view(tr, pb, *sb)
+            dcb, dcm = local_filtered_mm(
+                xb, xm, T.panel_norms(xb, threshold),
+                yb, ym, T.panel_norms(yb, threshold), **mm_kw,
+            )
+            if uneven:
+                # mask ticks past this layer's k-chunk (uneven-L support)
+                active = t < my_groups
+                dcb = dcb * active.astype(dcb.dtype)
+                dcm = dcm & active
+            return cb + dcb, cm | dcm
+
         # pre-shift with per-layer chunk offset: A_ij <- A_{i, j+i+start_l},
         # B_ij <- B_{i+j+start_l, j}; one static flattened permutation.
-        ab, am, an = _permute((ab, am, an), axes, plan.pre_a)
-        bb, bm, bn = _permute((bb, bm, bn), axes, plan.pre_b)
+        pa = T.permute(T.ingest(tr, tr.cap_a, ab, am), axes, plan.pre_a)
+        pb = T.permute(T.ingest(tr, tr.cap_b, bb, bm), axes, plan.pre_b)
 
         cb = jnp.zeros(
             (ab.shape[0], bb.shape[1], ab.shape[2], bb.shape[3]), ab.dtype
@@ -191,37 +237,32 @@ def stacked_body(
         cm = jnp.zeros((ab.shape[0], bb.shape[1]), bool)
         cb = pcast(cb, axes, to="varying")
         cm = pcast(cm, axes, to="varying")
-        my_groups = jnp.take(
-            jnp.asarray(groups, jnp.int32), lax.axis_index("l")
-        )
 
-        def compute(carry, t):
-            ab, am, an, bb, bm, bn, cb, cm = carry
-            dcb, dcm = local_filtered_mm(
-                ab, am, an, bb, bm, bn, threshold=threshold, backend=backend,
-                stack_capacity=stack_capacity, interpret=interpret,
-            )
-            if uneven:
-                # mask ticks past this layer's k-chunk (uneven-L support)
-                active = t < my_groups
-                dcb = dcb * active.astype(dcb.dtype)
-                dcm = dcm & active
-            return (ab, am, an, bb, bm, bn, cb + dcb, cm | dcm)
+        if ticks == 1:
+            cb, cm = compute(pa, pb, cb, cm, jnp.asarray(0, jnp.int32))
+        else:
+            # double-buffered ring: the hop for tick t+1 is in flight
+            # before the GEMM of tick t (see cannon.ring_body)
+            na = T.permute(pa, "c", plan.shift_a)
+            nb_ = T.permute(pb, "r", plan.shift_b)
 
-        def tick(carry, t):
-            carry = compute(carry, t)
-            ab, am, an, bb, bm, bn, cb, cm = carry
-            ab, am, an = _permute((ab, am, an), "c", plan.shift_a)
-            bb, bm, bn = _permute((bb, bm, bn), "r", plan.shift_b)
-            return (ab, am, an, bb, bm, bn, cb, cm), None
+            def tick(carry, t):
+                pa, pb, na, nb_, cb, cm = carry
+                fa = T.permute(na, "c", plan.shift_a)
+                fb = T.permute(nb_, "r", plan.shift_b)
+                cb, cm = compute(pa, pb, cb, cm, t)
+                return (na, nb_, fa, fb, cb, cm), None
 
-        carry = (ab, am, an, bb, bm, bn, cb, cm)
-        if ticks > 1:
-            carry, _ = lax.scan(
-                tick, carry, jnp.arange(ticks - 1, dtype=jnp.int32)
-            )
-        # final tick: compute only, no trailing shift
-        *_, cb, cm = compute(carry, jnp.asarray(ticks - 1, jnp.int32))
+            if ticks > 2:
+                (pa, pb, na, nb_, cb, cm), _ = lax.scan(
+                    tick, (pa, pb, na, nb_, cb, cm),
+                    jnp.arange(ticks - 2, dtype=jnp.int32),
+                )
+            # last two ticks: compute only, no trailing shift
+            cb, cm = compute(pa, pb, cb, cm,
+                             jnp.asarray(ticks - 2, jnp.int32))
+            cb, cm = compute(na, nb_, cb, cm,
+                             jnp.asarray(ticks - 1, jnp.int32))
 
         # --- partial-C reduction over the depth axis (the L-1 sends)
         cmi = cm.astype(jnp.int32)

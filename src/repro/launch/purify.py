@@ -8,12 +8,12 @@ The production rendering of the paper's driving workload: build a sparse
 model Hamiltonian, shard it ONCE onto the SpGEMM mesh, and run repeated
 purifications (an SCF-like outer loop re-purifies a slowly-changing H)
 entirely device-resident — the fused sign-iteration engine of
-``core/signiter.py`` (DESIGN.md §4).  After the first purification every
+``core/signiter.py`` (DESIGN.md §5).  After the first purification every
 later one is pure cache: the chain-step program, the multiply plan and
 the jit executable are all reused (``plan.cache_stats()`` is printed per
 repeat; ``builds`` must stay flat).
 
-Engine selection is autotuned (DESIGN.md §5): with ``--tuning-db`` the
+Engine selection is autotuned (DESIGN.md §6): with ``--tuning-db`` the
 driver runs ``engine="auto"`` — the pattern-aware tuner picks (engine, L)
 for H's sparsity pattern, measuring short trials on a cold database and
 resolving *measurement-free* on a warm one; winners persist to the DB

@@ -9,7 +9,7 @@ Three dispatch implementations, selectable via ``MoEConfig.impl``:
   expert weights sharded over ``model`` on the d_expert dim (tensor
   parallel within every expert).  No token all-to-all at all — the design
   point that mirrors the paper's "retain the 2D data layout, never
-  redistribute" argument (DESIGN.md §3).
+  redistribute" argument (DESIGN.md §4).
 * ``ep``      — expert parallelism: the dispatched buffer is resharded so
   experts live on ``model`` shards (GSPMD inserts the all-to-all); each
   device runs only its resident experts with *unsharded* per-expert

@@ -1,6 +1,6 @@
 """The paper's 2.5D schedule applied to the LM's largest matmuls.
 
-Beyond-paper carry-over (DESIGN.md §3): the 2.5D SpGEMM insight — split the
+Beyond-paper carry-over (DESIGN.md §4): the 2.5D SpGEMM insight — split the
 contraction dimension over a depth axis L, compute partial products against
 the *home* layout, and fuse the partial-result reduction into one collective
 — applies verbatim to the LM-head / embedding matmul, whose (d_model x

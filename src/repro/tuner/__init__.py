@@ -1,9 +1,10 @@
-"""Pattern-aware autotuning runtime (DESIGN.md §5).
+"""Pattern-aware autotuning runtime (DESIGN.md §6).
 
 The decision layer above the plan cache: given a concrete operand pair
-and a mesh, pick ``(engine, L, backend, stack_capacity)`` — the choices
-the paper shows are workload-dependent (2D vs 2.5D, depth L, local
-backend) — instead of making every caller hardcode them.
+and a mesh, pick ``(engine, L, backend, stack_capacity, transport)`` —
+the choices the paper shows are workload-dependent (2D vs 2.5D, depth L,
+local backend, and now dense vs occupancy-compressed panel transport) —
+instead of making every caller hardcode them.
 
 Decision flow (each stage short-circuits the ones after it):
 
@@ -60,8 +61,8 @@ __all__ = [
 
 @dataclass(frozen=True)
 class Decision:
-    """A resolved (engine, L, backend, capacity) choice and where it
-    came from: "cache" | "db" | "measured" | "analytic"."""
+    """A resolved (engine, L, backend, capacity, transport) choice and
+    where it came from: "cache" | "db" | "measured" | "analytic"."""
 
     engine: str
     l: int | None
@@ -69,11 +70,15 @@ class Decision:
     stack_capacity: int | None
     source: str
     measured_s: float | None = None
+    transport: str = "dense"  # panel transport mode for this pattern
 
     @property
     def label(self) -> str:
         tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
-        return f"{tag}/{self.backend}[{self.source}]"
+        tag = f"{tag}/{self.backend}"
+        if self.transport == "compressed":
+            tag += "+ct"
+        return f"{tag}[{self.source}]"
 
 
 _CACHE_MAXSIZE = 128
@@ -103,13 +108,20 @@ def _reset() -> None:
 plan_mod.register_cache(_reset)
 
 
-def _constraints(engines, backends, l, chain: bool) -> tuple:
-    return (
+def _constraints(engines, backends, l, chain: bool,
+                 transport: str | None) -> tuple:
+    """Constraint part of the decision/DB key.  The transport element is
+    appended ONLY when the caller pinned a mode: the unpinned (and
+    chain-default) shapes keep their pre-transport 4-element form, so a
+    tuning DB persisted before the transport layer still warm-hits — its
+    records simply read as ``transport="dense"`` (``_db_candidate``)."""
+    base = (
         "chain" if chain else "mult",
         ",".join(engines) if engines else "*",
         ",".join(backends) if backends else "*",
         0 if l is None else int(l),
     )
+    return base + ((transport,) if transport else ())
 
 
 def _operand_key(a, b, mesh, constraints: tuple, threshold: float,
@@ -146,8 +158,16 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
     (mesh, pattern) — feature buckets are coarse, so a record measured at
     a different block grid can share the bucket while being
     topology-invalid here.  Re-runs the same validity gates
-    ``enumerate_candidates`` applies; None = treat as a miss."""
-    cand = Candidate(rec["engine"], rec["l"], rec["backend"])
+    ``enumerate_candidates`` applies; None = treat as a miss.
+
+    ``transport`` is persisted as a *mode* only (records predating it
+    read as dense): the sound per-panel capacities are always re-derived
+    from the concrete pattern at execution (``plan.get_transport``), so
+    a bucket hit can never smuggle in a stale packing bound."""
+    cand = Candidate(rec["engine"], rec["l"], rec["backend"],
+                     transport=rec.get("transport", "dense"))
+    if cand.transport not in ("dense", "compressed"):
+        return None  # schema drift: unknown mode is a miss, not a crash
     try:
         plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
         plan.validate_blocks(feats.nb_r, feats.nb_c)
@@ -158,7 +178,7 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
     cap = _capacity_for(cand, ok, mesh)
     if not cap:
         return None  # empty pattern: the compacted program has no work
-    return Candidate(cand.engine, cand.l, cand.backend, cap)
+    return Candidate(cand.engine, cand.l, cand.backend, cap, cand.transport)
 
 
 def autotune(
@@ -177,17 +197,18 @@ def autotune(
     db: TuningDB | None = None,
     measure: bool = True,
     interpret: bool | None = None,
+    transport: str | None = None,
 ) -> Decision:
-    """Resolve ``(engine, L, backend, stack_capacity)`` for one operand
-    pair on one mesh.
+    """Resolve ``(engine, L, backend, stack_capacity, transport)`` for
+    one operand pair on one mesh.
 
-    ``backend`` / ``l`` / ``engines`` pin parts of the decision (the
-    tuner only chooses what the caller left open).  ``chain=True``
-    restricts to chain-safe candidates (dense local backend: a fused
-    iteration's pattern evolves under a traced sweep, so static compacted
-    capacities from the initial pattern would be unsound).
-    ``measure=False`` stops after the analytic ranking (no device work —
-    usable on abstract meshes).
+    ``backend`` / ``l`` / ``engines`` / ``transport`` pin parts of the
+    decision (the tuner only chooses what the caller left open).
+    ``chain=True`` restricts to chain-safe candidates (dense local
+    backend + dense transport: a fused iteration's pattern evolves under
+    a traced sweep, so static compacted capacities from the initial
+    pattern would be unsound).  ``measure=False`` stops after the
+    analytic ranking (no device work — usable on abstract meshes).
     """
     if mesh is None:
         raise ValueError("autotune requires a mesh (the decision space is "
@@ -195,7 +216,8 @@ def autotune(
     from repro.core.engine import _host_pair_filter
 
     backends = (backend,) if backend else (("jnp",) if chain else None)
-    constraints = _constraints(engines, backends, l, chain)
+    transports = (transport,) if transport else (("dense",) if chain else None)
+    constraints = _constraints(engines, backends, l, chain, transport)
     budget = device_memory_budget() if budget_bytes is None else budget_bytes
     tdb = db if db is not None else _default_db
     key = _operand_key(a, b, mesh, constraints, threshold, budget,
@@ -233,11 +255,13 @@ def autotune(
                     engine=cand.engine, l=cand.l, backend=cand.backend,
                     stack_capacity=cand.stack_capacity, source="db",
                     measured_s=rec.get("measured_s"),
+                    transport=cand.transport,
                 ))
             # invalid here / stale (budget, constraints): fall through
 
     report = rank_candidates(
         mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
+        transports=transports,
         budget_bytes=budget, top_k=top_k if measure else 1,
     )
     if chain:
@@ -252,6 +276,7 @@ def autotune(
         return finish(Decision(
             engine=best.engine, l=best.l, backend=best.backend,
             stack_capacity=best.stack_capacity, source="analytic",
+            transport=best.transport,
         ))
 
     plan_mod._stats.tuner_misses += 1
@@ -265,6 +290,7 @@ def autotune(
     if tdb is not None:
         tdb.record(db_key, {
             "engine": cand.engine, "l": cand.l, "backend": cand.backend,
+            "transport": cand.transport,
             "measured_s": win.seconds,
             "trials": [
                 {"label": t.candidate.label, "seconds": t.seconds,
@@ -275,26 +301,36 @@ def autotune(
     return finish(Decision(
         engine=cand.engine, l=cand.l, backend=cand.backend,
         stack_capacity=cand.stack_capacity, source="measured",
-        measured_s=win.seconds,
+        measured_s=win.seconds, transport=cand.transport,
     ))
 
 
 def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
     """``engine="auto"`` resolution for ``plan.execute`` /
     ``plan.execute_sharded``: returns the concrete engine plus the
-    keyword set with the tuner's L / backend / capacity filled in (the
-    caller's explicit choices are honored as constraints)."""
+    keyword set with the tuner's L / backend / capacity / transport
+    filled in (the caller's explicit choices are honored as
+    constraints)."""
     kw = dict(kw)
     backend = kw.get("backend")
+    from repro.core.engine import _transport_pin
+
+    tr = kw.get("transport")
+    tr_pin = _transport_pin(tr)
     dec = autotune(
         a, b, mesh,
         threshold=kw.get("threshold", 0.0),
         backend=None if backend in (None, "auto") else backend,
         l=kw.get("l"),
         interpret=kw.get("interpret"),
+        transport=tr_pin,
     )
     kw["backend"] = dec.backend
     kw["l"] = dec.l
     if kw.get("stack_capacity") is None:
         kw["stack_capacity"] = dec.stack_capacity
+    if tr is None or tr == "auto":
+        # the tuner's measured mode; capacities are derived from the
+        # concrete pattern in plan.resolve_transport
+        kw["transport"] = dec.transport
     return dec.engine, kw

@@ -23,6 +23,16 @@ benchmarked on:
                 load imbalance, which is what stresses the per-device
                 capacity bounds and the 2.5D load balance.
 
+``uniform``     Uniform random occupation — the load-balanced limit a
+                banded/decay operator reaches after DBCSR's randomized
+                row/column permutation (§"randomized permutations for
+                load balance").  The distance-correlated families above
+                concentrate occupied blocks in the diagonal panels, so
+                per-panel maxima (stack capacities, transport packing
+                bounds) stay high even at low global occupancy; the
+                uniform family is where occupancy-proportional wins
+                (compressed transport, compacted stacks) show cleanly.
+
 Each entry builds a reproducible operand pair (symmetric H for the DFT
 families — the corpus mirrors ``H @ H`` of the purification workload).
 """
@@ -35,7 +45,7 @@ import numpy as np
 
 from repro.core import bsm as B
 
-KINDS = ("dft_chain", "exp_decay", "zipf")
+KINDS = ("dft_chain", "exp_decay", "zipf", "uniform")
 
 
 @dataclass(frozen=True)
@@ -55,11 +65,12 @@ class CorpusEntry:
         """Reproducible (A, B) operand pair for this entry."""
         key = jax.random.key(self.seed)
         k_mask, k_a, k_b = jax.random.split(key, 3)
+        symmetric = self.kind in ("dft_chain", "exp_decay")
         mask = make_mask(self.kind, self.nb, k_mask,
                          occupancy=self.occupancy, bandwidth=self.bandwidth,
                          zipf_alpha=self.zipf_alpha)
-        a = _fill(mask, k_a, self.bs, symmetric=self.kind != "zipf")
-        if self.kind == "zipf":
+        a = _fill(mask, k_a, self.bs, symmetric=symmetric)
+        if not symmetric:
             # independent second operand: SpGEMM traffic, not purification
             mask_b = make_mask(self.kind, self.nb, jax.random.fold_in(k_mask, 1),
                                occupancy=self.occupancy,
@@ -93,6 +104,10 @@ def make_mask(kind: str, nb: int, key, *, occupancy: float = 0.1,
     elif kind == "exp_decay":
         scale = max(occupancy * nb / 2.0, 1e-3)
         m = rng.random((nb, nb)) < np.exp(-np.abs(i - j) / scale)
+    elif kind == "uniform":
+        # the randomized-permutation load-balanced limit: occupation
+        # probability independent of block distance
+        m = rng.random((nb, nb)) < occupancy
     elif kind == "zipf":
         # row r carries weight r^-alpha (after a random rank shuffle);
         # normalize so the mean fill matches `occupancy`

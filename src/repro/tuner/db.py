@@ -1,4 +1,4 @@
-"""Persisted tuning database (DESIGN.md §5).
+"""Persisted tuning database (DESIGN.md §6).
 
 A flat JSON file mapping ``(feature bucket, mesh shape, constraint set,
 dtype)`` keys to the measured winning candidate — DBCSR's autotuned
@@ -10,6 +10,12 @@ trials: ``launch/purify.py`` / ``examples/linear_scaling_dft.py`` resolve
 
 The file format is versioned and append-friendly: records carry their
 measured seconds and the losing trials, so a later re-tune can compare.
+Records persist the winning panel-transport *mode* (``"transport":
+"dense" | "compressed"``; absent in pre-transport records, read as
+dense) — mode only, never capacities: the sound per-panel packing bounds
+are re-derived from the concrete pattern on every use
+(``plan.get_transport``), so a stale record can never smuggle in an
+unsound bound.
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-"""Sparsity-pattern featurization for the autotuning runtime (DESIGN.md §5).
+"""Sparsity-pattern featurization for the autotuning runtime (DESIGN.md §6).
 
 The paper's central empirical point is that the winning algorithm variant
 depends on the *application* sparsity pattern — banded near-sighted

@@ -1,4 +1,4 @@
-"""Measured trials: the tuner's ground truth (DESIGN.md §5).
+"""Measured trials: the tuner's ground truth (DESIGN.md §6).
 
 The analytic model ranks; short timed trials decide.  Every trial runs
 through the ordinary ``engine.multiply`` path, so the compiled programs it
@@ -8,8 +8,9 @@ hot when the application multiplies for real.
 
 Timing discipline: one untimed warm-up call per candidate (compile +
 cache fill), then ``reps`` *interleaved* timed rounds — each round times
-every candidate once, with ``block_until_ready`` — keeping the minimum
-per candidate.  Interleaving matters: machine-load drift during the pass
+every candidate once, blocking on the FULL output triple (blocks, mask,
+norms: a lazily materialized buffer must not escape the clock) — keeping
+the minimum per candidate.  Interleaving matters: machine-load drift during the pass
 hits all candidates alike instead of biasing whichever happened to run
 last, and the minimum filters one-off scheduler noise (the standard for
 microbenchmarks of cached programs; cf. benchmarks/bench_plan_cache.py).
@@ -64,9 +65,17 @@ def measure_candidates(
                 a, b, None if sharded else mesh,
                 engine=c.engine, threshold=threshold, backend=c.backend,
                 l=c.l, stack_capacity=c.stack_capacity, interpret=interpret,
+                transport=c.transport,
             )
 
         return run
+
+    def wait(out):
+        # block on the FULL output triple, not just the blocks: mask and
+        # norms may materialize lazily (derived-norm algebra, async
+        # dispatch), and a trial that stops the clock before they land
+        # under-reports the candidate
+        jax.block_until_ready((out.blocks, out.mask, out.norms))
 
     runners: dict[int, object] = {}
     best: dict[int, float] = {}
@@ -74,7 +83,7 @@ def measure_candidates(
     for i, cand in enumerate(candidates):
         run = make_run(cand)
         try:
-            jax.block_until_ready(run().blocks)  # warm-up: compile/caches
+            wait(run())  # warm-up: compile/caches
             runners[i] = run
             best[i] = float("inf")
         except Exception as e:  # noqa: BLE001 - surface per-candidate
@@ -83,8 +92,7 @@ def measure_candidates(
         for i, run in list(runners.items()):
             try:
                 t0 = time.perf_counter()
-                out = run()
-                jax.block_until_ready(out.blocks)
+                wait(run())
                 best[i] = min(best[i], time.perf_counter() - t0)
             except Exception as e:  # noqa: BLE001 - contain per candidate
                 errors[i] = repr(e)

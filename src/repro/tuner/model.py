@@ -1,4 +1,4 @@
-"""Analytic candidate model: enumerate, cost, and prune (DESIGN.md §5).
+"""Analytic candidate model: enumerate, cost, and prune (DESIGN.md §6).
 
 The tuner's first stage is purely analytic — no device work.  For a mesh
 and a feature vector it enumerates every feasible ``(engine, L, backend,
@@ -65,11 +65,13 @@ class Candidate:
     l: int | None = None  # depth for twofive pull plans (None = plan default)
     backend: str = "jnp"
     stack_capacity: int | None = None  # compacted backends: device bound
+    transport: str = "dense"  # panel transport mode ("dense"|"compressed")
 
     @property
     def label(self) -> str:
         tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
-        return f"{tag}/{self.backend}"
+        tag = f"{tag}/{self.backend}"
+        return tag + "+ct" if self.transport == "compressed" else tag
 
 
 @dataclass(frozen=True)
@@ -114,16 +116,24 @@ def enumerate_candidates(
     engines: tuple[str, ...] | None = None,
     backends: tuple[str, ...] | None = None,
     l: int | None = None,
+    transports: tuple[str, ...] | None = None,
 ) -> list[Candidate]:
-    """All (engine, L, backend, capacity) points feasible for ``mesh``.
+    """All (engine, L, backend, capacity, transport) points feasible for
+    ``mesh``.
 
     ``ok`` — optional concrete filter cube; with it the compacted
     backends get their exact bucketed per-device capacity
     (``plan.get_device_capacity``), without it they are skipped (no sound
-    static bound to hand the compiled program).  ``engines`` / ``l`` /
-    ``backends`` restrict the space (caller-pinned choices).
+    static bound to hand the compiled program) and so is compressed
+    transport (capacities are derived from the concrete masks at
+    execution).  ``engines`` / ``l`` / ``backends`` / ``transports``
+    restrict the space (caller-pinned choices).
     """
     axes = tuple(mesh.axis_names)
+    if transports is None:
+        transports = ("dense", "compressed") if ok is not None else ("dense",)
+    elif ok is None:
+        transports = tuple(t for t in transports if t == "dense")
     if backends is None:
         import jax
 
@@ -158,12 +168,13 @@ def enumerate_candidates(
         except ValueError:
             continue  # block grid does not divide this topology
         for backend in backends:
-            if backend == "jnp":
-                out.append(Candidate(engine, depth, "jnp", None))
-            elif ok is not None:
-                cap = plan_mod.get_device_capacity(ok, mesh, engine)
-                if cap > 0:
-                    out.append(Candidate(engine, depth, backend, cap))
+            for tp in transports:
+                if backend == "jnp":
+                    out.append(Candidate(engine, depth, "jnp", None, tp))
+                elif ok is not None:
+                    cap = plan_mod.get_device_capacity(ok, mesh, engine)
+                    if cap > 0:
+                        out.append(Candidate(engine, depth, backend, cap, tp))
     return out
 
 
@@ -186,8 +197,13 @@ def estimate_candidate(
     budget = device_memory_budget() if budget_bytes is None else budget_bytes
     plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
     itemsize = float(np.dtype(feats.dtype).itemsize)
-    vol = commvolume.plan_volume(plan, feats.nb_r, feats.bs_r,
-                                 itemsize=itemsize)
+    # sparsity-aware volume: compressed transport scales the Eq. (7) A/B
+    # term by panel occupancy (analytic flavor — execution derives the
+    # exact bucketed capacities from the concrete masks)
+    vol = commvolume.plan_volume(
+        plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
+        transport=cand.transport, occ_a=feats.occ_a, occ_b=feats.occ_b,
+    )
     comm_s = vol.total / ICI_BW + plan.ticks * TICK_OVERHEAD_S
 
     ndev = _n_devices(mesh)
@@ -225,6 +241,7 @@ def rank_candidates(
     engines: tuple[str, ...] | None = None,
     backends: tuple[str, ...] | None = None,
     l: int | None = None,
+    transports: tuple[str, ...] | None = None,
     budget_bytes: float | None = None,
     top_k: int | None = None,
 ) -> ModelReport:
@@ -234,6 +251,7 @@ def rank_candidates(
     device memory is the one thing the tuner must never do)."""
     cands = enumerate_candidates(
         mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
+        transports=transports,
     )
     if not cands:
         raise ValueError(
@@ -281,9 +299,10 @@ def chain_safe(cand: Candidate) -> bool:
     """Whether a candidate is sound for a *fused iteration chain*: the
     sweep is traced once and the sparsity pattern evolves underneath it
     (fill-in), so a static stack capacity derived from the initial
-    pattern could silently drop products mid-iteration.  Only the dense
-    local backend is chain-safe."""
-    return cand.backend == "jnp"
+    pattern could silently drop products mid-iteration — and a static
+    compressed-transport capacity could silently drop *panels*.  Only
+    the dense local backend with dense transport is chain-safe."""
+    return cand.backend == "jnp" and cand.transport == "dense"
 
 
 def _sqrt_l_note(l: int) -> str:  # pragma: no cover - debug helper

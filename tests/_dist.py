@@ -338,8 +338,97 @@ def check_signiter_sharded():
     print("signiter_sharded OK")
 
 
+def check_transport():
+    """Compressed transport == dense transport BIT-EXACT for every
+    engine, across occupancy in {0, low, medium, full}, thresholds,
+    rectangular meshes (forced virtual L) and uneven-L stacked meshes —
+    plus: the auto mode resolves compressed at low fill and dense at
+    high fill, capacities are served from the signature cache on
+    repeats, and the REPRO_TRANSPORT env override forces the mode."""
+    from jax.sharding import Mesh
+
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.engine import multiply, multiply_reference
+
+    from repro.launch.mesh import make_spgemm_mesh
+
+    mesh2 = make_spgemm_mesh(p=2)
+    mesh24 = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("r", "c"))
+    mesh42 = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("r", "c"))
+    mesh_uneven = make_spgemm_mesh(p=2, l=4)  # L does not divide the side
+    grids = (
+        (mesh2, ("cannon", "onesided", "gather", "twofive")),
+        (mesh24, ("onesided", "gather", "twofive")),  # forced virtual L=2
+        (mesh42, ("onesided", "gather", "twofive")),
+        (mesh_uneven, ("twofive",)),  # stacked, uneven chunks
+    )
+    for occ in (0.0, 0.1, 0.5, 1.0):
+        a = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=occ,
+                         pattern="decay")
+        b = B.random_bsm(jax.random.key(1), nb=8, bs=8, occupancy=occ)
+        for thr in (0.0, 1e-3):
+            ref = np.asarray(
+                multiply_reference(a, b, threshold=thr).to_dense())
+            for mesh, engines in grids:
+                for eng in engines:
+                    tag = f"{eng}/{dict(mesh.shape)} occ={occ} t={thr}"
+                    cd = multiply(a, b, mesh, engine=eng, threshold=thr,
+                                  transport="dense")
+                    cc = multiply(a, b, mesh, engine=eng, threshold=thr,
+                                  transport="compressed")
+                    np.testing.assert_array_equal(
+                        np.asarray(cc.blocks), np.asarray(cd.blocks),
+                        err_msg=tag)
+                    np.testing.assert_array_equal(
+                        np.asarray(cc.mask), np.asarray(cd.mask),
+                        err_msg=tag)
+                    np.testing.assert_allclose(
+                        np.asarray(cd.to_dense()), ref,
+                        rtol=1e-5, atol=1e-5, err_msg=tag)
+
+    # auto crossover: sparse pattern -> compressed, full pattern -> dense
+    # (nb=16 so a shard holds 64 blocks — auto never compresses panels
+    # small enough for the bucket floor to dominate)
+    plan_mod.clear_cache()
+    ii, jj = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    sparse_mask = (ii % 4 == 0) & (jj % 4 == 0)  # 4 blocks per 8x8 shard
+    sparse = B.make_bsm(
+        jax.random.normal(jax.random.key(2), (16, 16, 8, 8)),
+        jnp.asarray(sparse_mask),
+    )
+    full = B.random_bsm(jax.random.key(3), nb=16, bs=8, occupancy=1.0)
+    multiply(sparse, sparse, mesh2, engine="onesided", transport="auto")
+    s = plan_mod.cache_stats()
+    assert s["transport_compressed"] == 1, s
+    multiply(full, full, mesh2, engine="onesided", transport="auto")
+    s = plan_mod.cache_stats()
+    assert s["transport_dense"] == 1, s
+    # repeated pattern: resolution served from the signature cache
+    multiply(sparse, sparse, mesh2, engine="onesided", transport="auto")
+    s2 = plan_mod.cache_stats()
+    assert s2["transport_hits"] >= 1, s2
+    assert s2["transport_misses"] == s["transport_misses"], (s, s2)
+
+    # REPRO_TRANSPORT forces the default mode (plumbed like
+    # REPRO_PALLAS_INTERPRET)
+    plan_mod.clear_cache()
+    os.environ["REPRO_TRANSPORT"] = "dense"
+    try:
+        multiply(sparse, sparse, mesh2, engine="onesided")
+        s = plan_mod.cache_stats()
+        assert s["transport_misses"] == 0, s  # dense: no resolution walk
+        os.environ["REPRO_TRANSPORT"] = "compressed"
+        multiply(sparse, sparse, mesh2, engine="onesided")
+        s = plan_mod.cache_stats()
+        assert s["transport_compressed"] == 1, s
+    finally:
+        del os.environ["REPRO_TRANSPORT"]
+    print("transport OK")
+
+
 def check_tuner_auto():
-    """engine="auto" on real multi-device meshes (DESIGN.md §5):
+    """engine="auto" on real multi-device meshes (DESIGN.md §6):
 
     * the tuned multiply equals the single-device filtered oracle on
       square, rectangular and stacked meshes (replicated AND sharded
@@ -732,6 +821,7 @@ def check_pipeline():
 
 CHECKS = {
     "engines": check_engines,
+    "transport": check_transport,
     "stacks_backends": check_stacks_backends,
     "microbatch": check_microbatch_equivalence,
     "pipeline": check_pipeline,

@@ -38,6 +38,14 @@ def test_engines_match_reference():
     assert "engines OK" in out
 
 
+def test_transport_compressed_bit_exact():
+    """Compressed panel transport == dense transport bitwise for every
+    engine across occupancies, rectangular meshes and uneven L; auto
+    crossover + REPRO_TRANSPORT override."""
+    out = _run("transport")
+    assert "transport OK" in out
+
+
 def test_stacks_backends_distributed():
     """Compacted backends + auto capacity bounds across engines/grids."""
     out = _run("stacks_backends")

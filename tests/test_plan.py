@@ -262,3 +262,41 @@ def test_program_cache_hits_and_reuse():
     multiply(a, b, mesh, engine="twofive", threshold=0.1)
     s3 = plan_mod.cache_stats()
     assert s3["builds"] == s2["builds"] + 1
+
+
+# ---- transport in the program-cache key ------------------------------------
+
+
+def test_get_compiled_requires_resolved_transport():
+    """Mode strings must be resolved (plan.resolve_transport) BEFORE the
+    program-cache key is formed — an auto decision baked into a key
+    would alias distinct programs."""
+    import jax
+
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    with pytest.raises(TypeError, match="resolved PanelTransport"):
+        plan_mod.get_compiled(mesh, "onesided", 4, 4, "float32",
+                              transport="auto")
+
+
+def test_build_shard_body_defaults_dense_transport():
+    """Chain bodies (signiter) build with dense transport unless told
+    otherwise — compressed capacities from an initial pattern are not
+    chain-safe (the pattern evolves under the traced sweep)."""
+    import jax
+
+    from repro.core import transport as T
+
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    plan = plan_mod.plan_multiply(mesh, "onesided")
+    # None -> DENSE inside build_shard_body; an explicit PanelTransport
+    # is honored (both bodies construct without error)
+    plan_mod.build_shard_body(plan, threshold=0.0, backend="jnp")
+    plan_mod.build_shard_body(
+        plan, threshold=0.0, backend="jnp",
+        transport=T.PanelTransport("compressed", 8, 8),
+    )

@@ -76,7 +76,7 @@ def test_two_multiplications_per_iteration():
 
 
 # ---------------------------------------------------------------------------
-# fused device-resident sweep vs the legacy per-op loop (DESIGN.md §4)
+# fused device-resident sweep vs the legacy per-op loop (DESIGN.md §5)
 # ---------------------------------------------------------------------------
 
 

@@ -175,6 +175,113 @@ def test_enumerate_respects_constraints():
     assert {c.backend for c in nocube} == {"jnp"}
 
 
+def test_enumerate_transport_dimension():
+    """With a concrete cube the space doubles over transport modes (the
+    capacities themselves come from the masks at execution); without one
+    compressed transport is skipped like the compacted backends."""
+    a, b = _pair(nb=8)
+    f = featurize(a, b, 0.0)
+    with_cube = enumerate_candidates(FakeMesh(r=2, c=2), f,
+                                     ok=_ok_cube(a, b),
+                                     engines=("gather",),
+                                     backends=("jnp",))
+    assert {c.transport for c in with_cube} == {"dense", "compressed"}
+    nocube = enumerate_candidates(FakeMesh(r=2, c=2), f,
+                                  engines=("gather",), backends=("jnp",))
+    assert {c.transport for c in nocube} == {"dense"}
+    pinned = enumerate_candidates(FakeMesh(r=2, c=2), f,
+                                  ok=_ok_cube(a, b), engines=("gather",),
+                                  backends=("jnp",),
+                                  transports=("compressed",))
+    assert {c.transport for c in pinned} == {"compressed"}
+    # compressed candidates are labeled distinctly (the oracle tables in
+    # bench_tuner key on labels)
+    labels = {c.label for c in with_cube}
+    assert labels == {"gather/jnp", "gather/jnp+ct"}
+
+
+def test_compressed_transport_cheaper_at_low_fill():
+    """The sparsity-aware volume model must rank compressed transport
+    under dense for a low-occupancy pattern (Eq. (7) scaled by panel
+    occupancy) and roughly tie at full occupancy."""
+    a, b = _pair(nb=8, occupancy=0.08)
+    f = featurize(a, b, 0.0)
+    mesh = FakeMesh(r=2, c=2)
+    dense = estimate_candidate(Candidate("gather"), mesh, f)
+    comp = estimate_candidate(Candidate("gather", transport="compressed"),
+                              mesh, f)
+    assert comp.comm_s < dense.comm_s
+    full_a, full_b = _pair(nb=8, occupancy=1.0)
+    ff = featurize(full_a, full_b, 0.0)
+    dense_f = estimate_candidate(Candidate("gather"), mesh, ff)
+    comp_f = estimate_candidate(Candidate("gather", transport="compressed"),
+                                mesh, ff)
+    assert comp_f.comm_s >= 0.9 * dense_f.comm_s
+
+
+def test_chain_safety_excludes_compressed_transport():
+    from repro.tuner.model import chain_safe
+
+    assert chain_safe(Candidate("gather"))
+    assert not chain_safe(Candidate("gather", backend="stacks",
+                                    stack_capacity=8))
+    assert not chain_safe(Candidate("gather", transport="compressed"))
+
+
+def test_db_record_persists_transport(tmp_path):
+    """The measured winner's transport mode rides the DB record, and a
+    rehydrated record (even a pre-transport one) yields a valid
+    candidate."""
+    from repro.tuner import _db_candidate
+
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=4, occupancy=0.4)
+    plan_mod.clear_cache()
+    db = TuningDB(str(tmp_path / "db.json"))
+    dec = autotune(a, b, mesh, db=db, top_k=2)
+    assert len(db.records) == 1
+    rec = next(iter(db.records.values()))
+    assert rec["transport"] in ("dense", "compressed")
+    assert rec["transport"] == dec.transport
+    # a record written before the transport field reads as dense
+    f = featurize(a, b, 0.0)
+    legacy = {"engine": "gather", "l": None, "backend": "jnp"}
+    cand = _db_candidate(legacy, _ok_cube(a, b), mesh, f)
+    assert cand is not None and cand.transport == "dense"
+    # schema drift: an unknown mode is a miss, not a crash
+    assert _db_candidate({**legacy, "transport": "zstd"},
+                         _ok_cube(a, b), mesh, f) is None
+
+
+def test_pre_transport_db_records_still_warm_hit(tmp_path):
+    """A tuning DB persisted BEFORE the transport layer (4-element
+    constraint keys, records without a transport field) must still
+    resolve measurement-free: the unpinned constraint shape is
+    unchanged, and the record reads as dense transport."""
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=4, occupancy=0.4)
+    f = featurize(a, b, 0.0)
+    db = TuningDB(str(tmp_path / "db.json"))
+    # the exact key shape PR 4 wrote: ("mult", "*", "*", 0), no transport
+    old_key = make_key(feature_bucket(f),
+                       tuner.mesh_signature(mesh)
+                       if hasattr(tuner, "mesh_signature")
+                       else tuple((n, int(mesh.shape[n]))
+                                  for n in mesh.axis_names),
+                       ("mult", "*", "*", 0), f.dtype)
+    db.record(old_key, {"engine": "gather", "l": None, "backend": "jnp",
+                        "measured_s": 1e-4})
+    plan_mod.clear_cache()
+    dec = autotune(a, b, mesh, db=db)
+    assert dec.source == "db" and dec.engine == "gather"
+    assert dec.transport == "dense"
+    assert plan_mod.cache_stats()["tuner_trials"] == 0
+
+
 # ---- Eq. (6) memory pruning: the property the tuner must never break -------
 
 _MESHES = [
