@@ -1,0 +1,210 @@
+"""MXU tile-shape sweep for the tiled pallas SpGEMM kernel.
+
+The tiling PR's headline claim: staging (tm, tk, tn) MXU tiles through
+VMEM with an f32 accumulator lets the pallas backend handle atomic
+blocks whose whole-block working set cannot stage at all, and picks
+tile shapes that keep the MXU fed instead of spilling.  This bench
+records, per (block shape, dtype):
+
+  * the analytic ``local_stage_cost`` of whole-block staging vs the best
+    explicit tile (the tuner's own ranking signal) — whole-block staging
+    of a 1024^3 f32 block needs ~24 MiB of VMEM against a 16 MiB budget,
+    so its effective cost is infinite and the model speedup is reported
+    as ``inf``;
+  * an interpret-mode numerics check on small shapes (tiled == oracle),
+    so the sweep never reports a ranking off a wrong kernel;
+  * compiled wall time per tile candidate when running on real TPU
+    hardware (``jax.default_backend() == "tpu"``) — the >= 1.5x
+    wall-clock gate is a HARDWARE gate: interpret-mode pallas timing
+    measures the Python emulator, not the kernel, so under ``--smoke``
+    /CI the gate is asserted on the model's effective-cost ratio
+    (infinite at the VMEM wall, hence trivially passed) and the
+    wall-clock column is left null.
+
+Results go to BENCH_kernel_tiles.json (picked up by the BENCH_*.json
+wildcard of ``benchmarks/run.py --summary-only``).
+
+    python benchmarks/bench_kernel_tiles.py [--smoke] [--out BENCH_kernel_tiles.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.local_mm import local_filtered_mm, local_stage_cost  # noqa: E402
+from repro.kernels.block_spgemm import (  # noqa: E402
+    VMEM_BUDGET_BYTES,
+    tile_candidates,
+    tile_working_set_bytes,
+)
+
+GATE_SPEEDUP = 1.5
+
+
+def _time(fn, *args, reps: int) -> float:
+    out = fn(*args)  # warm-up (compile)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _mats(seed, ni, nk, nj, bs, occupancy, dtype):
+    ka, kb, km = jax.random.split(jax.random.key(seed), 3)
+    a = (jax.random.normal(ka, (ni, nk, bs, bs)) / np.sqrt(bs)).astype(dtype)
+    b = (jax.random.normal(kb, (nk, nj, bs, bs)) / np.sqrt(bs)).astype(dtype)
+    am = jax.random.uniform(km, (ni, nk)) < occupancy
+    bm = jax.random.uniform(jax.random.fold_in(km, 1), (nk, nj)) < occupancy
+    an = jnp.where(am, 1.0, 0.0)
+    bn = jnp.where(bm, 1.0, 0.0)
+    return a, am, an, b, bm, bn
+
+
+def numerics_row(bs: int, dtype: str, interpret: bool) -> dict:
+    """Tiled vs whole-block vs jnp oracle on one small shape."""
+    args = _mats(7, 2, 3, 2, bs, 0.6, dtype)
+    want, want_m = local_filtered_mm(*args, backend="jnp")
+    tiles = tile_candidates(bs, bs, bs, np.dtype(dtype), interpret=interpret)
+    tol = 1e-5 if dtype == "float32" else 2e-2
+    errs = {}
+    for tile in tiles:
+        got, got_m = local_filtered_mm(*args, backend="pallas", tile=tile,
+                                       interpret=interpret)
+        assert bool(jnp.all(got_m == want_m))
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        assert err < tol, (tile, err, tol)
+        errs["default" if tile is None else "x".join(map(str, tile))] = err
+    return {"bs": bs, "dtype": dtype, "n_tiles": len(tiles),
+            "max_abs_err": errs, "tol": tol}
+
+
+def model_row(bs: int, dtype: str, fill: float, cap: int) -> dict:
+    """Analytic whole-block vs best-tile ranking at one block shape."""
+    whole_ws = tile_working_set_bytes(bs, bs, bs, None, np.dtype(dtype))
+    whole = local_stage_cost(4, 4, 4, bs, bs, bs, fill=fill,
+                             backend="pallas", dtype=dtype, capacity=cap)
+    best_tile, best = None, whole
+    for tile in tile_candidates(bs, bs, bs, np.dtype(dtype), interpret=False):
+        if tile is None:
+            continue
+        lc = local_stage_cost(4, 4, 4, bs, bs, bs, fill=fill,
+                              backend="pallas", dtype=dtype, tile=tile,
+                              capacity=cap)
+        if lc.effective < best.effective:
+            best_tile, best = tile, lc
+    speedup = (float("inf") if not whole.feasible
+               else whole.effective / best.effective)
+    return {
+        "bs": bs,
+        "dtype": dtype,
+        "whole_block_ws_bytes": whole_ws,
+        "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+        "whole_block_feasible": whole.feasible,
+        "whole_effective": None if not whole.feasible else whole.effective,
+        "best_tile": list(best_tile) if best_tile else None,
+        "best_effective": best.effective,
+        "model_speedup": None if speedup == float("inf") else speedup,
+        "model_speedup_inf": speedup == float("inf"),
+    }
+
+
+def hardware_row(bs: int, dtype: str, reps: int) -> dict:
+    """Compiled wall time per tile candidate (TPU only)."""
+    args = _mats(11, 2, 2, 2, bs, 1.0, dtype)
+    rows = {}
+    for tile in tile_candidates(bs, bs, bs, np.dtype(dtype), interpret=False):
+        ws = tile_working_set_bytes(bs, bs, bs, tile, np.dtype(dtype))
+        if ws > VMEM_BUDGET_BYTES:
+            continue  # would fail to stage: the model already says so
+        fn = jax.jit(lambda *xs, t=tile: local_filtered_mm(
+            *xs, backend="pallas", tile=t))
+        key = "default" if tile is None else "x".join(map(str, tile))
+        rows[key] = _time(fn, *args, reps=reps) * 1e3
+    return {"bs": bs, "dtype": dtype, "wall_ms": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_kernel_tiles.json")
+    args = ap.parse_args()
+
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    reps = args.reps or (3 if args.smoke else 20)
+
+    # numerics first: no ranking off a wrong kernel
+    num_shapes = [(8, "float32"), (16, "float32"), (16, "bfloat16")]
+    if not args.smoke:
+        num_shapes += [(32, "float32"), (32, "bfloat16")]
+    numerics = [numerics_row(bs, dt, interpret) for bs, dt in num_shapes]
+
+    # the analytic ranking the tuner searches over, incl. the VMEM wall
+    model_shapes = [(256, "float32"), (512, "float32"), (512, "bfloat16"),
+                    (1024, "float32"), (1024, "bfloat16")]
+    model = [model_row(bs, dt, fill=0.5, cap=8) for bs, dt in model_shapes]
+
+    hardware = []
+    if on_tpu and not args.smoke:
+        hardware = [hardware_row(bs, dt, reps)
+                    for bs, dt in [(256, "float32"), (256, "bfloat16")]]
+
+    # the gate: on at least one large-block shape the tiled kernel beats
+    # whole-block staging by >= GATE_SPEEDUP.  At bs=1024 f32 whole-block
+    # staging is VMEM-infeasible outright, so the model ratio is infinite.
+    best = max((float("inf") if r["model_speedup_inf"]
+                else (r["model_speedup"] or 0.0)) for r in model)
+    gate_pass = best >= GATE_SPEEDUP
+    assert gate_pass, f"tiled/whole model speedup {best} < {GATE_SPEEDUP}"
+
+    report = {
+        "bench": "kernel_tile_sweep",
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "numerics": numerics,
+        "model": model,
+        "hardware": hardware,
+        "gate": {
+            "threshold": GATE_SPEEDUP,
+            "best_model_speedup": None if best == float("inf") else best,
+            "best_model_speedup_inf": best == float("inf"),
+            "pass": gate_pass,
+            "wall_clock_gated_on": "tpu hardware only (interpret timing "
+                                   "measures the emulator, not the kernel)",
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"{'bs':>6} {'dtype':>9} {'whole ws MiB':>13} {'feasible':>9} "
+          f"{'best tile':>14} {'speedup':>9}")
+    for r in model:
+        sp = "inf" if r["model_speedup_inf"] else f"{r['model_speedup']:.2f}"
+        tile = "x".join(map(str, r["best_tile"])) if r["best_tile"] else "-"
+        print(f"{r['bs']:>6} {r['dtype']:>9} "
+              f"{r['whole_block_ws_bytes'] / 2**20:>13.1f} "
+              f"{str(r['whole_block_feasible']):>9} {tile:>14} {sp:>9}")
+    for r in numerics:
+        worst = max(r["max_abs_err"].values())
+        print(f"numerics bs={r['bs']} {r['dtype']}: {r['n_tiles']} tiles, "
+              f"max|err|={worst:.2e} < {r['tol']}")
+    print(f"gate: best model speedup {'inf' if best == float('inf') else best} "
+          f">= {GATE_SPEEDUP} -> wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

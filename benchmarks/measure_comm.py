@@ -46,9 +46,10 @@ def measure(mesh, engine, nb=NB, **kw) -> float:
     return rep.collective_wire_bytes
 
 
-def modeled(mesh, engine, nb=NB, c_layout="2d", transport=None) -> float:
+def modeled(mesh, engine, nb=NB, c_layout="2d", transport=None,
+            itemsize=4.0) -> float:
     plan = plan_mod.plan_multiply(mesh, engine)
-    return plan_volume(plan, nb, BS, c_layout=c_layout,
+    return plan_volume(plan, nb, BS, itemsize=itemsize, c_layout=c_layout,
                        transport=transport).total
 
 
@@ -80,6 +81,74 @@ def compressed_rows(rows) -> None:
         )
         assert ratio <= 0.35, (engine, ratio, comp, dense)
         assert 0.8 < comp / m < 1.25, (engine, comp, m)
+
+
+def reduced_wire_rows(rows) -> None:
+    """Reduced-precision transport on the compiled programs.
+
+    The claim: bf16 *storage* rides the native wire at half the f32
+    bytes (losslessly — nothing re-cast), and an explicit narrow *wire*
+    on f32 storage cuts every A/B hop the same way, with
+    ``plan_volume(itemsize=..., transport=...)`` modeling the width
+    exactly.
+
+    Platform caveat, verified empirically here: XLA:CPU's bf16
+    legalization (FloatNormalization) rewrites bf16 collectives as
+    ``all-gather(convert<f32>(x))`` + a semantic bf16 round-trip after —
+    so on the host platform the bf16 wire measures at f32 width, a
+    measurement artifact of the emulation backend (an optimization
+    barrier cannot suppress it; it is type legalization, not code
+    motion).  bf16 is native on TPU, where the wire stays narrow and the
+    strict halving is asserted.  The f8 wire IS measurably narrower on
+    CPU (legalized to f16, not f32): it demonstrates on every platform
+    that the transport layer's wire cast reaches the compiled collective
+    and bytes-on-wire scale with the wire element width."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import transport as T
+
+    on_tpu = jax.default_backend() == "tpu"
+    for engine, p in (("gather", 4), ("cannon", 4), ("onesided", 4)):
+        mesh = make_spgemm_mesh(p=p)
+        f32 = measure(mesh, engine)
+        bf = measure(mesh, engine, dtype=jnp.bfloat16)
+        m = modeled(mesh, engine, itemsize=2.0)
+        ratio = bf / f32
+        rows.append(
+            (f"measured/{engine}_bf16/p{p}/bytes_per_dev", round(bf),
+             f"x{ratio:.2f} of f32 {f32:.0f}; model {m:.0f}: x{bf / m:.2f}")
+        )
+        if on_tpu:  # native bf16 collectives: the halving is on the wire
+            assert 0.4 <= ratio <= 0.6, (engine, ratio, bf, f32)
+            assert 0.8 < bf / m < 1.25, (engine, bf, m)
+        else:  # XLA:CPU legalizes bf16 collectives back to f32 width
+            assert ratio <= 1.01, (engine, ratio, bf, f32)
+            assert 0.8 < bf / (2.0 * m) < 1.25, (engine, bf, m)
+
+    # f8 wire on f32 storage: A/B hops narrow, measurably on EVERY
+    # platform (CPU legalizes f8 collectives to f16 = still 2x under
+    # f32; TPU ships 1-byte elements = 4x)
+    tr = T.PanelTransport("dense", wire="float8_e4m3fn")
+    mesh = make_spgemm_mesh(p=4)
+    for engine in ("gather", "cannon"):
+        f32 = measure(mesh, engine)
+        w = measure(mesh, engine, transport=tr)
+        m = modeled(mesh, engine, transport=tr)
+        rows.append(
+            (f"measured/{engine}_f8wire/p4/bytes_per_dev", round(w),
+             f"x{w / f32:.2f} of dense {f32:.0f}; model {m:.0f}: "
+             f"x{w / m:.2f}")
+        )
+        assert w / f32 <= 0.6, (engine, w, f32)
+        if on_tpu:  # model fidelity at the un-legalized 1-byte wire
+            assert 0.8 < w / m < 1.25, (engine, w, m)
+        else:  # CPU ships the f8 panels at f16 width — byte-identical
+            # to a 2-byte wire, which the model prices as wire=bf16
+            m2 = modeled(mesh, engine,
+                         transport=T.PanelTransport("dense",
+                                                    wire="bfloat16"))
+            assert 0.8 < w / m2 < 1.25, (engine, w, m2)
 
 
 def main() -> None:
@@ -131,6 +200,7 @@ def main() -> None:
         assert vl < v1, (p_r, p_c, vl, v1)  # 2.5D wins on non-square too
 
     compressed_rows(rows)
+    reduced_wire_rows(rows)
 
     for name, val, note in rows:
         print(f"{name},{val},{note}")

@@ -303,6 +303,28 @@ def transport_mode() -> str:
     )
 
 
+def storage_dtype() -> str:
+    """Configured block-storage dtype for dtype-matrixed test/CI runs.
+
+    ``REPRO_STORAGE_DTYPE`` selects the reduced-precision storage leg of
+    the CI matrix: "float32" (default) keeps the exact path, "bfloat16"
+    runs the mixed-precision path (bf16 blocks, f32 MXU accumulation —
+    DESIGN.md §2).  Read by the dtype-matrixed end-to-end tests; library
+    code never consults it (storage dtype is an explicit argument:
+    ``bsm.astype`` / ``sign_iteration(storage_dtype=...)``).
+    """
+    import os
+
+    raw = os.environ.get("REPRO_STORAGE_DTYPE", "float32").strip().lower()
+    if raw in ("", "f32", "float32"):
+        return "float32"
+    if raw in ("bf16", "bfloat16"):
+        return "bfloat16"
+    raise ValueError(
+        f"REPRO_STORAGE_DTYPE={raw!r}: expected float32 | bfloat16"
+    )
+
+
 def pallas_interpret() -> bool | None:
     """Configured Pallas interpret mode, or None for platform auto-detect.
 

@@ -76,6 +76,22 @@ class BlockSparseMatrix:
         return jnp.sqrt(jnp.sum(jnp.square(self.norms)))
 
     # ---- conversions ---------------------------------------------------
+    def astype(self, dtype) -> "BlockSparseMatrix":
+        """Cast block storage to ``dtype``, recalibrating norms.
+
+        Norms are recomputed from the *quantized* blocks (always in f32 —
+        ``block_norms``), so the on-the-fly threshold filter sees the
+        values that will actually be multiplied, not the pre-rounding
+        ones — the recalibration rule of DESIGN.md §2's mixed-precision
+        pipeline.  Identity (same object) when the dtype already matches.
+        """
+        if jnp.dtype(dtype) == self.dtype:
+            return self
+        blocks = self.blocks.astype(dtype)
+        return BlockSparseMatrix(
+            blocks=blocks, mask=self.mask, norms=block_norms(blocks)
+        )
+
     def to_dense(self) -> jax.Array:
         nb_r, nb_c, bs_r, bs_c = self.blocks.shape
         masked = self.blocks * self.mask[:, :, None, None].astype(self.blocks.dtype)
@@ -303,6 +319,20 @@ class ShardedBSM:
     def nnz_blocks(self) -> jax.Array:
         return jnp.sum(self.mask)
 
+    def astype(self, dtype) -> "ShardedBSM":
+        """Cast block storage on the shards, recalibrating norms from the
+        quantized blocks (see :meth:`BlockSparseMatrix.astype`) — no
+        gather, the cast and the norm reduction both run shard-local."""
+        if jnp.dtype(dtype) == self.dtype:
+            return self
+        blocks = self.blocks.astype(dtype)
+        return ShardedBSM(
+            blocks=blocks,
+            mask=self.mask,
+            norms=block_norms(blocks),
+            mesh=self.mesh,
+        )
+
     # ---- chain-boundary conversions ------------------------------------
     def unshard(self) -> BlockSparseMatrix:
         """Gather the triple to every device — the explicit chain-boundary
@@ -351,6 +381,14 @@ def shard_bsm(m: BlockSparseMatrix | ShardedBSM, mesh) -> ShardedBSM:
 def unshard_bsm(m: BlockSparseMatrix | ShardedBSM) -> BlockSparseMatrix:
     """Chain-boundary gather; identity on an unsharded matrix."""
     return m.unshard() if isinstance(m, ShardedBSM) else m
+
+
+def cast_bsm(m, dtype):
+    """Storage-dtype cast with norm recalibration for either matrix kind
+    (``BlockSparseMatrix`` or ``ShardedBSM``); identity when already at
+    ``dtype``.  The one entry point reduced-precision pipelines
+    (``signiter.sign_iteration(storage_dtype=...)``) go through."""
+    return m.astype(dtype)
 
 
 def sharded_identity(nb: int, bs, mesh, dtype=jnp.float32) -> ShardedBSM:

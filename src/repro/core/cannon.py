@@ -48,6 +48,7 @@ def ring_body(
     threshold: float = 0.0,
     backend: str = "jnp",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport: T.PanelTransport = T.DENSE,
 ):
@@ -60,7 +61,7 @@ def ring_body(
     """
     mm_kw = dict(
         threshold=threshold, backend=backend,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
     )
     axes = plan.axes
     ticks = plan.ticks
@@ -69,10 +70,11 @@ def ring_body(
     def body(ab, am, an, bb, bm, bn):
         del an, bn  # norms never ride the ring (recomputed at compute time)
         sa, sb = am.shape, bm.shape
+        adt, bdt = ab.dtype, bb.dtype  # widen wire-cast panels back
 
         def compute(pa, pb, cb, cm):
-            xb, xm = T.dense_view(tr, pa, *sa)
-            yb, ym = T.dense_view(tr, pb, *sb)
+            xb, xm = T.dense_view(tr, pa, *sa, dtype=adt)
+            yb, ym = T.dense_view(tr, pb, *sb, dtype=bdt)
             dcb, dcm = local_filtered_mm(
                 xb, xm, T.panel_norms(xb, threshold),
                 yb, ym, T.panel_norms(yb, threshold), **mm_kw,

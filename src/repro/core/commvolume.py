@@ -18,6 +18,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.topology import Topology, make_topology
 
 
@@ -93,19 +95,27 @@ def _packed_bytes(entries: float, bs: int, itemsize: float) -> float:
     return entries * (bs * bs * itemsize + 4.0)
 
 
-def _transport_spec(transport) -> tuple[str, float | None, float | None]:
+def _transport_spec(
+    transport,
+) -> tuple[str, float | None, float | None, float | None]:
     """Normalize a transport argument for the volume model: mode plus
     exact per-panel capacities when available (a resolved
     ``PanelTransport``), or None capacities for the occupancy-scaled
-    analytic flavor (mode given as the string "compressed")."""
+    analytic flavor (mode given as the string "compressed").  The fourth
+    element is the wire itemsize a non-native wire format pins (None =
+    charge the caller's storage ``itemsize``) — index and mask overheads
+    always stay at their own fixed widths."""
     if transport is None or transport == "dense":
-        return "dense", None, None
+        return "dense", None, None, None
     if transport == "compressed":
-        return "compressed", None, None
+        return "compressed", None, None, None
     if getattr(transport, "mode", None) in ("dense", "compressed"):
+        wire = getattr(transport, "wire", "native")
+        w = None if wire == "native" else float(np.dtype(wire).itemsize)
         if transport.mode == "dense":
-            return "dense", None, None
-        return "compressed", float(transport.cap_a), float(transport.cap_b)
+            return "dense", None, None, w
+        return ("compressed", float(transport.cap_a),
+                float(transport.cap_b), w)
     raise ValueError(f"unknown transport spec {transport!r}")
 
 
@@ -140,19 +150,24 @@ def plan_volume(
     topo = plan.topo
     p_r, p_c, depth = plan.p_r, plan.p_c, topo.l
     nr, nc = nb // p_r, nb // p_c
-    mode, cap_a, cap_b = _transport_spec(transport)
+    mode, cap_a, cap_b, wire_item = _transport_spec(transport)
+    # A/B panel payloads travel at the WIRE width (bf16 wire on f32
+    # storage halves them; bf16 storage halves them natively via the
+    # caller's itemsize); partial-C traffic is accumulator state and
+    # always moves at storage width.
+    ab_item = itemsize if wire_item is None else wire_item
 
     def hop_a(rows: int, cols: int) -> float:
         if mode == "compressed":
             n = cap_a if cap_a is not None else occ_a * rows * cols
-            return _packed_bytes(n, bs, itemsize)
-        return _panel_bytes(rows, cols, bs, itemsize)
+            return _packed_bytes(n, bs, ab_item)
+        return _panel_bytes(rows, cols, bs, ab_item)
 
     def hop_b(rows: int, cols: int) -> float:
         if mode == "compressed":
             n = cap_b if cap_b is not None else occ_b * rows * cols
-            return _packed_bytes(n, bs, itemsize)
-        return _panel_bytes(rows, cols, bs, itemsize)
+            return _packed_bytes(n, bs, ab_item)
+        return _panel_bytes(rows, cols, bs, ab_item)
 
     if plan.kind == "pull":
         wa = nc // plan.ca  # A subpanel block-cols (= nb / V)
@@ -176,11 +191,11 @@ def plan_volume(
             # (p-1)/p of the gathered (p, capacity, ...) output
             na = cap_a if cap_a is not None else occ_a * nr * nc
             nb_e = cap_b if cap_b is not None else occ_b * nr * nc
-            ga = (p_c - 1) * _packed_bytes(na, bs, itemsize)
-            gb = (p_r - 1) * _packed_bytes(nb_e, bs, itemsize)
+            ga = (p_c - 1) * _packed_bytes(na, bs, ab_item)
+            gb = (p_r - 1) * _packed_bytes(nb_e, bs, ab_item)
         else:
-            ga = _panel_bytes(nr, nb, bs, itemsize) * (p_c - 1) / p_c
-            gb = _panel_bytes(nb, nc, bs, itemsize) * (p_r - 1) / p_r
+            ga = _panel_bytes(nr, nb, bs, ab_item) * (p_c - 1) / p_c
+            gb = _panel_bytes(nb, nc, bs, ab_item) * (p_r - 1) / p_r
         ab, c = ga + gb, 0.0
         name = "gather"
     elif plan.kind == "stacked":

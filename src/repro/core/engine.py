@@ -101,8 +101,10 @@ def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
     ni, nk = a.nb_r, a.nb_c
     nj = b.nb_c
     dims = (ni, nk, nj, a.bs_r, a.bs_c, b.bs_c)
-    dense = backend_local_cost(*dims, fill=1.0, backend="jnp")
-    compact = backend_local_cost(*dims, fill=fill, backend="stacks")
+    dense = backend_local_cost(*dims, fill=1.0, backend="jnp",
+                               dtype=a.dtype)
+    compact = backend_local_cost(*dims, fill=fill, backend="stacks",
+                                 dtype=a.dtype)
     if dense <= compact:
         return "jnp"
     return "pallas" if jax.default_backend() == "tpu" else "stacks"
@@ -115,13 +117,14 @@ device_stack_bound = plan_mod.device_stack_bound
 
 
 @partial(jax.jit, static_argnames=("threshold", "backend", "stack_capacity",
-                                   "interpret"))
+                                   "tile", "interpret"))
 def _multiply_reference_jit(
     a: BlockSparseMatrix,
     b: BlockSparseMatrix,
     threshold: float = 0.0,
     backend: str = "jnp",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ) -> BlockSparseMatrix:
     cb, cm = local_filtered_mm(
@@ -134,6 +137,7 @@ def _multiply_reference_jit(
         threshold=threshold,
         backend=backend,
         stack_capacity=stack_capacity,
+        tile=tile,
         interpret=interpret,
     )
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
@@ -144,6 +148,7 @@ def _reference_compacted(
     b: BlockSparseMatrix,
     threshold: float,
     backend: str,
+    tile: tuple[int, int, int] | None,
     interpret: bool | None,
     ok: np.ndarray | None = None,
 ) -> BlockSparseMatrix:
@@ -163,7 +168,8 @@ def _reference_compacted(
         return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
     fn = plan_mod.get_local_compiled(
         ni, nk, nj, a.bs_r, a.bs_c, b.bs_c, a.dtype,
-        backend=backend, capacity=stacks.capacity, interpret=interpret,
+        backend=backend, capacity=stacks.capacity, tile=tile,
+        interpret=interpret,
     )
     cb = fn(a.blocks, b.blocks, stacks)
     # the pallas grid only visits tiles with surviving products
@@ -178,6 +184,7 @@ def multiply_reference(
     backend: str = "jnp",
     *,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     ok: np.ndarray | None = None,
 ) -> BlockSparseMatrix:
@@ -192,10 +199,11 @@ def multiply_reference(
             ok = _host_pair_filter(a, b, threshold)
         backend = choose_backend(a, b, threshold, ok=ok)
     if backend in ("stacks", "pallas") and concrete and stack_capacity is None:
-        return _reference_compacted(a, b, threshold, backend, interpret, ok)
+        return _reference_compacted(a, b, threshold, backend, tile,
+                                    interpret, ok)
     return _multiply_reference_jit(
         a, b, threshold, backend,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
     )
 
 
@@ -211,6 +219,7 @@ def multiply(
     c_layout: str = "2d",
     l: int | None = None,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
 ) -> BlockSparseMatrix | ShardedBSM:
@@ -287,6 +296,8 @@ def multiply(
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
                 stack_capacity = dec.stack_capacity
+            if tile is None:
+                tile = dec.tile
             if transport is None or transport == "auto":
                 # adopt the tuner's measured mode (as resolve_multiply
                 # does) — "auto" left in place would re-resolve through
@@ -299,7 +310,7 @@ def multiply(
         c = plan_mod.execute_sharded(
             a, b, engine,
             threshold=threshold, backend=backend, l=l,
-            stack_capacity=stack_capacity, interpret=interpret,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
             transport=transport,
         )
         eps = threshold if filter_eps is None else filter_eps
@@ -320,6 +331,8 @@ def multiply(
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
                 stack_capacity = dec.stack_capacity
+            if tile is None:
+                tile = dec.tile
             if transport is None or transport == "auto":
                 # adopt the tuner's measured mode (see the sharded path)
                 transport = dec.transport
@@ -338,7 +351,8 @@ def multiply(
     if mesh is None:
         c = multiply_reference(
             a, b, threshold=threshold, backend=backend,
-            stack_capacity=stack_capacity, interpret=interpret, ok=ok_np,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
+            ok=ok_np,
         )
     else:
         if (
@@ -350,7 +364,7 @@ def multiply(
         c = plan_mod.execute(
             a, b, mesh, engine,
             threshold=threshold, backend=backend, c_layout=c_layout, l=l,
-            stack_capacity=stack_capacity, interpret=interpret,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
             transport=transport,
         )
     eps = threshold if filter_eps is None else filter_eps
@@ -383,6 +397,7 @@ def lower_multiply(
     c_layout: str = "2d",
     l: int | None = None,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
 ):
@@ -405,6 +420,7 @@ def lower_multiply(
         c_layout=c_layout,
         l=l,
         stack_capacity=stack_capacity,
+        tile=tile,
         interpret=interpret,
         transport=transport,
     )

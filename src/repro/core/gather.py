@@ -35,6 +35,7 @@ def gather_body(
     threshold: float = 0.0,
     backend: str = "jnp",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport: T.PanelTransport = T.DENSE,
 ):
@@ -58,7 +59,7 @@ def gather_body(
             ab, am, T.panel_norms(ab, threshold),
             bb, bm, T.panel_norms(bb, threshold),
             threshold=threshold, backend=backend,
-            stack_capacity=stack_capacity, interpret=interpret,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         )
 
     return body

@@ -32,9 +32,15 @@ caller (after the cross-device reduction, where applicable).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_spgemm import (
+    VMEM_BUDGET_BYTES,
+    tile_working_set_bytes,
+)
 from repro.kernels.stacks import (
     ProductStacks,
     compact_pair_mask,
@@ -50,6 +56,98 @@ BACKENDS = ("jnp", "stacks", "pallas")
 # full; calibrated against benchmarks/bench_local_mm.py's sweep).
 GATHER_OVERHEAD = 4.0
 
+# MXU throughput multiplier per storage itemsize (f32 baseline; bf16
+# doubles, 8-bit quadruples on hardware that packs the systolic array).
+_MXU_DTYPE_SPEEDUP = {4: 1.0, 2: 2.0, 1: 4.0}
+
+# FLOP-equivalents of one HBM byte (PEAK_FLOPS / HBM_BW for TPU v5e-class
+# parts, 197e12 / 819e9 — kept inline to avoid a roofline import cycle).
+_FLOPS_PER_BYTE = 240.0
+
+
+@dataclass(frozen=True)
+class LocalCost:
+    """Cost breakdown of one local-stage call.
+
+    ``flops`` are *logical* MACs-times-two — the number XLA's
+    ``cost_analysis`` reports for the compiled program (asserted in
+    ``tests/test_roofline.py``) — independent of storage dtype since the
+    MXU accumulates in f32 either way.  ``hbm_bytes`` is operand/output
+    traffic at the *storage width* (bf16 halves it), including the
+    re-streaming a pallas tile grid adds.  ``effective`` is the
+    FLOP-equivalent ranking cost (dtype throughput, gather overhead, VMEM
+    pressure) the tuner and ``engine.choose_backend`` compare;
+    ``feasible`` is False when the tile working set cannot fit VMEM at
+    all (``effective`` is inf there).
+    """
+
+    flops: float
+    hbm_bytes: float
+    effective: float
+    feasible: bool = True
+
+
+def local_stage_cost(
+    ni: int,
+    nk: int,
+    nj: int,
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    *,
+    fill: float,
+    backend: str,
+    dtype=jnp.float32,
+    tile: tuple[int, int, int] | None = None,
+    capacity: int | None = None,
+) -> LocalCost:
+    """Dtype- and tile-aware analytic cost of one local-stage call.
+
+    ``jnp`` always pays the dense cube (the einsum contracts everything,
+    amortizing MXU padding over the full grid dims); the compacted
+    backends pay the surviving products (``capacity`` when the caller has
+    the exact bucketed count, else ``fill`` times the cube) times the
+    gather/scatter overhead.  A pallas ``tile`` adds its re-streaming
+    traffic (A tiles fetched once per output-column tile, B once per
+    output-row tile) and the VMEM-pressure terms: past half the budget
+    the operand pipeline loses double buffering (DMA serializes with the
+    MXU — traffic joins the critical path), past the full budget the
+    kernel cannot run at all.  Shared by ``engine.choose_backend`` and
+    the tuner's candidate model (``repro.tuner.model``) so the
+    single-device heuristic and the distributed autotuner agree —
+    including for rectangular atomic blocks and reduced storage dtypes.
+    """
+    itemsize = float(jnp.dtype(dtype).itemsize)
+    speed = _MXU_DTYPE_SPEEDUP.get(int(itemsize), 1.0)
+    cube = float(ni) * nk * nj
+    block = float(bs_r) * bs_k * bs_c
+    dense_flops = 2.0 * cube * block
+    if backend == "jnp":
+        hbm = (ni * nk * bs_r * bs_k + nk * nj * bs_k * bs_c
+               + ni * nj * bs_r * bs_c) * itemsize
+        return LocalCost(dense_flops, hbm, dense_flops / speed)
+    if backend not in ("stacks", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    cap = float(capacity) if capacity is not None else fill * cube
+    flops = 2.0 * cap * block
+    compute = GATHER_OVERHEAD * fill * dense_flops / speed
+    per_product = (bs_r * bs_k + bs_k * bs_c + bs_r * bs_c) * itemsize
+    if backend == "stacks":
+        return LocalCost(flops, cap * per_product, compute)
+    tm, tk, tn = tile or (bs_r, bs_k, bs_c)
+    n_tm, n_tn = -(-bs_r // tm), -(-bs_c // tn)
+    hbm = cap * (n_tn * bs_r * bs_k + n_tm * bs_k * bs_c
+                 + bs_r * bs_c) * itemsize
+    extra = cap * ((n_tn - 1) * bs_r * bs_k
+                   + (n_tm - 1) * bs_k * bs_c) * itemsize
+    ws = tile_working_set_bytes(bs_r, bs_k, bs_c, (tm, tk, tn), dtype)
+    if ws > VMEM_BUDGET_BYTES:
+        return LocalCost(flops, hbm, float("inf"), feasible=False)
+    if ws > VMEM_BUDGET_BYTES / 2:
+        # double buffering lost: the full traffic joins the critical path
+        return LocalCost(flops, hbm, compute + hbm * _FLOPS_PER_BYTE)
+    return LocalCost(flops, hbm, compute + extra * _FLOPS_PER_BYTE)
+
 
 def backend_local_cost(
     ni: int,
@@ -61,23 +159,14 @@ def backend_local_cost(
     *,
     fill: float,
     backend: str,
+    dtype=jnp.float32,
+    tile: tuple[int, int, int] | None = None,
 ) -> float:
-    """Analytic cost (effective FLOPs) of one local-stage call.
-
-    The generalization of the old fixed occupancy threshold: ``jnp``
-    always pays the dense cube (the einsum contracts everything), the
-    compacted backends pay the surviving products times the
-    gather/scatter overhead factor.  Shared by ``engine.choose_backend``
-    and the tuner's candidate model (``repro.tuner.model``) so the
-    single-device heuristic and the distributed autotuner agree on the
-    crossover — including for rectangular atomic blocks.
-    """
-    dense = 2.0 * ni * nk * nj * bs_r * bs_k * bs_c
-    if backend == "jnp":
-        return dense
-    if backend in ("stacks", "pallas"):
-        return GATHER_OVERHEAD * fill * dense
-    raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    """Effective-FLOP ranking cost (``local_stage_cost(...).effective``)."""
+    return local_stage_cost(
+        ni, nk, nj, bs_r, bs_k, bs_c, fill=fill, backend=backend,
+        dtype=dtype, tile=tile,
+    ).effective
 
 
 def pair_filter(
@@ -136,6 +225,7 @@ def local_filtered_mm(
     threshold: float = 0.0,
     backend: str = "jnp",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     precision=jax.lax.Precision.HIGHEST,
 ) -> tuple[jax.Array, jax.Array]:
@@ -144,8 +234,12 @@ def local_filtered_mm(
     Shapes: a_blocks (ni, nk, bs_r, bs_k), b_blocks (nk, nj, bs_k, bs_c)
     Returns: c_blocks (ni, nj, bs_r, bs_c), c_mask (ni, nj) bool.
 
-    ``interpret`` controls the pallas backend only: None auto-detects the
-    platform (compiled Mosaic on TPU, interpreter elsewhere — see
+    Every backend accumulates in f32 regardless of the storage dtype (the
+    MXU semantics), so bf16/f8 operands lose precision only at block
+    storage, never across the k-contraction.  ``tile`` selects the pallas
+    kernel's MXU sub-tile shape (ignored elsewhere).  ``interpret``
+    controls the pallas backend only: None auto-detects the platform
+    (compiled Mosaic on TPU, interpreter elsewhere — see
     ``repro.config.pallas_interpret``).
     """
     ni, nk = a_blocks.shape[:2]
@@ -155,7 +249,7 @@ def local_filtered_mm(
         from repro.kernels import ops as kops
 
         c_blocks = kops.block_spgemm(
-            a_blocks, b_blocks, ok, capacity=stack_capacity,
+            a_blocks, b_blocks, ok, capacity=stack_capacity, tile=tile,
             interpret=interpret,
         )
     elif backend == "stacks":
@@ -165,14 +259,14 @@ def local_filtered_mm(
             a_blocks, b_blocks, stacks, ni=ni, nj=nj, precision=precision
         )
     elif backend == "jnp":
-        okf = ok.astype(a_blocks.dtype)
+        okf = ok.astype(jnp.float32)
         c_blocks = jnp.einsum(
             "ikj,ikab,kjbc->ijac",
             okf,
-            a_blocks,
-            b_blocks,
+            a_blocks.astype(jnp.float32),
+            b_blocks.astype(jnp.float32),
             precision=precision,
-        )
+        ).astype(a_blocks.dtype)
     else:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     c_mask = jnp.any(ok, axis=1)

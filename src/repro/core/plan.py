@@ -691,14 +691,16 @@ def get_local_compiled(
     *,
     backend: str,
     capacity: int,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ):
     """Jitted single-device compacted local-stage program, LRU-cached.
 
     The program maps ``(a_blocks, b_blocks, stacks) -> c_blocks`` where
     ``stacks`` is a padded product list of exactly ``capacity`` entries.
-    The key carries no pattern data — only shapes, dtype, backend and the
-    capacity bucket — so every pattern in a bucket shares one executable.
+    The key carries no pattern data — only shapes, dtype, backend, the
+    capacity bucket and (pallas) the MXU tile shape — so every pattern in
+    a bucket shares one executable.
     """
     import jax
 
@@ -710,7 +712,7 @@ def get_local_compiled(
         interpret = _default_interpret()
     key = (
         "local", ni, nk, nj, bs_r, bs_k, bs_c, jnp.dtype(dtype).name,
-        backend, capacity, interpret,
+        backend, capacity, tile, interpret,
     )
     prog = _program_cache.get(key)
     if prog is not None:
@@ -732,7 +734,8 @@ def get_local_compiled(
 
         def fn(a_blocks, b_blocks, stacks):
             return block_spgemm_stacks(
-                a_blocks, b_blocks, stacks, ni=ni, nj=nj, interpret=interp
+                a_blocks, b_blocks, stacks, ni=ni, nj=nj, tile=tile,
+                interpret=interp,
             )
 
     else:
@@ -749,6 +752,7 @@ def get_local_compiled(
 
 def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
                   c_layout: str, stack_capacity: int | None = None,
+                  tile: tuple[int, int, int] | None = None,
                   interpret: bool | None = None, transport=None):
     """Construct (untraced) the shard_map executor for a plan."""
     if c_layout != "2d" and plan.kind != "stacked":
@@ -761,7 +765,7 @@ def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
     _stats.builds += 1
     kw = dict(
         threshold=threshold, backend=backend,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         transport=transport if transport is not None else T.DENSE,
     )
     if plan.kind == "ring":
@@ -785,6 +789,7 @@ def build_program(plan: MultiplyPlan, *, threshold: float, backend: str,
 
 def build_shard_body(plan: MultiplyPlan, *, threshold: float, backend: str,
                      stack_capacity: int | None = None,
+                     tile: tuple[int, int, int] | None = None,
                      interpret: bool | None = None, transport=None):
     """The engine's raw per-shard body: ``(ab, am, an, bb, bm, bn) ->
     (cb, cm)`` on shards, no shard_map wrapper.
@@ -806,7 +811,7 @@ def build_shard_body(plan: MultiplyPlan, *, threshold: float, backend: str,
     _stats.builds += 1
     kw = dict(
         threshold=threshold, backend=backend,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         transport=transport if transport is not None else T.DENSE,
     )
     if plan.kind == "ring":
@@ -840,6 +845,7 @@ def get_compiled(
     c_layout: str = "2d",
     l: int | None = None,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
 ):
@@ -875,8 +881,8 @@ def get_compiled(
         )
     key = (
         mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
-        float(threshold), backend, c_layout, l, stack_capacity, interpret,
-        transport.key,
+        float(threshold), backend, c_layout, l, stack_capacity, tile,
+        interpret, transport.key,
     )
     prog = _program_cache.get(key)
     if prog is not None:
@@ -888,7 +894,7 @@ def get_compiled(
     plan.validate_blocks(nb_r, nb_r)
     fn = build_program(
         plan, threshold=threshold, backend=backend, c_layout=c_layout,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         transport=transport,
     )
     prog = jax.jit(fn)

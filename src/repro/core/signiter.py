@@ -154,11 +154,11 @@ def _make_sweep(mm, dtype, filter_eps: float, *, total_blocks: int,
 
 
 def _sweep_key(mesh, engine, nb_r, nb_c, bs_r, bs_c, dtype, threshold,
-               filter_eps, backend, l, stack_capacity, interpret):
+               filter_eps, backend, l, stack_capacity, tile, interpret):
     return (
         "signiter", mesh, engine, nb_r, nb_c, bs_r, bs_c,
         jnp.dtype(dtype).name, float(threshold), float(filter_eps),
-        backend, l, stack_capacity, interpret,
+        backend, l, stack_capacity, tile, interpret,
     )
 
 
@@ -172,6 +172,7 @@ def get_sweep_program(
     backend: str,
     l: int | None = None,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ):
     """The compiled fused sweep for (mesh, shape, engine, backend, ...),
@@ -208,9 +209,10 @@ def get_sweep_program(
         interpret = _default_interpret()
     key = _sweep_key(mesh, engine, x.nb_r, x.nb_c, x.bs_r, x.bs_c, x.dtype,
                      threshold, filter_eps, backend, l, stack_capacity,
-                     interpret)
+                     tile, interpret)
     mm_kw = dict(threshold=threshold, backend=backend,
-                 stack_capacity=stack_capacity, interpret=interpret)
+                 stack_capacity=stack_capacity, tile=tile,
+                 interpret=interpret)
     total_blocks = x.nb_r * x.nb_c
 
     def builder():
@@ -268,6 +270,7 @@ def lower_sweep(
     dtype=jnp.float32,
     l: int | None = None,
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ):
     """Lower (without executing) one fused sweep for HLO inspection — the
@@ -280,7 +283,8 @@ def lower_sweep(
     shape = _ChainShape(nb, bs, dtype)
     fn = get_sweep_program(shape, mesh, engine=engine, threshold=threshold,
                            filter_eps=filter_eps, backend=backend, l=l,
-                           stack_capacity=stack_capacity, interpret=interpret)
+                           stack_capacity=stack_capacity, tile=tile,
+                           interpret=interpret)
     bs_r, bs_c = shape.bs_r, shape.bs_c
     if mesh is None:
         blk = jax.ShapeDtypeStruct((nb, nb, bs_r, bs_c), dtype)
@@ -312,6 +316,8 @@ def sign_iteration_legacy(
     scale_input: bool = True,
     backend: str = "jnp",
     l: int | None = None,
+    storage_dtype=None,
+    tile: tuple[int, int, int] | None = None,
 ) -> tuple[B.BlockSparseMatrix, SignIterStats]:
     """The host-driven per-op loop (parity oracle / benchmark baseline):
     two ``multiply()`` re-entries per sweep from replicated arrays, eager
@@ -325,6 +331,13 @@ def sign_iteration_legacy(
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     x = _scale_to_unit_spectrum(x0) if scale_input else x0
+    if storage_dtype is not None:
+        # reduced-precision block storage: cast AFTER the spectral scale
+        # (the scale is a global scalar — quantize the scaled operand) and
+        # recalibrate norms from the quantized blocks (bsm.astype) so the
+        # on-the-fly filter sees the norms of what actually multiplies
+        x = B.cast_bsm(x, storage_dtype)
+        ident = B.cast_bsm(ident, storage_dtype)
     occ, res_trace = [], []
     n_mults = 0
     converged = False
@@ -333,14 +346,14 @@ def sign_iteration_legacy(
     for it in range(1, max_iter + 1):
         x2 = multiply(
             x, x, mesh, engine=engine, threshold=threshold,
-            filter_eps=filter_eps, backend=backend, l=l,
+            filter_eps=filter_eps, backend=backend, l=l, tile=tile,
         )
         n_mults += 1
         # 3I - X^2
         y = B.add(B.scale(x2, -1.0), B.scale(ident, 3.0))
         xn = multiply(
             x, y, mesh, engine=engine, threshold=threshold,
-            filter_eps=filter_eps, backend=backend, l=l,
+            filter_eps=filter_eps, backend=backend, l=l, tile=tile,
         )
         xn = B.scale(xn, 0.5)
         n_mults += 1
@@ -382,6 +395,8 @@ def sign_iteration(
     backend: str = "jnp",
     l: int | None = None,
     stack_capacity: int | None = None,
+    storage_dtype=None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0).
@@ -397,6 +412,17 @@ def sign_iteration(
                  "jnp": the sweep is traced, there is no concrete pattern
                  to compact; "stacks"/"pallas" take ``stack_capacity`` as
                  their static product bound, full cube when omitted).
+    storage_dtype — reduced-precision block storage for the whole chain
+                 (e.g. ``jnp.bfloat16``): X and I are quantized ONCE at
+                 the chain boundary (after the spectral scale) with norms
+                 recalibrated from the quantized blocks (``bsm.astype``),
+                 every multiply accumulates in f32 on the MXU, and panels
+                 ride the wire at storage width — half the f32 bytes for
+                 bf16.  Residual/occupancy stay f32.  Expect the bf16
+                 fixed point within ~3e-2 of the f32 oracle elementwise
+                 (``kernels.ref`` documents the tolerance model).
+    tile       — MXU tile override (tm, tk, tn) for the pallas backend
+                 (None = ``kernels.block_spgemm.default_tile``).
 
     A ShardedBSM ``x0`` stays sharded end-to-end and the result is a
     ShardedBSM; a BlockSparseMatrix with ``mesh`` given is sharded once at
@@ -410,6 +436,7 @@ def sign_iteration(
             x0, mesh=mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, max_iter=max_iter, tol=tol,
             scale_input=scale_input, backend=backend, l=l,
+            storage_dtype=storage_dtype, tile=tile,
         )
     if mode != "fused":
         raise ValueError(f"unknown mode {mode!r}; 'fused' or 'legacy'")
@@ -430,6 +457,11 @@ def sign_iteration(
     else:
         x = x0
     x = _scale_to_unit_spectrum(x) if scale_input else x
+    if storage_dtype is not None:
+        # quantize once at the chain boundary, shard-local for ShardedBSM;
+        # norms recalibrated from the quantized blocks (bsm.astype)
+        x = B.cast_bsm(x, storage_dtype)
+        ident = B.cast_bsm(ident, storage_dtype)
 
     sweep = None
     xb, xm, xn = x.blocks, x.mask, x.norms
@@ -446,7 +478,7 @@ def sign_iteration(
         sweep = get_sweep_program(
             x, mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, backend=backend, l=l,
-            stack_capacity=stack_capacity, interpret=interpret,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         )
         xb, xm, xn, res_d, occ_d = sweep(xb, xm, xn, ib, im)
         pending.append((res_d, occ_d))
@@ -494,6 +526,8 @@ def density_matrix(
     mode: str = "fused",
     sync_every: int = 1,
     backend: str = "jnp",
+    storage_dtype=None,
+    tile: tuple[int, int, int] | None = None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I).
 
@@ -519,7 +553,11 @@ def density_matrix(
         mode=mode,
         sync_every=sync_every,
         backend=backend,
+        storage_dtype=storage_dtype,
+        tile=tile,
     )
+    if sgn.dtype != ident.dtype:  # projector algebra in storage dtype
+        ident = B.cast_bsm(ident, sgn.dtype)
     if isinstance(sgn, B.ShardedBSM):
         p = sgn.scale(-1.0).add(ident).scale(0.5)
     else:

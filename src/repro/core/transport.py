@@ -61,6 +61,15 @@ from jax import lax
 
 MODES = ("dense", "compressed")
 
+# wire element formats: "native" ships blocks at their storage dtype
+# (bf16-stored matrices therefore already halve wire bytes — losslessly);
+# a reduced wire on wider storage ("bfloat16", optionally "float8_e4m3fn"
+# where the platform has it) is a LOSSY opt-in: blocks are rounded at the
+# sender and widened back at the receiver, so it never rides the auto
+# path — callers choose it explicitly (and the tuner never enumerates it,
+# keeping its correctness guards exact).
+WIRES = ("native", "bfloat16", "float8_e4m3fn")
+
 # bucketed-capacity fill above which auto transport keeps dense panels:
 # the packed hop ships capacity * (block + 4B index) — once the bucketed
 # capacity approaches the panel's block count the index overhead and the
@@ -84,11 +93,17 @@ class PanelTransport:
     of the compiled-program cache key: a pattern whose bucketed bounds
     change compiles a new program, exactly like the stack-capacity
     buckets of the compacted local backends.
+
+    ``wire`` selects the wire element format (see ``WIRES``): "native"
+    (the default) ships at storage width; a narrower wire casts blocks
+    down before the hop and back up on arrival (lossy on wider storage,
+    a no-op on matching storage).
     """
 
     mode: str = "dense"
     cap_a: int = 0
     cap_b: int = 0
+    wire: str = "native"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -99,15 +114,33 @@ class PanelTransport:
                 "compressed transport needs positive panel capacities "
                 f"(got cap_a={self.cap_a}, cap_b={self.cap_b})"
             )
+        if self.wire not in WIRES:
+            raise ValueError(f"unknown wire format {self.wire!r}; "
+                             f"one of {WIRES}")
 
     @property
     def compressed(self) -> bool:
         return self.mode == "compressed"
 
     @property
+    def wire_dtype(self):
+        """jnp dtype blocks are cast to on the wire; None = storage."""
+        return None if self.wire == "native" else jnp.dtype(self.wire)
+
+    def wire_itemsize(self, storage_itemsize: float) -> float:
+        """Bytes per block element on the wire (what the volume model
+        charges): the storage width under a native wire, the reduced
+        width otherwise."""
+        wd = self.wire_dtype
+        return storage_itemsize if wd is None else float(wd.itemsize)
+
+    @property
     def key(self) -> tuple:
-        """Program-cache key contribution."""
-        return (self.mode, self.cap_a, self.cap_b)
+        """Program-cache key contribution.  The wire element is appended
+        ONLY when non-native, so pre-wire cache keys (and every test /
+        record that pins them) keep their 3-element shape."""
+        base = (self.mode, self.cap_a, self.cap_b)
+        return base if self.wire == "native" else base + (self.wire,)
 
 
 DENSE = PanelTransport()
@@ -187,11 +220,19 @@ def panel_norms(blocks: jax.Array, threshold: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _to_wire(tr: PanelTransport, blocks: jax.Array) -> jax.Array:
+    """Cast blocks to the wire element format (no-op for native)."""
+    wd = tr.wire_dtype
+    return blocks if wd is None or blocks.dtype == wd else blocks.astype(wd)
+
+
 def ingest(tr: PanelTransport, capacity: int, blocks, mask):
-    """Panel state entering an engine body: packed pair or (blocks, mask)."""
+    """Panel state entering an engine body: packed pair or (blocks, mask),
+    blocks cast down to the wire dtype when one is selected."""
     if tr.compressed:
-        return pack_panel(blocks, mask, capacity)
-    return (blocks, mask)
+        packed, idx1 = pack_panel(blocks, mask, capacity)
+        return (_to_wire(tr, packed), idx1)
+    return (_to_wire(tr, blocks), mask)
 
 
 def permute(state, axes, pairs):
@@ -200,11 +241,19 @@ def permute(state, axes, pairs):
     return tuple(lax.ppermute(x, axes, list(pairs)) for x in state)
 
 
-def dense_view(tr: PanelTransport, state, nr: int, nc: int):
-    """(blocks, mask) view of a panel state for the local GEMM."""
+def dense_view(tr: PanelTransport, state, nr: int, nc: int, dtype=None):
+    """(blocks, mask) view of a panel state for the local GEMM.
+
+    ``dtype`` — the compute/storage dtype to widen wire-cast blocks back
+    to (engine bodies pass their operand dtype); None leaves blocks at
+    whatever width they arrived."""
     if tr.compressed:
-        return unpack_panel(state[0], state[1], nr, nc)
-    return state
+        blocks, mask = unpack_panel(state[0], state[1], nr, nc)
+    else:
+        blocks, mask = state
+    if dtype is not None and blocks.dtype != jnp.dtype(dtype):
+        blocks = blocks.astype(dtype)
+    return blocks, mask
 
 
 def all_gather_panels(
@@ -219,12 +268,16 @@ def all_gather_panels(
     row/column panel — still a single fused collective pair, but the
     gathered bytes scale with occupancy.
     """
+    dtype = blocks.dtype  # widen wire-cast blocks back after the gather
     if not tr.compressed:
-        gb = lax.all_gather(blocks, axis_name, axis=axis, tiled=True)
+        gb = lax.all_gather(
+            _to_wire(tr, blocks), axis_name, axis=axis, tiled=True
+        )
         gm = lax.all_gather(mask, axis_name, axis=axis, tiled=True)
-        return gb, gm
+        return gb.astype(dtype), gm
     nr, nc = mask.shape
     packed, idx1 = pack_panel(blocks, mask, capacity)
+    packed = _to_wire(tr, packed)
     ps = lax.all_gather(packed, axis_name, axis=0, tiled=False)
     ix = lax.all_gather(idx1, axis_name, axis=0, tiled=False)
     p = ps.shape[0]
@@ -246,7 +299,8 @@ def all_gather_panels(
         guarded.reshape((-1,) + ps.shape[2:])
     )
     gm = jnp.zeros((out_r * out_c,), bool).at[gf.ravel()].max(valid.ravel())
-    return flatb.reshape((out_r, out_c) + ps.shape[2:]), gm.reshape(out_r, out_c)
+    out = flatb.reshape((out_r, out_c) + ps.shape[2:]).astype(dtype)
+    return out, gm.reshape(out_r, out_c)
 
 
 # ---------------------------------------------------------------------------

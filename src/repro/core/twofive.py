@@ -55,6 +55,7 @@ def pull_body(
     threshold: float = 0.0,
     backend: str = "jnp",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport: T.PanelTransport = T.DENSE,
 ):
@@ -63,7 +64,7 @@ def pull_body(
     shard_map (``core/signiter.py``)."""
     mm_kw = dict(
         threshold=threshold, backend=backend,
-        stack_capacity=stack_capacity, interpret=interpret,
+        stack_capacity=stack_capacity, tile=tile, interpret=interpret,
     )
     topo = plan.topo
     l_r, l_c, depth, s = topo.l_r, topo.l_c, topo.l, topo.side3d
@@ -98,7 +99,7 @@ def pull_body(
                 sl = slice(rd.q * wa, (rd.q + 1) * wa)
                 st = T.ingest(tr, tr.cap_a, ab[:, sl], am[:, sl])
                 rb, rm = T.dense_view(
-                    tr, T.permute(st, axes, rd.pairs), nr, wa
+                    tr, T.permute(st, axes, rd.pairs), nr, wa, dtype=dtype
                 )
                 pb, pm = a_pan[rd.slot]
                 a_pan[rd.slot] = (pb + rb, pm | rm)
@@ -106,7 +107,7 @@ def pull_body(
                 sl = slice(rd.q * wb, (rd.q + 1) * wb)
                 st = T.ingest(tr, tr.cap_b, bb[sl], bm[sl])
                 rb, rm = T.dense_view(
-                    tr, T.permute(st, axes, rd.pairs), wb, nc
+                    tr, T.permute(st, axes, rd.pairs), wb, nc, dtype=dtype
                 )
                 pb, pm = b_pan[rd.slot]
                 b_pan[rd.slot] = (pb + rb, pm | rm)
@@ -189,6 +190,7 @@ def stacked_body(
     backend: str = "jnp",
     c_layout: str = "2d",
     stack_capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport: T.PanelTransport = T.DENSE,
 ):
@@ -204,17 +206,18 @@ def stacked_body(
     def body(ab, am, an, bb, bm, bn):
         del an, bn  # norms never ride the ring (recomputed at compute time)
         sa, sb = am.shape, bm.shape
+        adt, bdt = ab.dtype, bb.dtype  # widen wire-cast panels back
         mm_kw = dict(
             threshold=threshold, backend=backend,
-            stack_capacity=stack_capacity, interpret=interpret,
+            stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         )
         my_groups = jnp.take(
             jnp.asarray(groups, jnp.int32), lax.axis_index("l")
         )
 
         def compute(pa, pb, cb, cm, t):
-            xb, xm = T.dense_view(tr, pa, *sa)
-            yb, ym = T.dense_view(tr, pb, *sb)
+            xb, xm = T.dense_view(tr, pa, *sa, dtype=adt)
+            yb, ym = T.dense_view(tr, pb, *sb, dtype=bdt)
             dcb, dcm = local_filtered_mm(
                 xb, xm, T.panel_norms(xb, threshold),
                 yb, ym, T.panel_norms(yb, threshold), **mm_kw,

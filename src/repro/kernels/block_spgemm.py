@@ -8,15 +8,31 @@ stacks), not the (ni, nj, nk) cube.  The list's int32 index arrays are
 scalar-prefetched (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
 index maps steer each grid step's HBM->VMEM DMA straight to the blocks of
 the n-th surviving product: filtered triples cost neither grid steps nor
-memory traffic.  Products are sorted by output tile with k-runs
-contiguous; an f32 VMEM scratch accumulates each run (``first`` resets it,
-``write`` casts it back to the output tile), and padding entries repeat
-the final triple's coordinates so they re-visit resident blocks and issue
-no MXU work (``valid`` = 0).
+memory traffic.
 
-Atomic blocks may be rectangular (bs_r x bs_k times bs_k x bs_c); on real
-hardware each dimension should be MXU-aligned (multiples of 128 — the
-interpret-mode tests also sweep small sizes).
+**Tile grid.**  Each (bs_r, bs_k, bs_c) block product is decomposed into a
+(tm, tk, tn) tile grid — grid = (bs_r/tm, bs_c/tn, capacity, bs_k/tk) with
+the output-tile coordinates outermost and the contraction tiles innermost,
+so one (tm, tn) f32 VMEM accumulator still fuses a whole k-run: ``first``
+resets it at the run's first product and tk == 0, ``write`` casts it back
+at the run's last product and the final tk.  Pallas double-buffers the
+operand tile DMAs across grid steps (the revision pipeline), so a block
+larger than one VMEM-resident tile streams tile-by-tile instead of
+overflowing VMEM; blocks at or under the tile size keep the one-step-per-
+product shape of the whole-block kernel (the degenerate 1x1x·x1 grid).
+The cost of tiling is operand re-streaming — A tiles are fetched once per
+output column tile and B tiles once per output row tile — which
+``local_mm.local_stage_cost`` prices when the tuner searches tile shapes.
+
+Mixed precision: operand tiles may be stored in bf16 (or f8 where the
+platform supports it); the MXU accumulates in f32 regardless
+(``preferred_element_type``), and the output tile is cast back to the
+storage dtype only at write-back.
+
+Atomic blocks may be rectangular (bs_r x bs_k times bs_k x bs_c).  On real
+hardware every tile must be lane-aligned — ``validate_tile`` raises a
+clear error up front instead of a Mosaic compile failure; interpret mode
+(tests, CPU CI) sweeps small unaligned sizes.
 """
 from __future__ import annotations
 
@@ -32,14 +48,181 @@ from repro.kernels.stacks import (
     resolve_capacity,
 )
 
+LANE = 128  # minor-dim tiling of every TPU vreg / the MXU edge
+# minimum sublane count (second-to-minor dim) per storage itemsize:
+# f32 -> (8, 128), bf16 -> (16, 128), int8/f8 -> (32, 128)
+_SUBLANES = {4: 8, 2: 16, 1: 32}
 
-def _stacks_kernel(
+# Default ceiling on a single tile dimension: keeps the double-buffered
+# working set a small fraction of VMEM (see tile_working_set_bytes) while
+# staying MXU-shaped.  Blocks at or under this stay whole-block.
+MAX_TILE = 256
+
+# Per-core VMEM the operand/accumulator pipeline must fit in (TPU v4/v5
+# class hardware).  Above half of it, Pallas can no longer double-buffer.
+VMEM_BUDGET_BYTES = 16 * 2**20
+
+
+def min_sublane(dtype) -> int:
+    """Minimum sublane multiple of a VMEM tile for this storage dtype."""
+    return _SUBLANES.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def _divisor_tile(n: int, cap: int, align: int) -> int:
+    """Largest divisor of ``n`` that is <= cap, preferring multiples of
+    ``align`` (so the chosen tile wastes no lanes/sublanes)."""
+    if n <= cap:
+        return n
+    best, best_aligned = 1, 0
+    for d in range(1, n + 1):
+        if d > cap:
+            break
+        if n % d:
+            continue
+        best = d
+        if d % align == 0:
+            best_aligned = d
+    return best_aligned or best
+
+
+def default_tile(
+    bs_r: int, bs_k: int, bs_c: int, dtype=jnp.float32
+) -> tuple[int, int, int]:
+    """The shipped tile choice for a block shape: whole-block up to
+    ``MAX_TILE`` per dim, else the largest lane-preferring divisor.  The
+    tuner may override this per (block shape, dtype, platform)."""
+    sl = min_sublane(dtype)
+    return (
+        _divisor_tile(bs_r, MAX_TILE, sl),
+        _divisor_tile(bs_k, MAX_TILE, LANE),
+        _divisor_tile(bs_c, MAX_TILE, LANE),
+    )
+
+
+def validate_tile(
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    tile: tuple[int, int, int],
+    dtype=jnp.float32,
+    *,
+    interpret: bool = False,
+) -> tuple[int, int, int]:
+    """Validate a (tm, tk, tn) tile against a block shape *up front*.
+
+    Raises ``ValueError`` with an actionable message instead of letting an
+    unaligned or non-dividing tile surface as a Mosaic compile failure.
+    Interpret mode only requires divisibility (the interpreter has no lane
+    layout); compiled mode additionally requires lane/sublane alignment:
+    tk and tn are minor (lane) dims of the A/B/C tiles and must be
+    multiples of 128; tm is a sublane dim and must be a multiple of the
+    dtype's minimum sublane count (8 f32 / 16 bf16 / 32 f8).
+    """
+    try:
+        tm, tk, tn = (int(t) for t in tile)
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            f"tile must be a (tm, tk, tn) integer triple, got {tile!r}"
+        ) from e
+    if min(tm, tk, tn) <= 0:
+        raise ValueError(f"tile dims must be positive, got {(tm, tk, tn)}")
+    for name, bs, t in (("bs_r", bs_r, tm), ("bs_k", bs_k, tk),
+                        ("bs_c", bs_c, tn)):
+        if bs % t:
+            raise ValueError(
+                f"tile dim {t} does not divide block dim {name}={bs}: the "
+                f"tile grid must cover the block exactly — pick a divisor "
+                f"of {bs} or pad the atomic block"
+            )
+    if not interpret:
+        sl = min_sublane(dtype)
+        if tk % LANE or tn % LANE:
+            raise ValueError(
+                f"tile (tm={tm}, tk={tk}, tn={tn}) cannot be lane-aligned "
+                f"on this platform: tk and tn are minor (lane) dims and "
+                f"must be multiples of {LANE} for compiled Mosaic — use "
+                f"interpret mode for small blocks, or pad the block"
+            )
+        if tm % sl:
+            raise ValueError(
+                f"tile dim tm={tm} is not sublane-aligned for "
+                f"{jnp.dtype(dtype).name} (requires a multiple of {sl})"
+            )
+    return tm, tk, tn
+
+
+def tile_working_set_bytes(
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    tile: tuple[int, int, int] | None,
+    dtype=jnp.float32,
+) -> float:
+    """VMEM bytes the pipeline holds resident for one grid step: the
+    double-buffered A/B operand tiles and C output tile at storage width,
+    plus the single f32 accumulator."""
+    tm, tk, tn = tile or (bs_r, bs_k, bs_c)
+    itemsize = jnp.dtype(dtype).itemsize
+    db = 2.0  # Pallas revision double-buffering
+    return (
+        db * (tm * tk + tk * tn + tm * tn) * itemsize  # A, B, C tiles
+        + tm * tn * 4.0  # f32 accumulator scratch
+    )
+
+
+def tile_candidates(
+    bs_r: int,
+    bs_k: int,
+    bs_c: int,
+    dtype=jnp.float32,
+    *,
+    interpret: bool = False,
+) -> list[tuple[int, int, int] | None]:
+    """Distinct tile shapes worth measuring for one block shape.
+
+    ``None`` (the default_tile resolution) always leads; explicit
+    candidates cover the whole block, the MXU edge, and the default
+    ceiling — deduplicated and filtered through ``validate_tile``.  In
+    interpret mode half-block tiles join so CPU tests/benchmarks exercise
+    a real tile grid at small sizes.
+    """
+    raw: list[tuple[int, int, int]] = [
+        (bs_r, bs_k, bs_c),
+        default_tile(bs_r, bs_k, bs_c, dtype),
+    ]
+    sl = min_sublane(dtype)
+    for cap in (LANE, MAX_TILE):
+        raw.append((
+            _divisor_tile(bs_r, cap, sl),
+            _divisor_tile(bs_k, cap, LANE),
+            _divisor_tile(bs_c, cap, LANE),
+        ))
+    if interpret:
+        if bs_r % 2 == 0 and bs_k % 2 == 0 and bs_c % 2 == 0:
+            raw.append((bs_r // 2, bs_k // 2, bs_c // 2))
+    out: list[tuple[int, int, int] | None] = [None]
+    seen = {default_tile(bs_r, bs_k, bs_c, dtype)}  # what None resolves to
+    for t in raw:
+        if t in seen:
+            continue
+        try:
+            validate_tile(bs_r, bs_k, bs_c, t, dtype, interpret=interpret)
+        except ValueError:
+            continue
+        seen.add(t)
+        out.append(t)
+    return out
+
+
+def _tiled_kernel(
     ia_ref, ik_ref, ij_ref, tile_ref, first_ref, write_ref, valid_ref,
     a_ref, b_ref, c_ref, acc_ref,
 ):
-    n = pl.program_id(0)
+    n = pl.program_id(2)
+    tk = pl.program_id(3)
+    ntk = pl.num_programs(3)
 
-    @pl.when(first_ref[n] == 1)
+    @pl.when((first_ref[n] == 1) & (tk == 0))
     def _reset():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -51,12 +234,14 @@ def _stacks_kernel(
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(write_ref[n] == 1)
+    @pl.when((write_ref[n] == 1) & (tk == ntk - 1))
     def _write():
         c_ref[0, 0] = acc_ref[...].astype(c_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("ni", "nj", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("ni", "nj", "tile", "interpret")
+)
 def block_spgemm_stacks(
     a_blocks: jax.Array,  # (ni, nk, bs_r, bs_k)
     b_blocks: jax.Array,  # (nk, nj, bs_k, bs_c)
@@ -64,13 +249,15 @@ def block_spgemm_stacks(
     *,
     ni: int,
     nj: int,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C tiles of the compacted product list; one product per grid step.
+    """C tiles of the compacted product list over the (tm, tk, tn) grid.
 
     Only output tiles with at least one surviving product are written —
     callers zero the rest via the tile mask (``jnp.any(pair_ok, axis=1)``),
-    exactly the ``c_mask`` they already compute.
+    exactly the ``c_mask`` they already compute.  ``tile=None`` resolves
+    ``default_tile`` (whole-block for blocks up to ``MAX_TILE`` per dim).
     """
     from jax.experimental.pallas import tpu as pltpu
 
@@ -78,46 +265,63 @@ def block_spgemm_stacks(
     nk, nj2, bs_k2, bs_c = b_blocks.shape
     assert bs_k == bs_k2, (a_blocks.shape, b_blocks.shape)
     assert nj2 == nj, (nj2, nj)
-    out = jax.ShapeDtypeStruct((ni, nj, bs_r, bs_c), a_blocks.dtype)
+    dtype = a_blocks.dtype
+    out = jax.ShapeDtypeStruct((ni, nj, bs_r, bs_c), dtype)
     cap = stacks.capacity
     if cap == 0:
         return jnp.zeros(out.shape, out.dtype)
+    if tile is None:
+        tile = default_tile(bs_r, bs_k, bs_c, dtype)
+    tm, tk, tn = validate_tile(
+        bs_r, bs_k, bs_c, tile, dtype, interpret=interpret
+    )
+    n_tm, n_tk, n_tn = bs_r // tm, bs_k // tk, bs_c // tn
 
-    # index maps receive (grid idx, *scalar prefetch refs)
+    # Output sub-tile coordinates outermost, contraction tiles innermost:
+    # for one (ti, tj) the whole product list streams past the single
+    # (tm, tn) accumulator, so k-run fusion is preserved per sub-tile.
+    # Index maps receive (grid idx..., *scalar prefetch refs).
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
-        grid=(cap,),
+        grid=(n_tm, n_tn, cap, n_tk),
         in_specs=[
             pl.BlockSpec(
-                (1, 1, bs_r, bs_k),
-                lambda n, ia, ik, ij, *_: (ia[n], ik[n], 0, 0),
+                (1, 1, tm, tk),
+                lambda ti, tj, n, tkk, ia, ik, ij, *_: (
+                    ia[n], ik[n], ti, tkk
+                ),
             ),
             pl.BlockSpec(
-                (1, 1, bs_k, bs_c),
-                lambda n, ia, ik, ij, *_: (ik[n], ij[n], 0, 0),
+                (1, 1, tk, tn),
+                lambda ti, tj, n, tkk, ia, ik, ij, *_: (
+                    ik[n], ij[n], tkk, tj
+                ),
             ),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, bs_r, bs_c),
-            lambda n, ia, ik, ij, *_: (ia[n], ij[n], 0, 0),
+            (1, 1, tm, tn),
+            lambda ti, tj, n, tkk, ia, ik, ij, *_: (ia[n], ij[n], ti, tj),
         ),
-        scratch_shapes=[pltpu.VMEM((bs_r, bs_c), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
     )
     return pl.pallas_call(
-        _stacks_kernel,
+        _tiled_kernel,
         grid_spec=grid_spec,
         out_shape=out,
         interpret=interpret,
     )(*stacks, a_blocks, b_blocks)
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "tile", "interpret")
+)
 def block_spgemm(
     a_blocks: jax.Array,  # (ni, nk, bs_r, bs_k)
     b_blocks: jax.Array,  # (nk, nj, bs_k, bs_c)
     pair_ok: jax.Array,  # (ni, nk, nj) bool/int
     *,
     capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """C_ij = sum_k ok[i,k,j] * A_ik @ B_kj via the compacted product list.
@@ -125,7 +329,8 @@ def block_spgemm(
     ``capacity`` bounds the surviving products (static).  None means the
     full cube — always sound, no compaction win; callers with a concrete
     pattern pass the exact bucketed count (``plan.get_product_stacks``) so
-    grid steps and DMA traffic shrink to the survivors.
+    grid steps and DMA traffic shrink to the survivors.  ``tile`` picks
+    the MXU sub-tile shape (None = ``default_tile``).
     """
     ni, nk, bs_r, bs_k = a_blocks.shape
     nk2, nj, bs_k2, bs_c = b_blocks.shape
@@ -134,7 +339,8 @@ def block_spgemm(
     cap = resolve_capacity(capacity, ni * nk * nj)
     stacks = compact_pair_mask(pair_ok, capacity=cap)
     c = block_spgemm_stacks(
-        a_blocks, b_blocks, stacks, ni=ni, nj=nj, interpret=interpret
+        a_blocks, b_blocks, stacks, ni=ni, nj=nj, tile=tile,
+        interpret=interpret,
     )
     # tiles with no surviving product are never visited by the grid
     c_mask = jnp.any(pair_ok.astype(bool), axis=1)

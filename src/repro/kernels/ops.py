@@ -32,17 +32,20 @@ def block_spgemm(
     pair_ok,
     *,
     capacity: int | None = None,
+    tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
 ):
     """Filtered block-sparse matmul (see kernels/block_spgemm.py).
 
     ``capacity`` — static bound on surviving products (None = full cube);
-    the scalar-prefetch grid iterates only that many steps.
+    the scalar-prefetch grid iterates only that many steps.  ``tile`` —
+    the MXU sub-tile shape (None resolves ``default_tile``).
     """
     if interpret is None:
         interpret = _default_interpret()
     return _block_spgemm(
-        a_blocks, b_blocks, pair_ok, capacity=capacity, interpret=interpret
+        a_blocks, b_blocks, pair_ok, capacity=capacity, tile=tile,
+        interpret=interpret,
     )
 
 

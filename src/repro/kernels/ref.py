@@ -6,15 +6,31 @@ import jax.numpy as jnp
 
 
 def block_spgemm_ref(
-    a_blocks: jax.Array,  # (ni, nk, bs, bs)
-    b_blocks: jax.Array,  # (nk, nj, bs, bs)
+    a_blocks: jax.Array,  # (ni, nk, bs_r, bs_k)
+    b_blocks: jax.Array,  # (nk, nj, bs_k, bs_c)
     pair_ok: jax.Array,  # (ni, nk, nj) bool — on-the-fly filter mask
+    *,
+    storage_dtype=None,
+    out_dtype=None,
 ) -> jax.Array:
     """Filtered block-sparse matmul: C_ij = sum_k ok[i,k,j] * A_ik @ B_kj.
 
-    Accumulates in f32 (matching the kernel's MXU accumulator), result cast
-    back to the input dtype.
+    The mixed-precision oracle: operands are (optionally) rounded to the
+    reduced ``storage_dtype`` first — exactly the quantization a bf16/f8
+    block store applies — then every product accumulates in f32 (matching
+    the kernel's MXU accumulator), and the result is cast to ``out_dtype``
+    (default: the storage dtype).  With both dtypes None this is the exact
+    f32 reference the kernels are asserted against; with
+    ``storage_dtype=bfloat16`` it is the tolerance baseline for the
+    reduced-precision pipeline (documented in DESIGN.md §2: bf16 storage
+    stays within ~3e-2 relative of the f32 oracle for unit-scaled blocks,
+    f8 within ~2e-1).
     """
+    if storage_dtype is not None:
+        a_blocks = a_blocks.astype(storage_dtype)
+        b_blocks = b_blocks.astype(storage_dtype)
+    if out_dtype is None:
+        out_dtype = a_blocks.dtype
     okf = pair_ok.astype(jnp.float32)
     c = jnp.einsum(
         "ikj,ikab,kjbc->ijac",
@@ -23,7 +39,7 @@ def block_spgemm_ref(
         b_blocks.astype(jnp.float32),
         precision=jax.lax.Precision.HIGHEST,
     )
-    return c.astype(a_blocks.dtype)
+    return c.astype(out_dtype)
 
 
 def attention_ref(

@@ -71,11 +71,15 @@ class Decision:
     source: str
     measured_s: float | None = None
     transport: str = "dense"  # panel transport mode for this pattern
+    tile: tuple[int, int, int] | None = None  # pallas MXU tile override
 
     @property
     def label(self) -> str:
         tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
         tag = f"{tag}/{self.backend}"
+        if self.tile is not None:
+            tm, tk, tn = self.tile
+            tag = f"{tag}/t{tm}x{tk}x{tn}"
         if self.transport == "compressed":
             tag += "+ct"
         return f"{tag}[{self.source}]"
@@ -163,9 +167,15 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
     ``transport`` is persisted as a *mode* only (records predating it
     read as dense): the sound per-panel capacities are always re-derived
     from the concrete pattern at execution (``plan.get_transport``), so
-    a bucket hit can never smuggle in a stale packing bound."""
+    a bucket hit can never smuggle in a stale packing bound.  ``tile``
+    (records predating it read as None = backend default) is re-validated
+    against this pattern's block shape on the current platform — a tile
+    measured for one arch may not be lane-alignable on another; an
+    invalid tile silently drops to the default instead of missing the
+    whole record (the engine/backend choice is still worth reusing)."""
     cand = Candidate(rec["engine"], rec["l"], rec["backend"],
-                     transport=rec.get("transport", "dense"))
+                     transport=rec.get("transport", "dense"),
+                     tile=_db_tile(rec.get("tile"), feats))
     if cand.transport not in ("dense", "compressed"):
         return None  # schema drift: unknown mode is a miss, not a crash
     try:
@@ -178,7 +188,28 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
     cap = _capacity_for(cand, ok, mesh)
     if not cap:
         return None  # empty pattern: the compacted program has no work
-    return Candidate(cand.engine, cand.l, cand.backend, cap, cand.transport)
+    return Candidate(cand.engine, cand.l, cand.backend, cap, cand.transport,
+                     cand.tile)
+
+
+def _db_tile(raw, feats) -> tuple[int, int, int] | None:
+    """Persisted tile -> a tile valid for this (block shape, dtype,
+    platform), else None (= ``default_tile``; never trust a persisted
+    shape blindly — JSON round-trips tuples as lists, and the record may
+    come from a different arch or block-shape bucket)."""
+    if raw is None:
+        return None
+    from repro.kernels.block_spgemm import validate_tile
+    from repro.kernels.ops import _default_interpret
+
+    try:
+        tile = (int(raw[0]), int(raw[1]), int(raw[2]))
+        return validate_tile(
+            feats.bs_r, feats.bs_k, feats.bs_c, tile,
+            np.dtype(feats.dtype), interpret=_default_interpret(),
+        )
+    except (ValueError, TypeError, IndexError, KeyError):
+        return None
 
 
 def autotune(
@@ -255,7 +286,7 @@ def autotune(
                     engine=cand.engine, l=cand.l, backend=cand.backend,
                     stack_capacity=cand.stack_capacity, source="db",
                     measured_s=rec.get("measured_s"),
-                    transport=cand.transport,
+                    transport=cand.transport, tile=cand.tile,
                 ))
             # invalid here / stale (budget, constraints): fall through
 
@@ -276,7 +307,7 @@ def autotune(
         return finish(Decision(
             engine=best.engine, l=best.l, backend=best.backend,
             stack_capacity=best.stack_capacity, source="analytic",
-            transport=best.transport,
+            transport=best.transport, tile=best.tile,
         ))
 
     plan_mod._stats.tuner_misses += 1
@@ -291,6 +322,7 @@ def autotune(
         tdb.record(db_key, {
             "engine": cand.engine, "l": cand.l, "backend": cand.backend,
             "transport": cand.transport,
+            "tile": list(cand.tile) if cand.tile is not None else None,
             "measured_s": win.seconds,
             "trials": [
                 {"label": t.candidate.label, "seconds": t.seconds,
@@ -301,7 +333,7 @@ def autotune(
     return finish(Decision(
         engine=cand.engine, l=cand.l, backend=cand.backend,
         stack_capacity=cand.stack_capacity, source="measured",
-        measured_s=win.seconds, transport=cand.transport,
+        measured_s=win.seconds, transport=cand.transport, tile=cand.tile,
     ))
 
 
@@ -329,6 +361,8 @@ def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
     kw["l"] = dec.l
     if kw.get("stack_capacity") is None:
         kw["stack_capacity"] = dec.stack_capacity
+    if kw.get("tile") is None:
+        kw["tile"] = dec.tile
     if tr is None or tr == "auto":
         # the tuner's measured mode; capacities are derived from the
         # concrete pattern in plan.resolve_transport

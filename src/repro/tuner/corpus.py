@@ -132,9 +132,18 @@ def _fill(mask: np.ndarray, key, bs: int, *, symmetric: bool):
 
 
 def corpus(*, nb: int = 16, bs: int = 16, smoke: bool = False) -> list[CorpusEntry]:
-    """The standard tuner corpus (``smoke`` shrinks sizes for CI)."""
+    """The standard tuner corpus (``smoke`` shrinks sizes for CI).
+
+    The ``bigblock`` entry carries large atomic blocks (several MXU tiles
+    per block — CP2K's molecular-orbital block sizes, Table 1's upper
+    range) so the tuner's tile-shape axis and the tiled pallas kernel are
+    exercised on a pattern where whole-block VMEM staging stops being an
+    option; ``benchmarks/bench_tuner.py``'s oracle-gap assertion covers
+    it like every other entry.
+    """
     if smoke:
         nb, bs = min(nb, 8), min(bs, 8)
+    big_nb, big_bs = (4, 64) if smoke else (max(nb // 2, 8), 128)
     return [
         CorpusEntry("dft_chain_narrow", "dft_chain", nb, bs,
                     bandwidth=max(1, nb // 8), seed=11),
@@ -146,4 +155,6 @@ def corpus(*, nb: int = 16, bs: int = 16, smoke: bool = False) -> list[CorpusEnt
                     occupancy=0.35, seed=14),
         CorpusEntry("zipf_hub", "zipf", nb, bs,
                     occupancy=0.15, zipf_alpha=1.4, seed=15),
+        CorpusEntry("dft_chain_bigblock", "dft_chain", big_nb, big_bs,
+                    bandwidth=max(1, big_nb // 4), seed=16),
     ]

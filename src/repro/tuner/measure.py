@@ -64,8 +64,8 @@ def measure_candidates(
             return multiply(
                 a, b, None if sharded else mesh,
                 engine=c.engine, threshold=threshold, backend=c.backend,
-                l=c.l, stack_capacity=c.stack_capacity, interpret=interpret,
-                transport=c.transport,
+                l=c.l, stack_capacity=c.stack_capacity, tile=c.tile,
+                interpret=interpret, transport=c.transport,
             )
 
         return run

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import commvolume
 from repro.core import plan as plan_mod
-from repro.core.local_mm import backend_local_cost
+from repro.core.local_mm import backend_local_cost, local_stage_cost
 from repro.core.topology import validate_l
 from repro.roofline import ICI_BW, PEAK_FLOPS
 from repro.tuner.features import PairFeatures
@@ -66,11 +66,15 @@ class Candidate:
     backend: str = "jnp"
     stack_capacity: int | None = None  # compacted backends: device bound
     transport: str = "dense"  # panel transport mode ("dense"|"compressed")
+    tile: tuple[int, int, int] | None = None  # pallas MXU tile (None=default)
 
     @property
     def label(self) -> str:
         tag = self.engine if self.l is None else f"{self.engine}-l{self.l}"
         tag = f"{tag}/{self.backend}"
+        if self.tile is not None:
+            tm, tk, tn = self.tile
+            tag = f"{tag}/t{tm}x{tk}x{tn}"
         return tag + "+ct" if self.transport == "compressed" else tag
 
 
@@ -128,6 +132,13 @@ def enumerate_candidates(
     transport (capacities are derived from the concrete masks at
     execution).  ``engines`` / ``l`` / ``backends`` / ``transports``
     restrict the space (caller-pinned choices).
+
+    The ``pallas`` backend additionally fans out over the MXU tile shapes
+    worth measuring for this block shape and storage dtype
+    (``kernels.block_spgemm.tile_candidates``; ``tile=None`` = the
+    shipped ``default_tile``).  The searched axis is the *tile*; the
+    storage dtype is a feature (part of the DB key), not a choice — the
+    tuner never trades precision for speed on its own.
     """
     axes = tuple(mesh.axis_names)
     if transports is None:
@@ -174,8 +185,27 @@ def enumerate_candidates(
                 elif ok is not None:
                     cap = plan_mod.get_device_capacity(ok, mesh, engine)
                     if cap > 0:
-                        out.append(Candidate(engine, depth, backend, cap, tp))
+                        for tile in _backend_tiles(backend, feats):
+                            out.append(Candidate(
+                                engine, depth, backend, cap, tp, tile
+                            ))
     return out
+
+
+def _backend_tiles(
+    backend: str, feats: PairFeatures
+) -> list[tuple[int, int, int] | None]:
+    """Tile axis of the search space: only the pallas kernel is tiled
+    (``[None]`` — the backend default — for everything else)."""
+    if backend != "pallas":
+        return [None]
+    from repro.kernels.block_spgemm import tile_candidates
+    from repro.kernels.ops import _default_interpret
+
+    return tile_candidates(
+        feats.bs_r, feats.bs_k, feats.bs_c, np.dtype(feats.dtype),
+        interpret=_default_interpret(),
+    )
 
 
 def _n_devices(mesh) -> int:
@@ -211,22 +241,36 @@ def estimate_candidate(
         fill = 1.0  # dense einsum contracts the full cube
     else:
         fill = feats.product_fill
-    local = backend_local_cost(
+    # dtype- and tile-aware local cost: MXU throughput scales with the
+    # storage width and a tile must fit the double-buffered VMEM budget —
+    # a tile that does not is infeasible, same verdict as Eq. (6)
+    lc = local_stage_cost(
         feats.nb_r, feats.nb_k, feats.nb_c,
         feats.bs_r, feats.bs_k, feats.bs_c,
         fill=fill, backend=cand.backend,
+        dtype=feats.dtype, tile=cand.tile,
+        capacity=cand.stack_capacity,
     )
-    compute_s = local / ndev / PEAK_FLOPS
+    compute_s = lc.effective / ndev / PEAK_FLOPS
 
     mem = commvolume.device_memory_bytes(
         plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
         stack_capacity=cand.stack_capacity or 0,
     )
-    feasible = mem <= budget
-    reason = "" if feasible else (
-        f"memory {mem / 1e9:.2f} GB exceeds budget {budget / 1e9:.2f} GB "
-        f"(Eq. 6, L={plan.topo.l})"
-    )
+    feasible = mem <= budget and lc.feasible
+    if feasible:
+        reason = ""
+    elif not lc.feasible:
+        reason = (
+            f"tile {cand.tile or 'default'} working set exceeds the VMEM "
+            f"budget for blocks {feats.bs_r}x{feats.bs_k}x{feats.bs_c} "
+            f"({feats.dtype})"
+        )
+    else:
+        reason = (
+            f"memory {mem / 1e9:.2f} GB exceeds budget {budget / 1e9:.2f} GB "
+            f"(Eq. 6, L={plan.topo.l})"
+        )
     return Estimate(
         candidate=cand, comm_s=comm_s, compute_s=compute_s,
         mem_bytes=mem, feasible=feasible, reason=reason,

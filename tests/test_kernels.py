@@ -161,7 +161,119 @@ def test_block_spgemm_stacks_grid_is_capacity():
                     walk(v.jaxpr)
 
     walk(jpr.jaxpr)
-    assert grids == [(8,)], grids
+    # grid = (n_tm, n_tn, capacity, n_tk): whole-block default tile at
+    # bs=8 puts all the tiling dims at 1 — work still scales with capacity
+    assert grids == [(1, 1, 8, 1)], grids
+
+
+# ---------------------------------------------------------------------------
+# MXU tiling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tile", [(8, 16, 4), (4, 8, 4), (8, 8, 2)])
+def test_block_spgemm_explicit_tile_matches_oracle(tile):
+    """Blocks spanning several tiles (incl. rectangular tiles) accumulate
+    across the k-tile grid dim exactly like the whole-block kernel."""
+    ni, nk, nj, bs_r, bs_k, bs_c = 2, 3, 2, 8, 16, 4
+    a = jax.random.normal(jax.random.key(50), (ni, nk, bs_r, bs_k))
+    b = jax.random.normal(jax.random.key(51), (nk, nj, bs_k, bs_c))
+    ok = jax.random.bernoulli(jax.random.key(52), 0.5, (ni, nk, nj))
+    out = block_spgemm(a, b, ok, tile=tile, interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_block_spgemm_tile_grid_shape():
+    """An explicit sub-block tile multiplies the grid dims accordingly."""
+    from repro.kernels.block_spgemm import block_spgemm_stacks
+    from repro.kernels.stacks import compact_pair_mask
+
+    ni, nk, nj, bs = 2, 2, 2, 16
+    a = jax.random.normal(jax.random.key(60), (ni, nk, bs, bs))
+    b = jax.random.normal(jax.random.key(61), (nk, nj, bs, bs))
+    ok = jnp.ones((ni, nk, nj), bool)
+    stacks = compact_pair_mask(ok, capacity=8)
+    jpr = jax.make_jaxpr(
+        lambda aa, bb, ss: block_spgemm_stacks(
+            aa, bb, ss, ni=ni, nj=nj, tile=(8, 8, 8), interpret=True
+        )
+    )(a, b, stacks)
+    grids = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if "pallas" in str(eqn.primitive):
+                grids.append(eqn.params["grid_mapping"].grid)
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+
+    walk(jpr.jaxpr)
+    assert grids == [(2, 2, 8, 2)], grids
+    # and the tiled program still matches the oracle
+    out = block_spgemm_stacks(a, b, stacks, ni=ni, nj=nj, tile=(8, 8, 8),
+                              interpret=True)
+    want = ref.block_spgemm_ref(a, b, ok)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_tile_validation_up_front():
+    """Satellite: bad tiles fail fast in block_spgemm_stacks with a clear
+    ValueError, not a Mosaic lowering error."""
+    from repro.kernels.block_spgemm import (
+        block_spgemm_stacks,
+        validate_tile,
+    )
+    from repro.kernels.stacks import compact_pair_mask
+
+    ni = nj = 2
+    bs = 16
+    a = jnp.ones((ni, 2, bs, bs))
+    b = jnp.ones((2, nj, bs, bs))
+    stacks = compact_pair_mask(jnp.ones((ni, 2, nj), bool), capacity=8)
+    with pytest.raises(ValueError, match="does not divide block dim"):
+        block_spgemm_stacks(a, b, stacks, ni=ni, nj=nj, tile=(5, 8, 8),
+                            interpret=True)
+    with pytest.raises(ValueError, match="must be positive"):
+        validate_tile(bs, bs, bs, (0, 8, 8), interpret=True)
+    with pytest.raises(ValueError, match="integer triple"):
+        validate_tile(bs, bs, bs, "big", interpret=True)
+    # compiled mode demands lane alignment of the minor dims
+    with pytest.raises(ValueError, match="lane-aligned"):
+        validate_tile(256, 256, 256, (8, 64, 64), interpret=False)
+    # interpret mode only needs divisibility
+    assert validate_tile(16, 16, 16, (8, 8, 8), interpret=True) == (8, 8, 8)
+
+
+def test_default_tile_and_candidates():
+    from repro.kernels.block_spgemm import (
+        MAX_TILE,
+        default_tile,
+        tile_candidates,
+        tile_working_set_bytes,
+        validate_tile,
+    )
+
+    # small blocks stay whole-block
+    assert default_tile(16, 16, 16) == (16, 16, 16)
+    # oversized dims split to the largest aligned divisor <= MAX_TILE
+    dt = default_tile(512, 512, 512)
+    assert all(t <= MAX_TILE and 512 % t == 0 for t in dt)
+    # the candidate list leads with None (= default) and every explicit
+    # entry validates for the shape it was generated for
+    cands = tile_candidates(512, 512, 512)
+    assert cands[0] is None
+    for t in cands[1:]:
+        assert validate_tile(512, 512, 512, t) == t
+    # bf16 working set is half the f32 one at the same tile (+ f32 acc)
+    f32 = tile_working_set_bytes(128, 128, 128, (128, 128, 128), jnp.float32)
+    bf16 = tile_working_set_bytes(128, 128, 128, (128, 128, 128), jnp.bfloat16)
+    assert bf16 < f32
 
 
 # ---------------------------------------------------------------------------

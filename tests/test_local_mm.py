@@ -38,8 +38,12 @@ BACKENDS = ("jnp", "stacks", "pallas")
 
 def _mats(key, ni, nk, nj, bs_r, bs_k, bs_c, occupancy, dtype):
     k1, k2, k3, k4 = jax.random.split(jax.random.key(key), 4)
-    ab = jax.random.normal(k1, (ni, nk, bs_r, bs_k), dtype) / np.sqrt(bs_k)
-    bb = jax.random.normal(k2, (nk, nj, bs_k, bs_c), dtype) / np.sqrt(bs_k)
+    # divide before the cast: a NumPy f64 scalar would silently promote
+    # bf16 operands back to f32 under JAX's promotion rules
+    ab = (jax.random.normal(k1, (ni, nk, bs_r, bs_k))
+          / np.sqrt(bs_k)).astype(dtype)
+    bb = (jax.random.normal(k2, (nk, nj, bs_k, bs_c))
+          / np.sqrt(bs_k)).astype(dtype)
     am = jax.random.bernoulli(k3, occupancy, (ni, nk))
     bm = jax.random.bernoulli(k4, occupancy, (nk, nj))
     ab = ab * am[:, :, None, None].astype(dtype)
@@ -124,6 +128,80 @@ def test_rectangular_atomic_blocks(bs_r, bs_k, bs_c):
             np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
         )
         assert bool(jnp.all(got_m == want_m))
+
+
+# ---------------------------------------------------------------------------
+# mixed precision (satellite: backend x dtype x occupancy x block shape
+# against the kernels.ref mixed-precision oracle)
+# ---------------------------------------------------------------------------
+
+
+from repro.kernels import ref as kref  # noqa: E402
+
+# documented tolerances vs the f32-accumulating oracle (see the
+# ``kernels.ref.block_spgemm_ref`` docstring): all backends accumulate in
+# f32, so the error is operand + output rounding at the storage width
+_DTYPE_TOL = {"float32": 1e-5, "bfloat16": 2e-2}
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    occupancy=st.sampled_from([0.0, 0.2, 0.7]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    shape=st.sampled_from([(8, 8, 8), (4, 16, 8), (8, 16, 4)]),
+    backend=st.sampled_from(["jnp", "stacks", "pallas"]),
+)
+def test_mixed_precision_matches_ref_oracle(occupancy, dtype, shape, backend):
+    """Every backend, at every storage dtype, over rectangular blocks and
+    the occupancy range, lands within the documented tolerance of the
+    mixed-precision oracle (quantized operands, f32 HIGHEST einsum)."""
+    bs_r, bs_k, bs_c = shape
+    args = _mats(17, 3, 4, 3, bs_r, bs_k, bs_c, occupancy, jnp.dtype(dtype))
+    ab, am, an, bb, bm, bn = args
+    got, got_m = local_filtered_mm(*args, backend=backend)
+    assert got.dtype == jnp.dtype(dtype)  # storage dtype round-trips
+    ok = pair_filter(am, an, bm, bn, 0.0)
+    want = kref.block_spgemm_ref(ab, bb, ok)
+    tol = _DTYPE_TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_f32_accumulation_beats_storage_precision():
+    """The reduced-precision path accumulates in f32: a long k-sum of
+    same-sign terms matches the f32 result to input-rounding error, far
+    tighter than bf16 accumulation (which loses ~1 ulp per term) would."""
+    nk, bs = 8, 16
+    ab = jnp.full((1, nk, bs, bs), 1.0 + 1 / 256, jnp.bfloat16)
+    bb = jnp.full((nk, 1, bs, bs), 1.0 - 1 / 256, jnp.bfloat16)
+    m_a = jnp.ones((1, nk), bool)
+    m_b = jnp.ones((nk, 1), bool)
+    n_a = jnp.sqrt(jnp.sum(jnp.square(ab.astype(jnp.float32)), axis=(2, 3)))
+    n_b = jnp.sqrt(jnp.sum(jnp.square(bb.astype(jnp.float32)), axis=(2, 3)))
+    exact = float(nk * bs * (1.0 + 1 / 256) * (1.0 - 1 / 256))
+    for backend in BACKENDS:
+        got, _ = local_filtered_mm(ab, m_a, n_a, bb, m_b, n_b,
+                                   backend=backend)
+        rel = abs(float(jnp.asarray(got, jnp.float32)[0, 0, 0, 0]) - exact)
+        rel /= exact
+        # bf16 has ~3 decimal digits; f32 accumulation keeps the 128-term
+        # sum within one bf16 output rounding (~0.4%), not ~n ulps
+        assert rel < 5e-3, (backend, rel)
+
+
+@settings(max_examples=8, deadline=None)
+@given(tile=st.sampled_from([None, (8, 8, 8), (8, 16, 8), (16, 8, 16)]))
+def test_pallas_tile_param_matches_dense(tile):
+    """The tile override changes scheduling, never numerics."""
+    args = _mats(23, 3, 3, 3, 16, 16, 16, 0.5, jnp.float32)
+    want, want_m = local_filtered_mm(*args, backend="jnp")
+    got, got_m = local_filtered_mm(*args, backend="pallas", tile=tile)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+    assert bool(jnp.all(got_m == want_m))
 
 
 # ---------------------------------------------------------------------------

@@ -238,3 +238,60 @@ def test_spgemm_stacks_flops_match_cost_analysis():
     predicted = spgemm_stacks_flops(stacks.capacity, bs, bs, bs)
     assert measured == pytest.approx(predicted, rel=0.15)
     assert measured < 0.5 * measured_dense
+
+
+def test_local_stage_cost_dtype_and_tile_aware():
+    """Satellite: the dtype/tile-aware local cost model vs cost_analysis.
+
+    ``LocalCost.flops`` is the *logical* MAC count — what XLA's
+    cost_analysis reports regardless of storage dtype (the contraction
+    accumulates in f32 either way) — while ``hbm_bytes`` tracks the
+    storage width and ``effective`` the MXU dtype throughput and tile
+    VMEM pressure."""
+    from repro.core.local_mm import local_filtered_mm, local_stage_cost
+    from repro.kernels.block_spgemm import VMEM_BUDGET_BYTES
+
+    nb, bs = 6, 16
+
+    def mk(dtype):
+        k1, k2 = jax.random.split(jax.random.key(60))
+        ab = jax.random.normal(k1, (nb, nb, bs, bs)).astype(dtype)
+        bb = jax.random.normal(k2, (nb, nb, bs, bs)).astype(dtype)
+        m = jnp.ones((nb, nb), bool)
+        n = jnp.sqrt(jnp.sum(jnp.square(ab.astype(jnp.float32)), (2, 3)))
+        return ab, m, n, bb, m, n
+
+    fn = jax.jit(lambda *xs: local_filtered_mm(*xs, backend="jnp"))
+    measured = {}
+    for dtype in (jnp.float32, jnp.bfloat16):
+        c = fn.lower(*mk(dtype)).compile()
+        measured[dtype] = xla_cost_analysis(c)["flops"]
+    lc32 = local_stage_cost(nb, nb, nb, bs, bs, bs, fill=1.0,
+                            backend="jnp", dtype=jnp.float32)
+    lc16 = local_stage_cost(nb, nb, nb, bs, bs, bs, fill=1.0,
+                            backend="jnp", dtype=jnp.bfloat16)
+    # logical flops: dtype-independent, matches cost_analysis both ways
+    assert lc32.flops == lc16.flops
+    assert measured[jnp.float32] == pytest.approx(lc32.flops, rel=0.25)
+    assert measured[jnp.bfloat16] == pytest.approx(lc16.flops, rel=0.25)
+    # storage traffic halves with the itemsize; effective cost follows the
+    # doubled MXU throughput
+    assert lc16.hbm_bytes == pytest.approx(lc32.hbm_bytes / 2)
+    assert lc16.effective == pytest.approx(lc32.effective / 2)
+
+    # tile awareness (pallas): sub-block tiles re-stream operands
+    # (hbm grows with the tile-grid dims) at identical logical flops
+    whole = local_stage_cost(1, 1, 1, 256, 256, 256, fill=1.0,
+                             backend="pallas", capacity=1)
+    split = local_stage_cost(1, 1, 1, 256, 256, 256, fill=1.0,
+                             backend="pallas", capacity=1,
+                             tile=(128, 128, 128))
+    assert split.flops == whole.flops
+    assert split.hbm_bytes > whole.hbm_bytes
+    # a tile whose working set cannot fit VMEM is infeasible outright
+    big = local_stage_cost(1, 1, 1, 1024, 1024, 1024, fill=1.0,
+                           backend="pallas", capacity=1)
+    assert not big.feasible and big.effective == float("inf")
+    assert (
+        2 * 3 * 1024 * 1024 * 4 + 1024 * 1024 * 4 > VMEM_BUDGET_BYTES
+    )  # the shape above really is over budget, not a model quirk

@@ -160,3 +160,22 @@ def test_fused_rejects_bad_args():
         sign_iteration(m, mode="turbo")
     with pytest.raises(ValueError):
         sign_iteration(m, sync_every=0)
+
+
+def test_sign_iteration_storage_dtype_matrix():
+    """The CI dtype matrix leg (REPRO_STORAGE_DTYPE): purification runs
+    end-to-end at the configured storage dtype and lands within that
+    dtype's documented tolerance of the f32 oracle (DESIGN.md §2 —
+    bf16 blocks, f32 accumulation, norms recalibrated after the cast)."""
+    from repro.config import storage_dtype
+
+    dt = storage_dtype()
+    m = _sym_bsm(jax.random.key(4))
+    s32, _ = sign_iteration(m, max_iter=80, tol=1e-6)
+    tol = {"float32": 1e-6, "bfloat16": 1e-2}[dt]
+    s, st = sign_iteration(m, storage_dtype=dt, max_iter=80, tol=max(tol, 1e-6))
+    assert st.converged, st
+    assert s.blocks.dtype == jnp.dtype(dt)
+    err = np.abs(np.asarray(s.to_dense(), np.float64)
+                 - np.asarray(s32.to_dense(), np.float64)).max()
+    assert err <= {"float32": 1e-5, "bfloat16": 7e-2}[dt], (dt, err)

@@ -275,3 +275,98 @@ def test_forced_compressed_on_traced_operands_raises():
 
     with pytest.raises(ValueError, match="concrete operand patterns"):
         traced(a, a)
+
+
+# ---- reduced-precision wire -------------------------------------------------
+
+
+def test_wire_validation_and_key_back_compat():
+    with pytest.raises(ValueError, match="unknown wire"):
+        T.PanelTransport("dense", wire="float16x")
+    # native wire keeps the historical 3-element key: a program cached
+    # before the wire field must keep hitting
+    assert T.PanelTransport("compressed", 8, 16).key == ("compressed", 8, 16)
+    assert T.DENSE.key == ("dense", 0, 0)
+    tr = T.PanelTransport("dense", wire="bfloat16")
+    assert tr.key == ("dense", 0, 0, "bfloat16")
+    assert tr.wire_itemsize(4.0) == 2.0
+    assert T.DENSE.wire_itemsize(4.0) == 4.0
+    assert T.DENSE.wire_dtype is None
+
+
+def test_wire_cast_dense_roundtrip():
+    """Dense transport at bf16 wire: ingest casts, dense_view widens back
+    to the compute dtype; values land within bf16 rounding."""
+    blocks, mask = _random_panel(5, 3, 4, 0.6)
+    tr = T.PanelTransport("dense", wire="bfloat16")
+    state = T.ingest(tr, tr.cap_a, blocks, mask)
+    wb, _ = state
+    assert wb.dtype == jnp.bfloat16
+    vb, vm = T.dense_view(tr, state, 3, 4, dtype=jnp.float32)
+    assert vb.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(vm), np.asarray(mask))
+    np.testing.assert_allclose(
+        np.asarray(vb), np.asarray(blocks), rtol=1e-2, atol=1e-2
+    )
+
+
+def test_wire_cast_compressed_roundtrip():
+    blocks, mask = _random_panel(6, 4, 4, 0.5)
+    cap = max(int(np.asarray(mask).sum()), 1)
+    tr = T.PanelTransport("compressed", cap, cap, wire="bfloat16")
+    state = T.ingest(tr, cap, blocks, mask)
+    packed, idx1 = state
+    assert packed.dtype == jnp.bfloat16
+    assert idx1.dtype == jnp.int32  # indices never quantize
+    vb, vm = T.dense_view(tr, state, 4, 4, dtype=jnp.float32)
+    assert vb.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(vm), np.asarray(mask))
+    np.testing.assert_allclose(
+        np.asarray(vb), np.asarray(blocks), rtol=1e-2, atol=1e-2
+    )
+
+
+def test_bf16_storage_native_wire_is_lossless():
+    """The headline path: bf16 *storage* rides the native wire with no
+    further cast — bitwise identical blocks, half the f32 bytes."""
+    blocks, mask = _random_panel(7, 3, 3, 0.7)
+    blocks = blocks.astype(jnp.bfloat16)
+    state = T.ingest(T.DENSE, T.DENSE.cap_a, blocks, mask)
+    vb, _ = T.dense_view(T.DENSE, state, 3, 3, dtype=jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(vb, np.float32), np.asarray(blocks, np.float32)
+    )
+
+
+def test_plan_volume_models_wire_width_exactly():
+    """Eq. (7) at wire width: A/B hop bytes scale by wire/storage
+    itemsize; partial-C/psum traffic stays at storage width."""
+    from jax.sharding import AbstractMesh
+
+    from repro.core import commvolume as CV
+
+    mesh = AbstractMesh((("r", 2), ("c", 2)))
+    for engine in ("cannon", "gather", "onesided"):
+        plan = plan_mod.plan_multiply(mesh, engine)
+        v32 = CV.plan_volume(plan, 4, 8, itemsize=4.0)
+        vw = CV.plan_volume(
+            plan, 4, 8, itemsize=4.0,
+            transport=T.PanelTransport("dense", wire="bfloat16"),
+        )
+        assert vw.c_volume == v32.c_volume  # C never rides the wire cast
+        # A/B bytes: blocks halve, the 1-byte mask sidecar does not
+        bs, nb = 8, 4
+        blk32 = 4.0 * bs * bs
+        blk16 = 2.0 * bs * bs
+        n_blocks = v32.ab_volume / (blk32 + 1.0)
+        assert vw.ab_volume == pytest.approx(n_blocks * (blk16 + 1.0))
+    # the stacked twofive plan: same halving on its gather legs
+    mesh3 = AbstractMesh((("l", 2), ("r", 2), ("c", 2)))
+    plan = plan_mod.plan_multiply(mesh3, "twofive")
+    v32 = CV.plan_volume(plan, 4, 8, itemsize=4.0)
+    vw = CV.plan_volume(
+        plan, 4, 8, itemsize=4.0,
+        transport=T.PanelTransport("dense", wire="bfloat16"),
+    )
+    assert vw.ab_volume < v32.ab_volume
+    assert vw.c_volume == v32.c_volume

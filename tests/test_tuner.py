@@ -505,3 +505,106 @@ def test_clear_cache_drops_all_caches(tmp_path):
     multiply(a, b, mesh, engine="auto", threshold=1e-6)
     s = plan_mod.cache_stats()
     assert s["tuner_misses"] == 1 and s["misses"] >= 1
+
+
+# ---- tile-shape search axis (MXU-tiled pallas kernel) ----------------------
+
+
+def test_enumerate_tile_axis_on_pallas():
+    """Large atomic blocks open the tile axis: every pallas candidate is
+    replicated per feasible MXU tile shape (default None first), labels
+    carry the shape, and non-pallas backends never grow the axis."""
+    from repro.kernels.block_spgemm import tile_candidates
+    from repro.kernels.ops import _default_interpret
+
+    a, b = _pair(nb=4, bs=128, occupancy=0.4)
+    f = featurize(a, b, 0.0)
+    cands = enumerate_candidates(FakeMesh(r=2, c=2), f, ok=_ok_cube(a, b),
+                                 engines=("gather",), backends=("pallas",),
+                                 transports=("dense",))
+    tiles = [c.tile for c in cands]
+    expect = tile_candidates(128, 128, 128, np.dtype(f.dtype),
+                             interpret=_default_interpret())
+    assert tiles == expect and tiles[0] is None and len(tiles) > 1
+    labels = {c.label for c in cands}
+    assert "gather/pallas" in labels
+    tm, tk, tn = next(t for t in tiles if t is not None)
+    assert f"gather/pallas/t{tm}x{tk}x{tn}" in labels
+    # jnp never grows a tile axis — tiling is a pallas staging concern
+    jn = enumerate_candidates(FakeMesh(r=2, c=2), f, ok=_ok_cube(a, b),
+                              engines=("gather",), backends=("jnp",),
+                              transports=("dense",))
+    assert all(c.tile is None for c in jn)
+
+
+def test_estimate_tile_vmem_feasibility():
+    """The analytic model folds the kernel's VMEM working set into
+    feasibility: a whole-block candidate at bs=1024 f32 cannot stage and
+    is marked infeasible, while a split tile of the same block is fine."""
+    a, b = _pair(nb=4, bs=8, occupancy=0.4)
+    f = featurize(a, b, 0.0)
+    f = type(f)(**{**f.__dict__, "bs_r": 1024, "bs_k": 1024, "bs_c": 1024})
+    mesh = FakeMesh(r=2, c=2)
+    whole = estimate_candidate(
+        Candidate("gather", backend="pallas", stack_capacity=4), mesh, f)
+    assert not whole.feasible and "VMEM" in whole.reason
+    split = estimate_candidate(
+        Candidate("gather", backend="pallas", stack_capacity=4,
+                  tile=(256, 256, 256)), mesh, f)
+    assert split.feasible
+
+
+def test_db_record_persists_tile(tmp_path):
+    """The winner's tile rides the DB record; pre-tile records read as
+    tile=None; a persisted tile invalid for this pattern's block shape
+    drops to the default WITHOUT missing the whole record."""
+    from repro.tuner import _db_candidate
+
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=4, occupancy=0.4)
+    plan_mod.clear_cache()
+    db = TuningDB(str(tmp_path / "db.json"))
+    dec = autotune(a, b, mesh, db=db, top_k=2)
+    rec = next(iter(db.records.values()))
+    assert "tile" in rec  # schema always writes the field
+    assert (tuple(rec["tile"]) if rec["tile"] is not None else None) == dec.tile
+    f = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    base = {"engine": "gather", "l": None, "backend": "jnp"}
+    # pre-tile record: reads as default staging
+    cand = _db_candidate(base, ok, mesh, f)
+    assert cand is not None and cand.tile is None
+    # valid persisted tile survives rehydration (bs=4: only (4,4,4) or
+    # finer divides; interpret mode relaxes lane alignment on CPU)
+    cand = _db_candidate({**base, "tile": [4, 4, 4]}, ok, mesh, f)
+    assert cand is not None and cand.tile in ((4, 4, 4), None)
+    # a tile that does not divide this pattern's blocks drops to None,
+    # keeping the engine/backend choice alive
+    cand = _db_candidate({**base, "tile": [3, 5, 7]}, ok, mesh, f)
+    assert cand is not None and cand.tile is None
+    # garbage shapes are a default, not a crash
+    cand = _db_candidate({**base, "tile": "64x64"}, ok, mesh, f)
+    assert cand is not None and cand.tile is None
+
+
+def test_pre_tile_db_records_still_warm_hit(tmp_path):
+    """A DB persisted before the tile axis (records without a ``tile``
+    field) still resolves measurement-free."""
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=4, occupancy=0.4)
+    f = featurize(a, b, 0.0)
+    db = TuningDB(str(tmp_path / "db.json"))
+    old_key = make_key(feature_bucket(f),
+                       tuple((n, int(mesh.shape[n])) for n in mesh.axis_names),
+                       ("mult", "*", "*", 0), f.dtype)
+    db.record(old_key, {"engine": "gather", "l": None, "backend": "jnp",
+                        "transport": "dense", "measured_s": 1e-4})
+    plan_mod.clear_cache()
+    dec = autotune(a, b, mesh, db=db)
+    assert dec.source == "db" and dec.engine == "gather"
+    assert dec.tile is None
+    assert plan_mod.cache_stats()["tuner_trials"] == 0
