@@ -217,7 +217,7 @@ def _bsm_shardings(mesh):
     )
 
 
-@pytree_dataclass(meta_fields=("mesh",))
+@pytree_dataclass(meta_fields=("mesh", "assignment"))
 class ShardedBSM:
     """A block-sparse matrix resident on a device mesh for the lifetime of
     an iteration chain.
@@ -230,12 +230,29 @@ class ShardedBSM:
     a purification chain shards its operands once (``shard_bsm``), every
     multiply and every inter-multiply update runs on the shards, and the
     result is gathered once at the chain boundary (``unshard``).
+
+    ``assignment`` records the block→device distribution the triple lives
+    under (``core.distribute.Assignment``, None = identity layout): the
+    shards hold the PERMUTED matrix, ``unshard`` undoes the permutation,
+    and every algebra result inherits the layout.  Mixing layouts in one
+    operation is a hard error — permutations are data placement, and two
+    placements cannot be added blockwise.
     """
 
     blocks: jax.Array  # (nb_r, nb_c, bs_r, bs_c), sharded P(r, c, -, -)
     mask: jax.Array  # (nb_r, nb_c) bool, sharded P(r, c)
     norms: jax.Array  # (nb_r, nb_c) float32, sharded P(r, c)
     mesh: object  # static: the home mesh (pytree meta field)
+    assignment: object = None  # static: distribute.Assignment or None
+
+    def _join_assignment(self, other: "ShardedBSM"):
+        if self.assignment != other.assignment:
+            raise ValueError(
+                "operands live under different block assignments "
+                f"({_assign_name(self.assignment)} vs "
+                f"{_assign_name(other.assignment)}); reshard one of them"
+            )
+        return self.assignment
 
     # ---- shape helpers -------------------------------------------------
     @property
@@ -270,6 +287,7 @@ class ShardedBSM:
             mask=self.mask | other.mask,
             norms=block_norms(blocks),
             mesh=self.mesh,
+            assignment=self._join_assignment(other),
         )
 
     def scale(self, s) -> "ShardedBSM":
@@ -279,6 +297,7 @@ class ShardedBSM:
             mask=self.mask,
             norms=self.norms * jnp.abs(s).astype(jnp.float32),
             mesh=self.mesh,
+            assignment=self.assignment,
         )
 
     def axpy(self, s, y: "ShardedBSM") -> "ShardedBSM":
@@ -289,6 +308,7 @@ class ShardedBSM:
             mask=self.mask | y.mask,
             norms=block_norms(blocks),
             mesh=self.mesh,
+            assignment=self._join_assignment(y),
         )
 
     def filter(self, threshold: float) -> "ShardedBSM":
@@ -300,6 +320,7 @@ class ShardedBSM:
             mask=keep,
             norms=jnp.where(keep, self.norms, 0.0),
             mesh=self.mesh,
+            assignment=self.assignment,
         )
 
     def frobenius_norm(self) -> jax.Array:
@@ -331,33 +352,90 @@ class ShardedBSM:
             mask=self.mask,
             norms=block_norms(blocks),
             mesh=self.mesh,
+            assignment=self.assignment,
         )
 
     # ---- chain-boundary conversions ------------------------------------
     def unshard(self) -> BlockSparseMatrix:
         """Gather the triple to every device — the explicit chain-boundary
-        conversion (the ONLY place a purification chain pays a gather)."""
+        conversion (the ONLY place a purification chain pays a gather).
+        Undoes the block assignment, so callers always get the matrix back
+        in its original (unpermuted) block coordinates."""
         rep = NamedSharding(self.mesh, P())
-        return BlockSparseMatrix(
+        out = BlockSparseMatrix(
             blocks=jax.device_put(self.blocks, rep),
             mask=jax.device_put(self.mask, rep),
             norms=jax.device_put(self.norms, rep),
         )
+        if self.assignment is not None:
+            from repro.core import distribute as D
+
+            out = D.undo_assignment(out, self.assignment)
+        return out
 
     def to_dense(self) -> jax.Array:
         return self.unshard().to_dense()
 
 
-def shard_bsm(m: BlockSparseMatrix | ShardedBSM, mesh) -> ShardedBSM:
+def _assign_name(assignment) -> str:
+    return "identity" if assignment is None else assignment.mode
+
+
+def _resolve_shard_assignment(m: BlockSparseMatrix, mesh, assignment):
+    """Normalize a ``shard_bsm`` assignment spec: None / "identity" stay
+    the identity layout; a mode string derives the deterministic
+    assignment from the matrix's own mask product (``X @ X`` — the
+    purification-chain pattern); a ``distribute.Assignment`` is validated
+    as-is.  Identity assignments collapse to None so cache keys and
+    pytree meta stay exactly as before this layer existed."""
+    if assignment is None:
+        return None
+    from repro.core import distribute as D
+
+    if isinstance(assignment, str):
+        if assignment == "identity":
+            return None
+        assignment = D.compute_assignment(
+            assignment, np.asarray(m.mask), np.asarray(m.mask), mesh
+        )
+    asg = assignment
+    if not isinstance(asg, D.Assignment):
+        raise TypeError(
+            f"assignment must be None, a mode string {D.MODES}, or a "
+            f"distribute.Assignment; got {type(asg).__name__}"
+        )
+    asg.validate(m.nb_r, m.nb_c)
+    return None if asg.is_identity else asg
+
+
+def shard_bsm(
+    m: BlockSparseMatrix | ShardedBSM, mesh, assignment=None
+) -> ShardedBSM:
     """Scatter a BlockSparseMatrix to its 2D home layout on ``mesh``.
 
     The inverse of :meth:`ShardedBSM.unshard`; the two are the explicit
     chain boundaries of DESIGN.md §5.  Idempotent on an already-sharded
     matrix of the same mesh.
+
+    ``assignment`` selects the block→device distribution (DESIGN.md §4's
+    distribution layer): None keeps the identity layout, a mode string
+    ("randomized" / "nnz_greedy") derives the deterministic permutation
+    from the matrix's own mask, and an explicit ``distribute.Assignment``
+    is applied as-is.  The permutation happens HERE, on the replicated
+    matrix, before the scatter — engines and kernels only ever see the
+    permuted home layout.
     """
     if isinstance(m, ShardedBSM):
         if m.mesh is not mesh and m.mesh != mesh:
             raise ValueError("matrix is already sharded on a different mesh")
+        if assignment is not None:
+            want = _resolve_shard_assignment(m, mesh, assignment)
+            if want != m.assignment:
+                raise ValueError(
+                    f"matrix is already sharded under assignment "
+                    f"{_assign_name(m.assignment)}; unshard before "
+                    f"redistributing to {_assign_name(want)}"
+                )
         return m
     if "r" not in mesh.axis_names or "c" not in mesh.axis_names:
         raise ValueError(
@@ -369,12 +447,18 @@ def shard_bsm(m: BlockSparseMatrix | ShardedBSM, mesh) -> ShardedBSM:
             f"block grid {m.nb_r}x{m.nb_c} does not divide the "
             f"{p_r}x{p_c} process grid"
         )
+    asg = _resolve_shard_assignment(m, mesh, assignment)
+    if asg is not None:
+        from repro.core import distribute as D
+
+        m = D.apply_assignment(m, asg)
     blk, m2 = _bsm_shardings(mesh)
     return ShardedBSM(
         blocks=jax.device_put(m.blocks, blk),
         mask=jax.device_put(m.mask, m2),
         norms=jax.device_put(m.norms, m2),
         mesh=mesh,
+        assignment=asg,
     )
 
 
@@ -391,9 +475,14 @@ def cast_bsm(m, dtype):
     return m.astype(dtype)
 
 
-def sharded_identity(nb: int, bs, mesh, dtype=jnp.float32) -> ShardedBSM:
-    """Blocked identity born sharded (no replicated intermediate kept)."""
-    return shard_bsm(identity(nb, bs, dtype), mesh)
+def sharded_identity(
+    nb: int, bs, mesh, dtype=jnp.float32, assignment=None
+) -> ShardedBSM:
+    """Blocked identity born sharded (no replicated intermediate kept).
+    Symmetric assignments fix the identity pattern (P I Pᵀ = I), so any
+    ``assignment`` yields the same data — it is carried so the result can
+    join algebra with operands living in that layout."""
+    return shard_bsm(identity(nb, bs, dtype), mesh, assignment=assignment)
 
 
 # ---------------------------------------------------------------------------

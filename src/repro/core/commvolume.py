@@ -285,6 +285,45 @@ def device_memory_bytes(
     return total
 
 
+def device_product_loads(
+    counts: np.ndarray, p_r: int, p_c: int, perm=None
+) -> np.ndarray:
+    """Per-device product load over a (p_r, p_c) grid: the mask-product
+    ``counts`` (A_mask @ B_mask as integers — surviving block products per
+    C block) summed over each device's (row panel, col panel).  ``perm``
+    optionally views the grid under a symmetric block assignment
+    (``core.distribute``) without materializing the permuted matrices.
+    """
+    counts = np.asarray(counts, np.int64)
+    if perm is not None:
+        p = np.asarray(perm)
+        counts = counts[p][:, p]
+    nb_r, nb_c = counts.shape
+    if nb_r % p_r or nb_c % p_c:
+        raise ValueError(
+            f"block grid {nb_r}x{nb_c} does not divide mesh {p_r}x{p_c}"
+        )
+    return counts.reshape(
+        p_r, nb_r // p_r, p_c, nb_c // p_c
+    ).sum(axis=(1, 3))
+
+
+def load_imbalance(
+    counts: np.ndarray, p_r: int, p_c: int, perm=None
+) -> float:
+    """Max/mean per-device product load (1.0 = perfectly balanced).  The
+    slowest device gates every tick barrier, so compacted local compute —
+    priced at mean load by ``local_mm.local_stage_cost`` — stretches by
+    exactly this factor; the tuner's model multiplies it in
+    (``tuner/model.py``) and the scheduler's job is to drive it back
+    toward 1 by choosing an assignment."""
+    loads = device_product_loads(counts, p_r, p_c, perm=perm)
+    mean = float(loads.mean())
+    if mean <= 0.0:
+        return 1.0
+    return float(loads.max()) / mean
+
+
 def mesh25d_volume(
     s: int, l: int, s_a: float, s_b: float, s_c: float
 ) -> VolumeReport:

@@ -222,6 +222,7 @@ def multiply(
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
+    assignment=None,
 ) -> BlockSparseMatrix | ShardedBSM:
     """Distributed filtered C = A . B.
 
@@ -256,6 +257,16 @@ def multiply(
                  §3) and keeps the bit-exact dense panels otherwise; the
                  plan layer derives sound per-panel capacities from the
                  concrete masks (``plan.get_transport``).
+    assignment — block→device distribution: None (identity, or under
+                 ``engine="auto"`` the tuner's choice), a mode string
+                 ("identity" | "randomized" | "nnz_greedy" — derived
+                 deterministically from the concrete masks), or a ready
+                 ``distribute.Assignment``.  Replicated operands are
+                 permuted inside the compiled program (results come back
+                 in original block coordinates); sharded operands already
+                 carry their layout from ``shard_bsm`` and an explicit
+                 value here can only confirm it.  Requires a mesh —
+                 single-device multiplies have no devices to balance.
 
     ShardedBSM operands take the device-resident path: the multiply runs
     on the shards (``plan.execute_sharded``) and returns a ShardedBSM —
@@ -285,13 +296,16 @@ def multiply(
             raise ValueError("sharded chains require c_layout='2d'")
         if engine == "auto":
             # full tuner resolution: one host walk of the device-resident
-            # pattern, amortized by the decision cache across repeats
+            # pattern, amortized by the decision cache across repeats.
+            # assign is pinned to identity — the layout decision was made
+            # at shard_bsm time and the tuner sees the permuted pattern.
             from repro import tuner
 
             dec = tuner.autotune(
                 a, b, a.mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
                 transport=_transport_pin(transport),
+                assign="identity",
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
@@ -307,26 +321,46 @@ def multiply(
             # the auto heuristic walks the concrete pattern on the host —
             # a round-trip the device-resident path exists to avoid
             backend = "jnp"
+        if (
+            backend in ("stacks", "pallas")
+            and stack_capacity is None
+            and _is_concrete(a.mask, a.norms, b.mask, b.norms)
+        ):
+            # sound per-device bound from the concrete (and, under a
+            # non-identity assignment, already-permuted) shard masks —
+            # without it the compacted program pads every device to the
+            # full cube and the balanced layout's smaller hot device
+            # buys nothing.  Costs the same per-call host mask sync the
+            # auto transport resolution below already pays; pass an
+            # explicit stack_capacity to skip it.
+            stack_capacity = plan_mod.get_device_capacity(
+                _host_pair_filter(a, b, threshold), a.mesh, engine)
         c = plan_mod.execute_sharded(
             a, b, engine,
             threshold=threshold, backend=backend, l=l,
             stack_capacity=stack_capacity, tile=tile, interpret=interpret,
-            transport=transport,
+            transport=transport, assignment=assignment,
         )
         eps = threshold if filter_eps is None else filter_eps
         return c.filter(eps) if eps > 0.0 else c
+    if mesh is None and assignment not in (None, "identity"):
+        raise ValueError(
+            "assignment needs a mesh: a block→device distribution has no "
+            "meaning on a single device"
+        )
     if engine == "auto":
         if mesh is None:
             engine = "twofive"  # single-device: the engine is vestigial
         else:
-            # delegate the whole (engine, L, backend, capacity, transport)
-            # decision to the tuner (repro.tuner, DESIGN.md §6)
+            # delegate the whole (engine, L, backend, capacity, transport,
+            # assignment) decision to the tuner (repro.tuner, DESIGN.md §6)
             from repro import tuner
 
             dec = tuner.autotune(
                 a, b, mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
                 transport=_transport_pin(transport),
+                assign=_assign_pin(assignment),
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
@@ -336,6 +370,14 @@ def multiply(
             if transport is None or transport == "auto":
                 # adopt the tuner's measured mode (see the sharded path)
                 transport = dec.transport
+            if assignment is None:
+                # adopt the tuner's winning layout (identity when the
+                # pattern is already balanced)
+                assignment = dec.assign
+    # the layout every capacity bound below must be derived from
+    asg = None
+    if mesh is not None:
+        asg = plan_mod.resolve_assignment(assignment, a, b, mesh)
     # one host walk of the concrete filter cube serves both the auto
     # heuristic and the distributed capacity bound
     ok_np = None
@@ -360,12 +402,20 @@ def multiply(
             and stack_capacity is None
             and ok_np is not None
         ):
-            stack_capacity = plan_mod.get_device_capacity(ok_np, mesh, engine)
+            # capacity must cover the PERMUTED pattern's hottest device —
+            # the layout the engine actually partitions
+            ok_cap = ok_np
+            if asg is not None:
+                from repro.core.distribute import permute_cube
+
+                ok_cap = permute_cube(ok_np, asg.perm)
+            stack_capacity = plan_mod.get_device_capacity(ok_cap, mesh,
+                                                          engine)
         c = plan_mod.execute(
             a, b, mesh, engine,
             threshold=threshold, backend=backend, c_layout=c_layout, l=l,
             stack_capacity=stack_capacity, tile=tile, interpret=interpret,
-            transport=transport,
+            transport=transport, assignment=asg,
         )
     eps = threshold if filter_eps is None else filter_eps
     if eps > 0.0:
@@ -383,6 +433,15 @@ def _transport_pin(transport) -> str | None:
     if transport in ("dense", "compressed"):
         return transport
     return None
+
+
+def _assign_pin(assignment) -> str | None:
+    """The tuner constraint a caller-supplied assignment implies: an
+    explicit mode (or a ready ``Assignment``) pins the decision, ``None``
+    leaves the layout to the tuner."""
+    if assignment is None:
+        return None
+    return getattr(assignment, "mode", assignment)
 
 
 def lower_multiply(

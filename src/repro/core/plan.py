@@ -32,9 +32,21 @@ Compiled-program cache
 
 ``get_compiled`` returns a jitted shard_map program, LRU-cached on
 ``(mesh, engine, nb, bs, dtype, threshold, backend, c_layout, l,
-stack_capacity, interpret, transport)`` so the hot paths (sign
-iteration, serving, benchmark loops) never retrace or re-lower after the
-first call.
+stack_capacity, interpret, transport, assignment)`` so the hot paths
+(sign iteration, serving, benchmark loops) never retrace or re-lower
+after the first call.
+
+Distribution layer
+------------------
+
+``resolve_assignment`` / ``get_assignment`` resolve the block→device
+assignment (``core.distribute``, DESIGN.md): a symmetric row+column
+permutation that rebalances per-device product load before the engines
+partition the grid.  Replicated execution applies it inside the
+compiled program (permute-in / unpermute-out around the engine body);
+sharded execution relies on ``shard_bsm`` having applied it at the
+chain boundary.  Every capacity bound (stacks, transport) is derived
+from the PERMUTED pattern.
 
 Panel transport
 ---------------
@@ -399,6 +411,8 @@ class CacheStats:
     transport_misses: int = 0  # resolutions that walked the masks
     transport_dense: int = 0  # fresh resolutions that chose dense panels
     transport_compressed: int = 0  # ... that chose compressed panels
+    assign_hits: int = 0  # block-assignment resolutions served from cache
+    assign_misses: int = 0  # resolutions that derived a permutation
 
     def as_dict(self) -> dict:
         return {
@@ -417,6 +431,8 @@ class CacheStats:
             "transport_misses": self.transport_misses,
             "transport_dense": self.transport_dense,
             "transport_compressed": self.transport_compressed,
+            "assign_hits": self.assign_hits,
+            "assign_misses": self.assign_misses,
         }
 
 
@@ -425,6 +441,7 @@ _program_cache: OrderedDict[tuple, object] = OrderedDict()
 _pattern_cache: OrderedDict[bytes, tuple] = OrderedDict()
 _bound_cache: OrderedDict[tuple, int] = OrderedDict()
 _transport_cache: OrderedDict[tuple, object] = OrderedDict()
+_assign_cache: OrderedDict[tuple, object] = OrderedDict()
 _stats = CacheStats()
 
 
@@ -454,6 +471,7 @@ def clear_cache() -> None:
     _pattern_cache.clear()
     _bound_cache.clear()
     _transport_cache.clear()
+    _assign_cache.clear()
     plan_multiply.cache_clear()
     for fn in _extra_caches:
         fn()
@@ -463,6 +481,7 @@ def clear_cache() -> None:
     _stats.tuner_hits = _stats.tuner_misses = _stats.tuner_trials = 0
     _stats.transport_hits = _stats.transport_misses = 0
     _stats.transport_dense = _stats.transport_compressed = 0
+    _stats.assign_hits = _stats.assign_misses = 0
 
 
 # ---------------------------------------------------------------------------
@@ -680,6 +699,88 @@ def resolve_transport(spec, a, b, mesh, engine: str, l: int | None = None):
     return get_transport(a.mask, b.mask, mesh, engine, l, mode)
 
 
+def get_assignment(mask_a, mask_b, mesh, mode: str):
+    """Resolve the block→device assignment of one (pattern pair, mesh,
+    mode) — the distribution layer's analogue of :func:`get_transport`.
+
+    Derives the deterministic permutation of ``core.distribute`` from the
+    concrete operand masks (``assignment_for`` on the integer mask
+    product), LRU-cached on the pattern signatures so a repeated pattern
+    re-walks nothing; counted by the ``assign_*`` fields of
+    ``cache_stats()``.
+    """
+    import numpy as np
+
+    from repro.core import distribute as D
+    from repro.kernels.stacks import pattern_signature
+
+    am = np.asarray(mask_a, bool)
+    bm = np.asarray(mask_b, bool)
+    p_r, p_c = mesh.shape["r"], mesh.shape["c"]
+    key = (
+        "assign", pattern_signature(am), pattern_signature(bm),
+        p_r, p_c, mode,
+    )
+    hit = _assign_cache.get(key)
+    if hit is not None:
+        _stats.assign_hits += 1
+        _assign_cache.move_to_end(key)
+        return hit
+    _stats.assign_misses += 1
+    asg = D.assignment_for(mode, D.product_counts(am, bm), (p_r, p_c))
+    _assign_cache[key] = asg
+    if len(_assign_cache) > _CACHE_MAXSIZE:
+        _assign_cache.popitem(last=False)
+        _stats.evictions += 1
+    return asg
+
+
+def resolve_assignment(spec, a, b, mesh):
+    """Normalize an assignment spec to a ``distribute.Assignment`` or None
+    (= identity layout).
+
+    ``spec`` may be None / ``"identity"`` (no permutation), a mode string
+    (``"randomized"`` / ``"nnz_greedy"`` — derived from the concrete
+    operand masks via :func:`get_assignment`; traced operands are an
+    error, exactly like a forced compressed transport), or a ready
+    ``Assignment`` (validated against the operands' block grid; an
+    explicitly-identity permutation collapses to None so cache keys stay
+    in their pre-assignment shape).
+    """
+    if spec is None:
+        return None
+    from repro.core import distribute as D
+
+    if isinstance(spec, str):
+        if spec == "identity":
+            return None
+        if spec not in D.MODES:
+            raise ValueError(
+                f"unknown assignment {spec!r}; an Assignment or one of "
+                f"{D.MODES}"
+            )
+        import jax
+
+        if (isinstance(a.mask, jax.core.Tracer)
+                or isinstance(b.mask, jax.core.Tracer)):
+            raise ValueError(
+                f"assignment={spec!r} needs concrete operand patterns to "
+                "derive the permutation from (operands are traced); "
+                "resolve the Assignment outside the trace"
+            )
+        asg = get_assignment(a.mask, b.mask, mesh, spec)
+    elif isinstance(spec, D.Assignment):
+        asg = spec
+    else:
+        raise TypeError(
+            f"assignment must be None, a mode string {D.MODES}, or a "
+            f"distribute.Assignment; got {type(spec).__name__}"
+        )
+    asg.validate(a.nb_r, a.nb_c)
+    asg.validate(b.nb_r, b.nb_c)
+    return None if asg.is_identity else asg
+
+
 def get_local_compiled(
     ni: int,
     nk: int,
@@ -848,6 +949,7 @@ def get_compiled(
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
+    assignment=None,
 ):
     """Jitted multiply program for the key, LRU-cached.
 
@@ -860,6 +962,19 @@ def get_compiled(
     resolve patterns *before* keying (``execute`` / ``execute_sharded``
     via :func:`resolve_transport`) — an auto decision must never get
     baked into a None-keyed entry.
+
+    ``assignment`` likewise must be concrete (a ``distribute.Assignment``
+    or None = identity; :func:`resolve_assignment` normalizes specs).
+    Non-identity assignments wrap the program with the symmetric
+    permute-in / unpermute-out reindex — callers hand UNPERMUTED triples
+    and get the result back in original block coordinates; the engine
+    body in between only ever sees the permuted layout.  The assignment
+    signature joins the key only when non-identity, so pre-assignment
+    keys (and any state keyed on them) are unchanged.  Capacities in the
+    key (``stack_capacity``, ``transport``) must have been derived from
+    the PERMUTED pattern — a permutation changes which products land on
+    which device, and an identity-layout bound can under-cover a hot
+    permuted panel.
     """
     import jax
 
@@ -879,11 +994,15 @@ def get_compiled(
             f"dense), got {transport!r}; resolve mode strings with "
             "plan.resolve_transport first"
         )
+    if assignment is not None and assignment.is_identity:
+        assignment = None
     key = (
         mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
         float(threshold), backend, c_layout, l, stack_capacity, tile,
         interpret, transport.key,
     )
+    if assignment is not None:
+        key = key + (("assign",) + assignment.key,)
     prog = _program_cache.get(key)
     if prog is not None:
         _stats.hits += 1
@@ -897,6 +1016,33 @@ def get_compiled(
         stack_capacity=stack_capacity, tile=tile, interpret=interpret,
         transport=transport,
     )
+    if assignment is not None:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        inner = fn
+        perm = jnp.asarray(assignment.perm)
+        inv = jnp.asarray(assignment.inv)
+        # The reindex gathers live OUTSIDE the engine's shard_map; pin
+        # them replicated so the SPMD partitioner never tries to push the
+        # engine's (r, c) home-layout shardings backwards through a
+        # cross-shard gather (it cannot, and fails at HLO verification).
+        # The replicated path hands replicated triples in anyway, and its
+        # result is consumed replicated — the constraints cost nothing
+        # beyond what the layout-oblivious caller already pays.
+        rep = None if mesh is None else NamedSharding(mesh, P())
+
+        def fn(ab, am, an, bb, bm, bn):
+            def to(x):
+                y = x[perm][:, perm]
+                return y if rep is None else jax.lax.with_sharding_constraint(y, rep)
+
+            cb, cm = inner(to(ab), to(am), to(an), to(bb), to(bm), to(bn))
+            if rep is not None:
+                cb = jax.lax.with_sharding_constraint(cb, rep)
+                cm = jax.lax.with_sharding_constraint(cm, rep)
+            return cb[inv][:, inv], cm[inv][:, inv]
+
     prog = jax.jit(fn)
     _program_cache[key] = prog
     if len(_program_cache) > _CACHE_MAXSIZE:
@@ -905,12 +1051,39 @@ def get_compiled(
     return prog
 
 
+def _permuted_mask_views(a, b, asg):
+    """Lightweight stand-ins carrying the PERMUTED operand masks, for
+    deriving transport capacities in the layout the engine will run in.
+    Traced masks pass through unpermuted — every consumer falls back to
+    pattern-free behavior on tracers anyway."""
+    import types
+
+    import jax
+    import numpy as np
+
+    if (isinstance(a.mask, jax.core.Tracer)
+            or isinstance(b.mask, jax.core.Tracer)):
+        return a, b
+    p = np.asarray(asg.perm)
+    return (
+        types.SimpleNamespace(mask=np.asarray(a.mask, bool)[p][:, p]),
+        types.SimpleNamespace(mask=np.asarray(b.mask, bool)[p][:, p]),
+    )
+
+
 def execute(a, b, mesh, engine: str, **kw):
     """Run one cached multiply and rebuild the BlockSparseMatrix result.
 
     The shared execution path behind ``engine.multiply`` and the per-engine
     back-compat wrappers (``multiply_2d``/``multiply_gather``/
     ``multiply_25d``); keyword args are those of :func:`get_compiled`.
+
+    ``assignment`` (None / mode string / ``distribute.Assignment``)
+    selects the block→device distribution the multiply runs under; the
+    permute/unpermute pair lives inside the compiled program, so the
+    caller's matrices stay in original block coordinates throughout.
+    Transport capacities are derived from the permuted masks — the
+    pattern the engine actually ships.
     """
     from repro.core.bsm import BlockSparseMatrix, block_norms
 
@@ -918,10 +1091,13 @@ def execute(a, b, mesh, engine: str, **kw):
         from repro.tuner import resolve_multiply
 
         engine, kw = resolve_multiply(a, b, mesh, kw)
+    asg = resolve_assignment(kw.pop("assignment", None), a, b, mesh)
+    ta, tb = (a, b) if asg is None else _permuted_mask_views(a, b, asg)
     kw["transport"] = resolve_transport(
-        kw.get("transport"), a, b, mesh, engine, kw.get("l")
+        kw.get("transport"), ta, tb, mesh, engine, kw.get("l")
     )
-    fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype, **kw)
+    fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
+                      assignment=asg, **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
     return BlockSparseMatrix(blocks=cb, mask=cm, norms=block_norms(cb))
 
@@ -935,18 +1111,40 @@ def execute_sharded(a, b, engine: str, **kw):
     Keyword args are those of :func:`get_compiled` (``c_layout`` is pinned
     to ``"2d"`` — a chain's C must come home to the same layout its next
     multiply consumes).
+
+    Sharded operands already LIVE in their assignment's permuted home
+    layout (``shard_bsm`` applied it before the scatter), so the engine
+    runs as-is — their permuted masks are the pattern every capacity is
+    derived from, and the result inherits the layout.  An ``assignment``
+    kwarg here can only confirm the carried layout; redistributing a
+    sharded matrix means unsharding first.
     """
-    from repro.core.bsm import ShardedBSM, block_norms
+    from repro.core.bsm import ShardedBSM, _assign_name, block_norms
 
     mesh = a.mesh
     if kw.pop("c_layout", "2d") != "2d":
         raise ValueError("sharded chains require c_layout='2d'")
+    asg = a._join_assignment(b)
+    spec = kw.pop("assignment", None)
+    if spec is not None:
+        want = getattr(spec, "mode", spec)
+        if want != _assign_name(asg):
+            raise ValueError(
+                f"operands are sharded under assignment "
+                f"{_assign_name(asg)}; cannot execute under {want!r} — "
+                "unshard and redistribute instead"
+            )
     if engine == "auto":
         # one host walk of the (concrete, device-resident) pattern; the
-        # tuner's decision cache makes repeats free for a stable pattern
+        # tuner's decision cache makes repeats free for a stable pattern.
+        # The assignment is pinned to identity: the layout decision was
+        # made at shard_bsm time and the pattern the tuner sees is
+        # already the permuted one.
         from repro.tuner import resolve_multiply
 
+        kw["assignment"] = "identity"
         engine, kw = resolve_multiply(a, b, mesh, kw)
+        kw.pop("assignment", None)
     # transport resolution under the default "auto" costs one host pull
     # + digest of the 2D masks PER CALL (the signature hash, not the
     # cache lookup, is the cost — it must sync the device-resident
@@ -959,7 +1157,8 @@ def execute_sharded(a, b, engine: str, **kw):
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
                       c_layout="2d", **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
-    return ShardedBSM(blocks=cb, mask=cm, norms=block_norms(cb), mesh=mesh)
+    return ShardedBSM(blocks=cb, mask=cm, norms=block_norms(cb), mesh=mesh,
+                      assignment=asg)
 
 
 def get_chain_compiled(key: tuple, builder):

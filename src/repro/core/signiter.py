@@ -318,6 +318,7 @@ def sign_iteration_legacy(
     l: int | None = None,
     storage_dtype=None,
     tile: tuple[int, int, int] | None = None,
+    assignment=None,
 ) -> tuple[B.BlockSparseMatrix, SignIterStats]:
     """The host-driven per-op loop (parity oracle / benchmark baseline):
     two ``multiply()`` re-entries per sweep from replicated arrays, eager
@@ -326,7 +327,9 @@ def sign_iteration_legacy(
     pattern cache (``plan.cache_stats()['pattern_hits']``) re-hits as the
     iteration's sparsity structure stabilizes.  ``engine="auto"`` is
     resolved ONCE on the initial pattern (not per multiply): the tuner
-    decision holds for the whole iteration."""
+    decision holds for the whole iteration.  ``assignment`` is threaded to
+    every multiply (results come back in original block coordinates, so
+    the inter-multiply algebra is layout-oblivious)."""
     engine, l = _resolve_engine(x0, mesh, engine, threshold, l)
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
@@ -347,6 +350,7 @@ def sign_iteration_legacy(
         x2 = multiply(
             x, x, mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, backend=backend, l=l, tile=tile,
+            assignment=assignment,
         )
         n_mults += 1
         # 3I - X^2
@@ -354,6 +358,7 @@ def sign_iteration_legacy(
         xn = multiply(
             x, y, mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, backend=backend, l=l, tile=tile,
+            assignment=assignment,
         )
         xn = B.scale(xn, 0.5)
         n_mults += 1
@@ -398,6 +403,7 @@ def sign_iteration(
     storage_dtype=None,
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
+    assignment=None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0).
 
@@ -423,10 +429,21 @@ def sign_iteration(
                  (``kernels.ref`` documents the tolerance model).
     tile       — MXU tile override (tm, tk, tn) for the pallas backend
                  (None = ``kernels.block_spgemm.default_tile``).
+    assignment — block→device distribution for the WHOLE chain: resolved
+                 ONCE at the shard boundary (None / a mode string / a
+                 ``distribute.Assignment`` — see ``bsm.shard_bsm``).  The
+                 Newton-Schulz fixed point is layout-equivariant
+                 (sign(P X Pᵀ) = P sign(X) Pᵀ and P I Pᵀ = I), so every
+                 sweep runs in the one permuted home layout with no
+                 re-distribution; ``unshard`` at the exit boundary (or the
+                 carried ``ShardedBSM.assignment``) restores original
+                 block coordinates.
 
-    A ShardedBSM ``x0`` stays sharded end-to-end and the result is a
-    ShardedBSM; a BlockSparseMatrix with ``mesh`` given is sharded once at
-    entry and gathered once at exit (the chain boundaries).
+    A ShardedBSM ``x0`` stays sharded end-to-end (under its own carried
+    assignment — passing a conflicting ``assignment`` raises) and the
+    result is a ShardedBSM; a BlockSparseMatrix with ``mesh`` given is
+    sharded once at entry and gathered once at exit (the chain
+    boundaries).
     """
     if mode == "legacy":
         if isinstance(x0, B.ShardedBSM):
@@ -436,7 +453,7 @@ def sign_iteration(
             x0, mesh=mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, max_iter=max_iter, tol=tol,
             scale_input=scale_input, backend=backend, l=l,
-            storage_dtype=storage_dtype, tile=tile,
+            storage_dtype=storage_dtype, tile=tile, assignment=assignment,
         )
     if mode != "fused":
         raise ValueError(f"unknown mode {mode!r}; 'fused' or 'legacy'")
@@ -448,13 +465,28 @@ def sign_iteration(
         if mesh is not None and mesh is not x0.mesh and mesh != x0.mesh:
             raise ValueError("mesh argument conflicts with operand mesh")
         mesh = x0.mesh
+        if assignment is not None and (
+            getattr(assignment, "mode", assignment)
+            != B._assign_name(x0.assignment)
+        ):
+            raise ValueError(
+                f"operand is sharded under assignment "
+                f"{B._assign_name(x0.assignment)}; unshard before "
+                f"iterating under a different layout"
+            )
     engine, l = _resolve_engine(x0, mesh, engine, threshold, l)
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     if mesh is not None:
-        ident = B.shard_bsm(ident, mesh)
-        x = x0 if sharded_in else B.shard_bsm(x0, mesh)
+        # one layout decision for the whole chain, made HERE at the shard
+        # boundary; the identity inherits it (P I Pᵀ = I, data unchanged)
+        x = x0 if sharded_in else B.shard_bsm(x0, mesh,
+                                              assignment=assignment)
+        ident = B.shard_bsm(ident, mesh, assignment=x.assignment)
     else:
+        if assignment not in (None, "identity"):
+            raise ValueError("assignment needs a mesh: a block→device "
+                             "distribution has no meaning on one device")
         x = x0
     x = _scale_to_unit_spectrum(x) if scale_input else x
     if storage_dtype is not None:
@@ -495,7 +527,8 @@ def sign_iteration(
                 break
 
     if mesh is not None:
-        out = B.ShardedBSM(blocks=xb, mask=xm, norms=xn, mesh=mesh)
+        out = B.ShardedBSM(blocks=xb, mask=xm, norms=xn, mesh=mesh,
+                           assignment=x.assignment)
         result = out if sharded_in else out.unshard()
     else:
         result = B.BlockSparseMatrix(blocks=xb, mask=xm, norms=xn)
@@ -528,17 +561,22 @@ def density_matrix(
     backend: str = "jnp",
     storage_dtype=None,
     tile: tuple[int, int, int] | None = None,
+    assignment=None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I).
 
     The shift, sign iteration and projector assembly all run where ``h``
     lives: a ShardedBSM Hamiltonian yields a ShardedBSM density matrix
     with no intermediate gather (derived-norm algebra at both ends).
+    ``assignment`` pins one block→device distribution for the whole
+    purification (see ``sign_iteration``).
     """
     nb, bs = h.nb_r, h.bs_r
     ident = B.identity(nb, bs, h.dtype)
     if isinstance(h, B.ShardedBSM):
-        ident = B.shard_bsm(ident, h.mesh)
+        # the identity joins h's layout (P I Pᵀ = I) so the shift algebra
+        # stays shard-local under whatever assignment h was sharded with
+        ident = B.shard_bsm(ident, h.mesh, assignment=h.assignment)
         shifted = ident.scale(-mu).add(h)
     else:
         shifted = B.add(h, B.scale(ident, -mu))
@@ -555,6 +593,7 @@ def density_matrix(
         backend=backend,
         storage_dtype=storage_dtype,
         tile=tile,
+        assignment=assignment,
     )
     if sgn.dtype != ident.dtype:  # projector algebra in storage dtype
         ident = B.cast_bsm(ident, sgn.dtype)

@@ -41,8 +41,10 @@ from repro.tuner.db import TuningDB, make_key
 from repro.tuner.features import PairFeatures, feature_bucket, featurize  # noqa: F401
 from repro.tuner.measure import best_trial, measure_candidates
 from repro.tuner.model import (
+    _ASSIGN_TAGS,
     Candidate,
     ModelReport,  # noqa: F401
+    assignment_space,
     chain_safe,
     choose_local_backend,  # noqa: F401
     device_memory_budget,
@@ -61,8 +63,9 @@ __all__ = [
 
 @dataclass(frozen=True)
 class Decision:
-    """A resolved (engine, L, backend, capacity, transport) choice and
-    where it came from: "cache" | "db" | "measured" | "analytic"."""
+    """A resolved (engine, L, backend, capacity, transport, assignment)
+    choice and where it came from: "cache" | "db" | "measured" |
+    "analytic"."""
 
     engine: str
     l: int | None
@@ -72,6 +75,7 @@ class Decision:
     measured_s: float | None = None
     transport: str = "dense"  # panel transport mode for this pattern
     tile: tuple[int, int, int] | None = None  # pallas MXU tile override
+    assign: str = "identity"  # block→device assignment mode
 
     @property
     def label(self) -> str:
@@ -82,6 +86,7 @@ class Decision:
             tag = f"{tag}/t{tm}x{tk}x{tn}"
         if self.transport == "compressed":
             tag += "+ct"
+        tag += _ASSIGN_TAGS.get(self.assign, "")
         return f"{tag}[{self.source}]"
 
 
@@ -113,19 +118,21 @@ plan_mod.register_cache(_reset)
 
 
 def _constraints(engines, backends, l, chain: bool,
-                 transport: str | None) -> tuple:
-    """Constraint part of the decision/DB key.  The transport element is
-    appended ONLY when the caller pinned a mode: the unpinned (and
-    chain-default) shapes keep their pre-transport 4-element form, so a
-    tuning DB persisted before the transport layer still warm-hits — its
-    records simply read as ``transport="dense"`` (``_db_candidate``)."""
+                 transport: str | None, assign: str | None = None) -> tuple:
+    """Constraint part of the decision/DB key.  The transport and assign
+    elements are appended ONLY when the caller pinned a mode: the
+    unpinned (and chain-default) shapes keep their earlier short forms,
+    so a tuning DB persisted before the transport / distribution layers
+    still warm-hits — its records simply read as ``transport="dense"`` /
+    ``assign="identity"`` (``_db_candidate``)."""
     base = (
         "chain" if chain else "mult",
         ",".join(engines) if engines else "*",
         ",".join(backends) if backends else "*",
         0 if l is None else int(l),
     )
-    return base + ((transport,) if transport else ())
+    return (base + ((transport,) if transport else ())
+            + (("assign:" + assign,) if assign else ()))
 
 
 def _operand_key(a, b, mesh, constraints: tuple, threshold: float,
@@ -157,7 +164,7 @@ def _capacity_for(cand: Candidate, ok, mesh) -> int | None:
     return plan_mod.get_device_capacity(ok, mesh, cand.engine)
 
 
-def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
+def _db_candidate(rec: dict, ok, mesh, feats, counts=None) -> Candidate | None:
     """Rehydrate a DB record into a candidate VALID for this exact
     (mesh, pattern) — feature buckets are coarse, so a record measured at
     a different block grid can share the bucket while being
@@ -172,10 +179,16 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
     against this pattern's block shape on the current platform — a tile
     measured for one arch may not be lane-alignable on another; an
     invalid tile silently drops to the default instead of missing the
-    whole record (the engine/backend choice is still worth reusing)."""
+    whole record (the engine/backend choice is still worth reusing).
+    ``assign`` (records predating it read as identity) is re-validated
+    the same way via ``_db_assign``: a mode whose permutation cannot be
+    derived on THIS (pattern, mesh) drops to identity, and the compacted
+    capacity is re-derived from the PERMUTED cube — a bucket hit must
+    never hand the program an identity-layout bound for a permuted run."""
     cand = Candidate(rec["engine"], rec["l"], rec["backend"],
                      transport=rec.get("transport", "dense"),
-                     tile=_db_tile(rec.get("tile"), feats))
+                     tile=_db_tile(rec.get("tile"), feats),
+                     assign=_db_assign(rec.get("assign"), mesh, counts))
     if cand.transport not in ("dense", "compressed"):
         return None  # schema drift: unknown mode is a miss, not a crash
     try:
@@ -185,11 +198,35 @@ def _db_candidate(rec: dict, ok, mesh, feats) -> Candidate | None:
         return None
     if cand.backend == "jnp":
         return cand
-    cap = _capacity_for(cand, ok, mesh)
+    ok_m = ok
+    if cand.assign != "identity":
+        from repro.core.distribute import permute_cube
+
+        asg = assignment_space(counts, mesh,
+                               assigns=(cand.assign,)).get(cand.assign)
+        ok_m = permute_cube(ok, asg.perm)
+    cap = _capacity_for(cand, ok_m, mesh)
     if not cap:
         return None  # empty pattern: the compacted program has no work
     return Candidate(cand.engine, cand.l, cand.backend, cap, cand.transport,
-                     cand.tile)
+                     cand.tile, cand.assign)
+
+
+def _db_assign(raw, mesh, counts) -> str:
+    """Persisted assignment mode -> a mode derivable on this exact
+    (pattern, mesh), else "identity".  Records predating the distribution
+    layer carry no "assign" and read as identity; an unknown mode, a
+    missing mask product, or a (grid, mesh) the symmetric permutation
+    cannot divide (non-square counts, nb % lcm(p_r, p_c) != 0) silently
+    drops to identity instead of missing the whole record — the
+    engine/backend choice is still worth reusing."""
+    if raw in (None, "identity"):
+        return "identity"
+    try:
+        space = assignment_space(counts, mesh, assigns=(str(raw),))
+    except (ValueError, TypeError, KeyError):
+        return "identity"
+    return str(raw) if space.get(str(raw)) is not None else "identity"
 
 
 def _db_tile(raw, feats) -> tuple[int, int, int] | None:
@@ -229,16 +266,22 @@ def autotune(
     measure: bool = True,
     interpret: bool | None = None,
     transport: str | None = None,
+    assign: str | None = None,
 ) -> Decision:
-    """Resolve ``(engine, L, backend, stack_capacity, transport)`` for
-    one operand pair on one mesh.
+    """Resolve ``(engine, L, backend, stack_capacity, transport,
+    assignment)`` for one operand pair on one mesh.
 
-    ``backend`` / ``l`` / ``engines`` / ``transport`` pin parts of the
-    decision (the tuner only chooses what the caller left open).
+    ``backend`` / ``l`` / ``engines`` / ``transport`` / ``assign`` pin
+    parts of the decision (the tuner only chooses what the caller left
+    open).  ``assign="identity"`` pins the block→device assignment to
+    the home layout — the sharded execute path uses this (operands are
+    already distributed; the layout decision was made at ``shard_bsm``).
     ``chain=True`` restricts to chain-safe candidates (dense local
     backend + dense transport: a fused iteration's pattern evolves under
     a traced sweep, so static compacted capacities from the initial
-    pattern would be unsound).  ``measure=False`` stops after the
+    pattern would be unsound; assignment stays identity there for the
+    same reason enumerate skips it on dense-jnp — the layout cannot
+    change dense uniform work).  ``measure=False`` stops after the
     analytic ranking (no device work — usable on abstract meshes).
     """
     if mesh is None:
@@ -248,7 +291,9 @@ def autotune(
 
     backends = (backend,) if backend else (("jnp",) if chain else None)
     transports = (transport,) if transport else (("dense",) if chain else None)
-    constraints = _constraints(engines, backends, l, chain, transport)
+    assigns = (assign,) if assign else (("identity",) if chain else None)
+    constraints = _constraints(engines, backends, l, chain, transport,
+                               assign)
     budget = device_memory_budget() if budget_bytes is None else budget_bytes
     tdb = db if db is not None else _default_db
     key = _operand_key(a, b, mesh, constraints, threshold, budget,
@@ -262,6 +307,9 @@ def autotune(
 
     feats = featurize(a, b, threshold)
     ok = _host_pair_filter(a, b, threshold)
+    from repro.core.distribute import product_counts
+
+    counts = product_counts(np.asarray(a.mask, bool), np.asarray(b.mask, bool))
     db_key = make_key(feature_bucket(feats), mesh_signature(mesh),
                       constraints, feats.dtype)
 
@@ -274,7 +322,7 @@ def autotune(
     if tdb is not None:
         rec = tdb.lookup(db_key)
         if rec is not None:
-            cand = _db_candidate(rec, ok, mesh, feats)
+            cand = _db_candidate(rec, ok, mesh, feats, counts)
             if (
                 cand is not None
                 and estimate_candidate(cand, mesh, feats,
@@ -287,12 +335,13 @@ def autotune(
                     stack_capacity=cand.stack_capacity, source="db",
                     measured_s=rec.get("measured_s"),
                     transport=cand.transport, tile=cand.tile,
+                    assign=cand.assign,
                 ))
             # invalid here / stale (budget, constraints): fall through
 
     report = rank_candidates(
-        mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
-        transports=transports,
+        mesh, feats, ok=ok, counts=counts, engines=engines,
+        backends=backends, l=l, transports=transports, assigns=assigns,
         budget_bytes=budget, top_k=top_k if measure else 1,
     )
     if chain:
@@ -307,7 +356,7 @@ def autotune(
         return finish(Decision(
             engine=best.engine, l=best.l, backend=best.backend,
             stack_capacity=best.stack_capacity, source="analytic",
-            transport=best.transport, tile=best.tile,
+            transport=best.transport, tile=best.tile, assign=best.assign,
         ))
 
     plan_mod._stats.tuner_misses += 1
@@ -323,6 +372,7 @@ def autotune(
             "engine": cand.engine, "l": cand.l, "backend": cand.backend,
             "transport": cand.transport,
             "tile": list(cand.tile) if cand.tile is not None else None,
+            "assign": cand.assign,
             "measured_s": win.seconds,
             "trials": [
                 {"label": t.candidate.label, "seconds": t.seconds,
@@ -334,21 +384,23 @@ def autotune(
         engine=cand.engine, l=cand.l, backend=cand.backend,
         stack_capacity=cand.stack_capacity, source="measured",
         measured_s=win.seconds, transport=cand.transport, tile=cand.tile,
+        assign=cand.assign,
     ))
 
 
 def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
     """``engine="auto"`` resolution for ``plan.execute`` /
     ``plan.execute_sharded``: returns the concrete engine plus the
-    keyword set with the tuner's L / backend / capacity / transport
-    filled in (the caller's explicit choices are honored as
+    keyword set with the tuner's L / backend / capacity / transport /
+    assignment filled in (the caller's explicit choices are honored as
     constraints)."""
     kw = dict(kw)
     backend = kw.get("backend")
-    from repro.core.engine import _transport_pin
+    from repro.core.engine import _assign_pin, _transport_pin
 
     tr = kw.get("transport")
     tr_pin = _transport_pin(tr)
+    asg_spec = kw.get("assignment")
     dec = autotune(
         a, b, mesh,
         threshold=kw.get("threshold", 0.0),
@@ -356,6 +408,7 @@ def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
         l=kw.get("l"),
         interpret=kw.get("interpret"),
         transport=tr_pin,
+        assign=_assign_pin(asg_spec),
     )
     kw["backend"] = dec.backend
     kw["l"] = dec.l
@@ -367,4 +420,8 @@ def resolve_multiply(a, b, mesh, kw: dict) -> tuple[str, dict]:
         # the tuner's measured mode; capacities are derived from the
         # concrete pattern in plan.resolve_transport
         kw["transport"] = dec.transport
+    if asg_spec is None:
+        # the tuner's chosen layout; the permutation itself is re-derived
+        # deterministically by plan.resolve_assignment
+        kw["assignment"] = dec.assign
     return dec.engine, kw

@@ -14,14 +14,17 @@ benchmarked on:
                 distance — the shape of 3D linear-scaling DFT operators
                 (H, S, P in H2O-DFT-LS); moderate, distance-correlated
                 fill-in.
-``zipf``        Zipf-distributed block-*row* loads: a few hub rows are
-                nearly dense, most rows nearly empty.  This is the static
-                block-grid rendering of DBCSR's heterogeneous block-size
-                distributions (Table 1's amorphous/interface systems):
-                with the TPU format's fixed atomic block size, what
-                survives of "Zipf block sizes" is exactly the per-row
-                load imbalance, which is what stresses the per-device
-                capacity bounds and the 2.5D load balance.
+``zipf``        Zipf-distributed block-*row* loads in natural order: a
+                few hub rows near the top are nearly dense, most rows
+                nearly empty.  This is the static block-grid rendering of
+                DBCSR's heterogeneous block-size distributions (Table 1's
+                amorphous/interface systems): with the TPU format's fixed
+                atomic block size, what survives of "Zipf block sizes" is
+                exactly the per-row load imbalance — clustered, as a
+                by-molecule atom ordering clusters it — which is what
+                stresses the per-device capacity bounds, the 2.5D load
+                balance, and the block→device assignment layer
+                (``core.distribute``).
 
 ``uniform``     Uniform random occupation — the load-balanced limit a
                 banded/decay operator reaches after DBCSR's randomized
@@ -61,24 +64,49 @@ class CorpusEntry:
     threshold: float = 1e-6
     params: dict = field(default_factory=dict)
 
+    @property
+    def symmetric(self) -> bool:
+        return self.kind in ("dft_chain", "exp_decay")
+
+    def masks(self) -> tuple[np.ndarray, np.ndarray]:
+        """The concrete (A, B) occupation masks of this entry — exactly
+        the (symmetrized) patterns ``build`` fills with values, without
+        materializing any block data."""
+        key = jax.random.key(self.seed)
+        k_mask, _, _ = jax.random.split(key, 3)
+        ma = make_mask(self.kind, self.nb, k_mask,
+                       occupancy=self.occupancy, bandwidth=self.bandwidth,
+                       zipf_alpha=self.zipf_alpha)
+        if self.symmetric:
+            ma = ma | ma.T
+            return ma, ma  # H @ H: the purification multiply
+        # independent second operand: SpGEMM traffic, not purification
+        mb = make_mask(self.kind, self.nb, jax.random.fold_in(k_mask, 1),
+                       occupancy=self.occupancy,
+                       zipf_alpha=self.zipf_alpha)
+        return ma, mb
+
+    def imbalance(self, p_r: int = 2, p_c: int = 2) -> float:
+        """Max/mean per-device product load of this entry's multiply on a
+        (p_r, p_c) grid under the identity block→device assignment — the
+        statistic the distribution layer (``core.distribute``) exists to
+        flatten.  ``zipf``'s hub rows push it well above 2x while
+        ``uniform`` sits near 1x (asserted in tests/test_tuner.py)."""
+        from repro.core.commvolume import load_imbalance
+        from repro.core.distribute import product_counts
+
+        ma, mb = self.masks()
+        return load_imbalance(product_counts(ma, mb), p_r, p_c)
+
     def build(self) -> tuple[B.BlockSparseMatrix, B.BlockSparseMatrix]:
         """Reproducible (A, B) operand pair for this entry."""
         key = jax.random.key(self.seed)
-        k_mask, k_a, k_b = jax.random.split(key, 3)
-        symmetric = self.kind in ("dft_chain", "exp_decay")
-        mask = make_mask(self.kind, self.nb, k_mask,
-                         occupancy=self.occupancy, bandwidth=self.bandwidth,
-                         zipf_alpha=self.zipf_alpha)
-        a = _fill(mask, k_a, self.bs, symmetric=symmetric)
-        if not symmetric:
-            # independent second operand: SpGEMM traffic, not purification
-            mask_b = make_mask(self.kind, self.nb, jax.random.fold_in(k_mask, 1),
-                               occupancy=self.occupancy,
-                               zipf_alpha=self.zipf_alpha)
-            b = _fill(mask_b, k_b, self.bs, symmetric=False)
-        else:
-            b = a  # H @ H: the purification multiply
-        return a, b
+        _, k_a, k_b = jax.random.split(key, 3)
+        ma, mb = self.masks()
+        a = _fill(ma, k_a, self.bs, symmetric=self.symmetric)
+        if self.symmetric:
+            return a, a
+        return a, _fill(mb, k_b, self.bs, symmetric=False)
 
 
 def _rng(key) -> np.random.Generator:
@@ -109,10 +137,14 @@ def make_mask(kind: str, nb: int, key, *, occupancy: float = 0.1,
         # probability independent of block distance
         m = rng.random((nb, nb)) < occupancy
     elif kind == "zipf":
-        # row r carries weight r^-alpha (after a random rank shuffle);
-        # normalize so the mean fill matches `occupancy`
-        ranks = rng.permutation(nb) + 1
-        w = ranks.astype(np.float64) ** -zipf_alpha
+        # row r carries weight (r+1)^-alpha in NATURAL order — hub rows
+        # cluster at the top the way a by-molecule atom ordering clusters
+        # heavy blocks in DBCSR's inputs; normalize so the mean fill
+        # matches `occupancy`.  The clustering is the point: a uniform
+        # block→device partition lands every hub on one device row-panel,
+        # which is exactly the imbalance the distribution layer
+        # (core.distribute) exists to flatten.
+        w = (np.arange(nb, dtype=np.float64) + 1.0) ** -zipf_alpha
         p_row = np.clip(w * (occupancy * nb / w.sum()), 0.0, 1.0)
         m = rng.random((nb, nb)) < p_row[:, None]
     else:

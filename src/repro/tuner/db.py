@@ -16,6 +16,17 @@ dense) — mode only, never capacities: the sound per-panel packing bounds
 are re-derived from the concrete pattern on every use
 (``plan.get_transport``), so a stale record can never smuggle in an
 unsound bound.
+
+The block→device assignment follows the same rule: records persist the
+winning *mode* only (``"assign": "identity" | "randomized" |
+"nnz_greedy"``; absent in pre-distribution records, read as identity),
+never a permutation — the permutation is a pure function of the concrete
+mask product (``distribute.assignment_for``) and is re-derived on every
+use.  On lookup the mode is revalidated for the exact (pattern, mesh) at
+hand (``tuner._db_assign``) and silently drops to identity when the
+symmetric permutation cannot be derived there (non-square block grid,
+``nb % lcm(p_r, p_c) != 0``, unknown mode) — a bucket hit reuses the
+engine/backend choice rather than missing the whole record.
 """
 from __future__ import annotations
 

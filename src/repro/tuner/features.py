@@ -14,7 +14,11 @@ small feature vector the tuner keys its decisions on:
   which decides whether post-filtering will keep the pattern sparse;
 * block-row bandwidth of both operands (the near-sightedness of the
   operator — banded patterns keep fill-in local, random patterns do not);
-* panel byte sizes, which set the communication-volume scale of Eq. (7).
+* panel byte sizes, which set the communication-volume scale of Eq. (7);
+* the product-load **imbalance** (max/mean per-panel product load of the
+  mask product over a canonical mesh-independent grid): how unevenly the
+  pattern loads a uniform block→device partition — the feature that makes
+  the tuner consider non-identity block assignments (``core.distribute``).
 
 ``feature_bucket`` coarsens the vector (log2 shape classes, occupancy
 deciles) into the persisted tuning-database key: patterns that land in the
@@ -48,6 +52,7 @@ class PairFeatures:
     bandwidth_a: float  # block-row bandwidth of A, normalized by nb
     bandwidth_b: float
     panel_kb: float  # one A home-shard-row panel triple, kilobytes
+    imbalance: float = 1.0  # max/mean product load, canonical grid
 
     @property
     def cube(self) -> int:
@@ -67,6 +72,32 @@ def _bandwidth(mask: np.ndarray) -> int:
 
 def _itemsize(dtype) -> int:
     return int(np.dtype(str(np.dtype(dtype))).itemsize)
+
+
+CANONICAL_GRID = 4  # imbalance reference grid (mesh-independent feature)
+
+
+def _canonical_divisor(n: int, target: int = CANONICAL_GRID) -> int:
+    for g in range(min(target, max(n, 1)), 0, -1):
+        if n % g == 0:
+            return g
+    return 1
+
+
+def _canonical_imbalance(counts: np.ndarray) -> float:
+    """Max/mean product load over a canonical square-ish grid.
+
+    Mesh-independent on purpose: the feature (and its DB bucket) must not
+    change with the mesh the pattern happens to run on — ``mesh_signature``
+    is a separate part of the DB key, and the exact per-mesh imbalance is
+    recomputed by the model when ranking candidates."""
+    from repro.core.commvolume import load_imbalance
+
+    g_r = _canonical_divisor(counts.shape[0])
+    g_c = _canonical_divisor(counts.shape[1])
+    if g_r < 2 and g_c < 2:
+        return 1.0
+    return load_imbalance(counts, g_r, g_c)
 
 
 def featurize(a, b, threshold: float = 0.0) -> PairFeatures:
@@ -105,6 +136,7 @@ def featurize(a, b, threshold: float = 0.0) -> PairFeatures:
         bandwidth_a=_bandwidth(am) / max(nb_r, 1),
         bandwidth_b=_bandwidth(bm) / max(nb_k, 1),
         panel_kb=panel_kb,
+        imbalance=_canonical_imbalance(counts),
     )
 
 
@@ -124,7 +156,7 @@ def feature_bucket(f: PairFeatures) -> tuple:
     serving traffic) re-hit one measured decision instead of re-tuning.
     """
     return (
-        "fb1",  # bucket-schema version (bump when fields change)
+        "fb2",  # bucket-schema version (bump when fields change)
         _log2_class(f.nb_r), _log2_class(f.nb_k), _log2_class(f.nb_c),
         _log2_class(f.bs_r), _log2_class(f.bs_k), _log2_class(f.bs_c),
         f.dtype,
@@ -132,4 +164,7 @@ def feature_bucket(f: PairFeatures) -> tuple:
         _decile(f.product_fill, 0.05),
         _decile(f.out_fill),
         _decile(f.bandwidth_a), _decile(f.bandwidth_b),
+        # half-integer imbalance classes, capped at 4x: balanced (~1.0)
+        # and hub-dominated (>2x) patterns must never share one record
+        min(int(round(f.imbalance * 2)), 8),
     )

@@ -61,11 +61,15 @@ def measure_candidates(
 
     def make_run(c):
         def run():
+            # sharded operands already live in their assignment's layout
+            # (and carry it); only the replicated path runs the trial
+            # under the candidate's block→device assignment
             return multiply(
                 a, b, None if sharded else mesh,
                 engine=c.engine, threshold=threshold, backend=c.backend,
                 l=c.l, stack_capacity=c.stack_capacity, tile=c.tile,
                 interpret=interpret, transport=c.transport,
+                assignment=None if sharded else c.assign,
             )
 
         return run

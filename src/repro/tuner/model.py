@@ -57,6 +57,9 @@ def device_memory_budget() -> float:
 TICK_OVERHEAD_S = 20e-6
 
 
+_ASSIGN_TAGS = {"randomized": "@rand", "nnz_greedy": "@nnz"}
+
+
 @dataclass(frozen=True)
 class Candidate:
     """One point of the tuner's decision space."""
@@ -67,6 +70,7 @@ class Candidate:
     stack_capacity: int | None = None  # compacted backends: device bound
     transport: str = "dense"  # panel transport mode ("dense"|"compressed")
     tile: tuple[int, int, int] | None = None  # pallas MXU tile (None=default)
+    assign: str = "identity"  # block→device assignment mode (distribute.MODES)
 
     @property
     def label(self) -> str:
@@ -75,7 +79,9 @@ class Candidate:
         if self.tile is not None:
             tm, tk, tn = self.tile
             tag = f"{tag}/t{tm}x{tk}x{tn}"
-        return tag + "+ct" if self.transport == "compressed" else tag
+        if self.transport == "compressed":
+            tag += "+ct"
+        return tag + _ASSIGN_TAGS.get(self.assign, "")
 
 
 @dataclass(frozen=True)
@@ -112,26 +118,63 @@ def valid_square_depths(p: int) -> list[int]:
     return [k * k for k in range(2, p + 1) if p % k == 0]
 
 
+def assignment_space(
+    counts, mesh, *, assigns: tuple[str, ...] | None = None
+) -> dict[str, object]:
+    """The assignment modes worth ranking for one (counts, mesh) pair,
+    resolved to their deterministic ``distribute.Assignment`` objects
+    (identity maps to None).
+
+    Without concrete ``counts`` there is nothing to derive a permutation
+    from, so only identity survives — the same degradation as compressed
+    transport without masks.  Non-square block grids cannot take a
+    symmetric permutation and also collapse to identity.
+    """
+    from repro.core import distribute as D
+
+    if assigns is None:
+        assigns = D.MODES
+    out: dict[str, object] = {}
+    for mode in assigns:
+        if mode == "identity":
+            out["identity"] = None
+            continue
+        if counts is None:
+            continue
+        c = np.asarray(counts)
+        if c.shape[0] != c.shape[1] or c.shape[0] % math.lcm(
+            int(mesh.shape["r"]), int(mesh.shape["c"])
+        ):
+            continue
+        out[mode] = D.assignment_for(mode, c, (mesh.shape["r"],
+                                               mesh.shape["c"]))
+    if not out:
+        out["identity"] = None
+    return out
+
+
 def enumerate_candidates(
     mesh,
     feats: PairFeatures,
     *,
     ok=None,
+    counts=None,
     engines: tuple[str, ...] | None = None,
     backends: tuple[str, ...] | None = None,
     l: int | None = None,
     transports: tuple[str, ...] | None = None,
+    assigns: tuple[str, ...] | None = None,
 ) -> list[Candidate]:
-    """All (engine, L, backend, capacity, transport) points feasible for
-    ``mesh``.
+    """All (engine, L, backend, capacity, transport, assignment) points
+    feasible for ``mesh``.
 
     ``ok`` — optional concrete filter cube; with it the compacted
     backends get their exact bucketed per-device capacity
     (``plan.get_device_capacity``), without it they are skipped (no sound
     static bound to hand the compiled program) and so is compressed
     transport (capacities are derived from the concrete masks at
-    execution).  ``engines`` / ``l`` / ``backends`` / ``transports``
-    restrict the space (caller-pinned choices).
+    execution).  ``engines`` / ``l`` / ``backends`` / ``transports`` /
+    ``assigns`` restrict the space (caller-pinned choices).
 
     The ``pallas`` backend additionally fans out over the MXU tile shapes
     worth measuring for this block shape and storage dtype
@@ -139,6 +182,14 @@ def enumerate_candidates(
     shipped ``default_tile``).  The searched axis is the *tile*; the
     storage dtype is a feature (part of the DB key), not a choice — the
     tuner never trades precision for speed on its own.
+
+    ``counts`` — the integer mask product; with it non-identity block
+    assignments (``core.distribute``) join the space for the candidates
+    they can actually change: the compacted backends (whose capacity is a
+    max over devices — derived here from the PERMUTED cube) and
+    compressed transport (max-over-panels capacities).  For a dense-jnp
+    candidate every device does identical dense work whatever the
+    layout, so fanning assignments out there would only burn trial time.
     """
     axes = tuple(mesh.axis_names)
     if transports is None:
@@ -150,6 +201,7 @@ def enumerate_candidates(
 
         backends = ("jnp", "pallas") if jax.default_backend() == "tpu" \
             else ("jnp", "stacks")
+    assign_map = assignment_space(counts, mesh, assigns=assigns)
 
     pairs: list[tuple[str, int | None]] = []
     if "l" in axes:
@@ -180,15 +232,30 @@ def enumerate_candidates(
             continue  # block grid does not divide this topology
         for backend in backends:
             for tp in transports:
-                if backend == "jnp":
-                    out.append(Candidate(engine, depth, "jnp", None, tp))
-                elif ok is not None:
-                    cap = plan_mod.get_device_capacity(ok, mesh, engine)
-                    if cap > 0:
-                        for tile in _backend_tiles(backend, feats):
-                            out.append(Candidate(
-                                engine, depth, backend, cap, tp, tile
-                            ))
+                for mode, asg in assign_map.items():
+                    if (mode != "identity" and backend == "jnp"
+                            and tp != "compressed"):
+                        # dense panels + dense cube: every device does
+                        # identical work in any layout
+                        continue
+                    if backend == "jnp":
+                        out.append(Candidate(
+                            engine, depth, "jnp", None, tp, None, mode
+                        ))
+                    elif ok is not None:
+                        ok_m = ok
+                        if asg is not None:
+                            from repro.core.distribute import permute_cube
+
+                            ok_m = permute_cube(ok, asg.perm)
+                        cap = plan_mod.get_device_capacity(ok_m, mesh,
+                                                           engine)
+                        if cap > 0:
+                            for tile in _backend_tiles(backend, feats):
+                                out.append(Candidate(
+                                    engine, depth, backend, cap, tp,
+                                    tile, mode
+                                ))
     return out
 
 
@@ -221,9 +288,20 @@ def estimate_candidate(
     feats: PairFeatures,
     *,
     budget_bytes: float | None = None,
+    imbalance: float | None = None,
 ) -> Estimate:
     """Model one candidate: comm seconds + local-compute seconds + the
-    Eq. (6) memory-feasibility verdict."""
+    Eq. (6) memory-feasibility verdict.
+
+    ``imbalance`` — max/mean per-device product load under THIS
+    candidate's block assignment (``commvolume.load_imbalance`` on the
+    exact mesh grid; ``rank_candidates`` computes it per assignment mode
+    from the mask-product counts).  Defaults to the feature vector's
+    canonical-grid statistic.  It scales the local-compute term for the
+    compacted backends — their work is product-proportional, and the
+    slowest device gates every tick barrier — while the dense ``jnp``
+    einsum contracts the full uniform cube on every device and is immune.
+    """
     budget = device_memory_budget() if budget_bytes is None else budget_bytes
     plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
     itemsize = float(np.dtype(feats.dtype).itemsize)
@@ -252,6 +330,10 @@ def estimate_candidate(
         capacity=cand.stack_capacity,
     )
     compute_s = lc.effective / ndev / PEAK_FLOPS
+    if cand.backend != "jnp":
+        # mean-load cost -> slowest-device cost (see the docstring)
+        imb = imbalance if imbalance is not None else feats.imbalance
+        compute_s *= max(float(imb), 1.0)
 
     mem = commvolume.device_memory_bytes(
         plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
@@ -277,33 +359,59 @@ def estimate_candidate(
     )
 
 
+def assignment_imbalances(counts, mesh, modes=None) -> dict[str, float]:
+    """Exact per-mesh max/mean product-load factor of every assignment
+    mode (identity included) — the numbers ``rank_candidates`` scales
+    compacted compute by, and what the benchmarks report as the
+    per-device load spread."""
+    from repro.core.commvolume import load_imbalance
+
+    p_r, p_c = int(mesh.shape["r"]), int(mesh.shape["c"])
+    out: dict[str, float] = {}
+    for mode, asg in assignment_space(counts, mesh, assigns=modes).items():
+        perm = None if asg is None else asg.perm
+        out[mode] = load_imbalance(counts, p_r, p_c, perm=perm) \
+            if counts is not None else 1.0
+    return out
+
+
 def rank_candidates(
     mesh,
     feats: PairFeatures,
     *,
     ok=None,
+    counts=None,
     engines: tuple[str, ...] | None = None,
     backends: tuple[str, ...] | None = None,
     l: int | None = None,
     transports: tuple[str, ...] | None = None,
+    assigns: tuple[str, ...] | None = None,
     budget_bytes: float | None = None,
     top_k: int | None = None,
 ) -> ModelReport:
     """Enumerate -> estimate -> prune -> rank.  Raises ``ValueError`` when
     no candidate fits the per-device memory budget (the caller must then
     shrink the problem or raise the budget — silently over-committing
-    device memory is the one thing the tuner must never do)."""
+    device memory is the one thing the tuner must never do).
+
+    With ``counts`` (the integer mask product) the estimates price each
+    candidate at its OWN assignment's exact per-mesh load imbalance; the
+    coarse canonical-grid feature only backstops the counts-free path.
+    """
     cands = enumerate_candidates(
-        mesh, feats, ok=ok, engines=engines, backends=backends, l=l,
-        transports=transports,
+        mesh, feats, ok=ok, counts=counts, engines=engines,
+        backends=backends, l=l, transports=transports, assigns=assigns,
     )
     if not cands:
         raise ValueError(
             f"no engine candidate fits mesh {mesh_signature(mesh)} and "
             f"block grid {feats.nb_r}x{feats.nb_c}"
         )
+    imbs = assignment_imbalances(counts, mesh, modes=assigns) \
+        if counts is not None else {}
     ests = [
-        estimate_candidate(c, mesh, feats, budget_bytes=budget_bytes)
+        estimate_candidate(c, mesh, feats, budget_bytes=budget_bytes,
+                           imbalance=imbs.get(c.assign))
         for c in cands
     ]
     feasible = sorted((e for e in ests if e.feasible), key=lambda e: e.total_s)

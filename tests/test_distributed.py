@@ -127,3 +127,8 @@ def test_microbatch_gradient_accumulation():
 def test_pipeline_schedule():
     out = _run("pipeline")
     assert "pipeline OK" in out
+
+
+def test_assignment_distributed():
+    out = _run("assignment")
+    assert "assignment OK" in out

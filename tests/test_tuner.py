@@ -608,3 +608,156 @@ def test_pre_tile_db_records_still_warm_hit(tmp_path):
     assert dec.source == "db" and dec.engine == "gather"
     assert dec.tile is None
     assert plan_mod.cache_stats()["tuner_trials"] == 0
+
+
+# ---- block->device assignment axis (core.distribute) -----------------------
+
+
+def test_corpus_imbalance_statistic():
+    """Satellite of the distribution layer: the zipf hub family is the
+    workload the layer exists for — its identity-layout per-device
+    product-load imbalance is MATERIAL (>2x on a 4x4 grid), while the
+    uniform family (the randomized-permutation limit) sits near 1x."""
+    from repro.tuner.corpus import CorpusEntry
+
+    z = CorpusEntry("zipf_hub", "zipf", 32, 8, occupancy=0.15,
+                    zipf_alpha=1.4, seed=15)
+    assert z.imbalance(4, 4) > 2.0
+    u = CorpusEntry("uniform_flat", "uniform", 64, 8, occupancy=0.15,
+                    seed=15)
+    assert u.imbalance(4, 4) < 1.3
+    # masks() is exactly what build() fills — the statistic describes the
+    # operands the tuner will actually measure
+    ma, mb = z.masks()
+    a, b = z.build()
+    np.testing.assert_array_equal(ma, np.asarray(a.mask))
+    np.testing.assert_array_equal(mb, np.asarray(b.mask))
+
+
+def test_candidate_assign_labels():
+    assert Candidate("gather").label == "gather/jnp"
+    assert Candidate("gather", assign="nnz_greedy").label == "gather/jnp@nnz"
+    assert Candidate("gather", assign="randomized").label == "gather/jnp@rand"
+
+
+def test_enumerate_assignment_axis():
+    """With hub-skewed counts the space grows an assignment axis; without
+    counts (or with near-flat loads) it stays identity-only."""
+    from repro.core.distribute import product_counts
+
+    a, b = _pair(nb=8, bs=4, occupancy=0.2, seed=2)
+    mask = np.asarray(a.mask).copy()
+    mask[:2] = True  # hub rows
+    counts = product_counts(mask, np.asarray(b.mask))
+    f = featurize(a, b, 0.0)
+    cands = enumerate_candidates(FakeMesh(r=2, c=2), f, ok=_ok_cube(a, b),
+                                 engines=("gather",), backends=("jnp",),
+                                 counts=counts)
+    assigns = {c.assign for c in cands}
+    assert "identity" in assigns
+    assert "nnz_greedy" in assigns or "randomized" in assigns
+    nocounts = enumerate_candidates(FakeMesh(r=2, c=2), f, ok=_ok_cube(a, b),
+                                    engines=("gather",), backends=("jnp",))
+    assert {c.assign for c in nocounts} == {"identity"}
+
+
+def test_db_record_persists_assign(tmp_path):
+    """The winner's assignment mode rides the DB record (mode only — the
+    permutation is re-derived from the concrete mask product on every
+    use) and survives a JSON round-trip."""
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device check")
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=4, occupancy=0.4)
+    plan_mod.clear_cache()
+    db = TuningDB(str(tmp_path / "db.json"))
+    dec = autotune(a, b, mesh, db=db, top_k=2)
+    rec = next(iter(db.records.values()))
+    assert "assign" in rec and rec["assign"] == dec.assign
+    db2 = TuningDB.load(str(tmp_path / "db.json"))
+    rec2 = next(iter(db2.records.values()))
+    assert rec2["assign"] == rec["assign"]
+
+
+def test_db_assign_revalidated_per_topology():
+    """Persisted assignment modes are revalidated on every hit like tile
+    and transport: a mode underivable on THIS (pattern, mesh) — mesh
+    shape whose lcm does not divide the block grid, unknown mode, missing
+    counts — silently drops to identity, keeping the engine/backend
+    choice alive instead of missing the record."""
+    from repro.core.distribute import product_counts
+    from repro.tuner import _db_candidate
+
+    a, b = _pair(nb=8, bs=4, occupancy=0.3)
+    feats = featurize(a, b, 0.0)
+    ok = _ok_cube(a, b)
+    counts = product_counts(np.asarray(a.mask), np.asarray(b.mask))
+    mesh = FakeMesh(r=2, c=2)
+    base = {"engine": "gather", "l": None, "backend": "jnp"}
+    # a record written before the distribution layer reads as identity
+    cand = _db_candidate(base, ok, mesh, feats, counts)
+    assert cand is not None and cand.assign == "identity"
+    # the persisted mode survives where the permutation is derivable
+    cand = _db_candidate({**base, "assign": "nnz_greedy"}, ok, mesh, feats,
+                         counts)
+    assert cand is not None and cand.assign == "nnz_greedy"
+    # a topology the record's plan cannot even validate on is a MISS
+    # (nb = 8 does not divide a 2x3 grid), independent of assignment
+    assert _db_candidate({**base, "assign": "nnz_greedy"}, ok,
+                         FakeMesh(r=2, c=3), feats, counts) is None
+    # a (pattern, mesh) where the symmetric permutation itself is
+    # underivable (non-square block grid) drops the MODE, keeps the record
+    counts_rect = np.ones((8, 6), np.int64)
+    cand = _db_candidate({**base, "assign": "nnz_greedy"}, ok, mesh, feats,
+                         counts_rect)
+    assert cand is not None and cand.assign == "identity"
+    # schema drift and missing counts drop to identity, not to a miss
+    cand = _db_candidate({**base, "assign": "zigzag"}, ok, mesh, feats,
+                         counts)
+    assert cand is not None and cand.assign == "identity"
+    cand = _db_candidate({**base, "assign": "nnz_greedy"}, ok, mesh, feats,
+                         None)
+    assert cand is not None and cand.assign == "identity"
+    # compacted backend: the capacity must come from the PERMUTED cube
+    from repro.core.distribute import assignment_for, permute_cube
+
+    cand = _db_candidate({**base, "backend": "stacks",
+                          "assign": "nnz_greedy"}, ok, mesh, feats, counts)
+    assert cand is not None and cand.assign == "nnz_greedy"
+    asg = assignment_for("nnz_greedy", counts, (2, 2))
+    assert cand.stack_capacity == plan_mod.get_device_capacity(
+        permute_cube(ok, asg.perm), mesh, "gather")
+
+
+def test_model_scales_compute_by_imbalance():
+    """The cost model prices load imbalance: on hub-skewed counts the
+    identity candidate's local-compute estimate exceeds a balanced
+    assignment's for the same engine, so the ranking can prefer the
+    permuted layout without measuring."""
+    from repro.core.distribute import product_counts
+    from repro.tuner.model import assignment_imbalances
+
+    a, b = _pair(nb=16, bs=8, occupancy=0.2, seed=4)
+    mask = np.asarray(a.mask).copy()
+    mask[:3] = True  # hub rows
+    counts = product_counts(mask, np.asarray(b.mask))
+    mesh = FakeMesh(r=2, c=2)
+    f = featurize(a, b, 0.0)
+    imbs = assignment_imbalances(counts, mesh)
+    assert imbs["identity"] > imbs.get("nnz_greedy", imbs["identity"]) - 1e-9
+    # the compacted backends are product-proportional, so the slowest
+    # device gates them: compute scales by the candidate's own imbalance
+    est_id = estimate_candidate(
+        Candidate("gather", backend="stacks", stack_capacity=8), mesh, f,
+        imbalance=imbs["identity"])
+    est_gr = estimate_candidate(
+        Candidate("gather", backend="stacks", stack_capacity=8,
+                  assign="nnz_greedy"), mesh, f,
+        imbalance=imbs["nnz_greedy"])
+    assert est_gr.compute_s < est_id.compute_s
+    # the dense jnp einsum contracts the full cube regardless of layout
+    dj = estimate_candidate(Candidate("gather"), mesh, f,
+                            imbalance=imbs["identity"])
+    assert dj.compute_s == estimate_candidate(
+        Candidate("gather"), mesh, f,
+        imbalance=imbs["nnz_greedy"]).compute_s
