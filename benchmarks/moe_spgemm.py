@@ -8,17 +8,35 @@ skipping (token-block, expert) pairs with no routed tokens — exactly what
 the Pallas ``block_spgemm`` kernel's ``@pl.when`` predication does on the
 MXU.
 
-This benchmark measures the occupancy of that dispatch matrix for the
-assigned MoE archs (top-k over E experts, realistic router entropy) and the
-fraction of block products the filter removes — the FLOP savings the
-SpGEMM view buys on TPU hardware.
+Two parts:
+
+* ``run()``/``check()`` (the ``benchmarks.run`` aggregation legs) measure
+  the occupancy of that dispatch matrix for the assigned MoE archs (top-k
+  over E experts) — the FLOP savings the SpGEMM view buys.
+
+* ``main()`` (the CI ``--smoke`` leg, BENCH_moe_spgemm.json) runs the
+  dispatch stream through the pattern-envelope layer (core/envelope.py):
+  every serving batch routes tokens differently, so the per-batch dispatch
+  mask DRIFTS — the per-pattern path re-walks the pattern and re-compacts
+  on every batch, while ``multiply(..., envelope=union_envelope(stream))``
+  executes every batch through ONE traced program with the concrete mask
+  entering as data.  The smoke gates assert exactly that: one trace for
+  the whole stream, zero per-batch pattern walks, every batch bit-correct
+  against the per-pattern oracle.
+
+NOTE: imported in-process by ``benchmarks/run.py`` — this module must not
+set XLA_FLAGS or otherwise touch global process state at import time.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import os
+import sys
 
-from repro.configs import get_arch
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
 
 
 def dispatch_occupancy(
@@ -31,6 +49,18 @@ def dispatch_occupancy(
     blocks = top_e[: nb * token_block].reshape(nb, token_block * top_k)
     onehot = jax.nn.one_hot(blocks, n_experts).max(axis=1)  # (nb, E)
     return float(onehot.mean())
+
+
+def dispatch_mask(nb_tok: int, n_experts: int, top_k: int,
+                  tokens_per_block: int, key):
+    """Concrete (nb_tok, E) block dispatch mask of one routed batch."""
+    import numpy as np
+
+    top_e = jax.random.randint(key, (nb_tok * tokens_per_block, top_k),
+                               0, n_experts)
+    blocks = top_e.reshape(nb_tok, tokens_per_block * top_k)
+    onehot = jax.nn.one_hot(blocks, n_experts).max(axis=1)
+    return np.asarray(onehot, bool)
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -64,7 +94,125 @@ def check() -> None:
     assert occ_dense > occ_sparse
 
 
+def main() -> None:
+    """The envelope-stream smoke benchmark (CI leg)."""
+    import argparse
+    import json
+    import time
+
+    import numpy as np
+
+    from repro.core import bsm as B
+    from repro.core import envelope as E
+    from repro.core import plan as plan_mod
+    from repro.core.engine import _multiply_reference_jit, multiply
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_moe_spgemm.json")
+    args = ap.parse_args()
+
+    nb_tok, n_experts, top_k, tpb = 8, 8, 2, 4
+    bs = 8 if args.smoke else 16
+    batches = args.batches or (6 if args.smoke else 12)
+    reps = 3 if args.smoke else 10
+
+    # block-diagonal expert weights: an (E, E) grid occupied on the diag
+    eye = np.eye(n_experts, dtype=bool)
+    wb = jax.random.normal(jax.random.key(1),
+                           (n_experts, n_experts, bs, bs)) / np.sqrt(bs)
+    w = B.make_bsm(wb, eye)
+
+    # the drifting batch stream: per-batch routed dispatch masks
+    masks = [dispatch_mask(nb_tok, n_experts, top_k, tpb, jax.random.key(s))
+             for s in range(batches)]
+    stream = []
+    for s, m in enumerate(masks):
+        blocks = jax.random.normal(jax.random.key(100 + s),
+                                   (nb_tok, n_experts, bs, bs)) / np.sqrt(bs)
+        stream.append(B.make_bsm(blocks, m))
+    env = E.union_envelope(masks, [eye])
+    assert all(env.covers(m, eye) for m in masks)
+
+    # ---- correctness + one-trace gate across the whole drifting stream --
+    plan_mod.clear_cache()
+    _multiply_reference_jit.clear_cache()
+    for a in stream:
+        got = multiply(a, w, backend="stacks", envelope=env)
+        want = multiply(a, w, backend="stacks")
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   np.asarray(want.to_dense()),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got.mask),
+                                      np.asarray(want.mask))
+    env_traces = int(_multiply_reference_jit._cache_size())
+    stats = plan_mod.cache_stats()
+    assert env_traces == 1, (
+        f"the envelope stream must execute through ONE traced program, "
+        f"traced {env_traces}")
+    assert stats["drift_retunes"] == 0, stats
+    # the baseline walked one pattern per batch; the envelope path none
+    assert stats["pattern_misses"] >= batches, stats
+
+    # ---- warm dispatch: envelope stream vs per-pattern retrace ----------
+    def env_pass():
+        for a in stream:
+            out = multiply(a, w, backend="stacks", envelope=env)
+        jax.block_until_ready(out.blocks)
+
+    def retrace_pass():
+        for a in stream:
+            out = multiply(a, w, backend="stacks")
+        jax.block_until_ready(out.blocks)
+
+    env_pass(), retrace_pass()  # warm every cache level
+    ratios, env_best, retrace_best = [], float("inf"), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        retrace_pass()
+        tr = (time.perf_counter() - t0) / batches
+        t0 = time.perf_counter()
+        env_pass()
+        te = (time.perf_counter() - t0) / batches
+        env_best, retrace_best = min(env_best, te), min(retrace_best, tr)
+        ratios.append(tr / te)
+    ratio = sorted(ratios)[len(ratios) // 2]
+
+    occ_rows = run()
+    report = {
+        "bench": "moe_spgemm_envelope_stream",
+        "backend": jax.default_backend(),
+        "nb_tok": nb_tok,
+        "n_experts": n_experts,
+        "top_k": top_k,
+        "bs": bs,
+        "batches": batches,
+        "stream_occupancy": float(np.mean([m.mean() for m in masks])),
+        "envelope_fill": float(np.asarray(env.mask_a).mean()),
+        "envelope_traces": env_traces,
+        "envelope_per_batch_ms": env_best * 1e3,
+        "retrace_per_batch_ms": retrace_best * 1e3,
+        "warm_dispatch_ratio": ratio,
+        "paired_ratios": ratios,
+        "cache": plan_mod.cache_stats(),
+        "occupancy": {name: val for name, val, _ in occ_rows},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"bench/moe_spgemm/envelope_traces,{env_traces},one program for "
+          f"{batches} drifting batches")
+    print(f"bench/moe_spgemm/envelope_per_batch_ms,{env_best * 1e3:.3f},")
+    print(f"bench/moe_spgemm/retrace_per_batch_ms,{retrace_best * 1e3:.3f},")
+    print(f"bench/moe_spgemm/warm_dispatch_ratio,{ratio:.2f},"
+          f"retrace/envelope (median of {reps} paired reps)")
+    print(f"wrote {args.out}")
+
+
 if __name__ == "__main__":
     check()
     for name, val, note in run():
         print(f"{name},{val},{note}")
+    main()

@@ -69,13 +69,9 @@ def _is_concrete(*arrays) -> bool:
 def _host_pair_filter(a: BlockSparseMatrix, b: BlockSparseMatrix,
                       threshold: float) -> np.ndarray:
     """Concrete (i, k, j) filter cube on the host (numpy)."""
-    am, bm = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
-    ok = am[:, :, None] & bm[None, :, :]
-    if threshold > 0.0:
-        an = np.asarray(a.norms, np.float32)
-        bn = np.asarray(b.norms, np.float32)
-        ok &= an[:, :, None] * bn[None, :, :] > threshold
-    return ok
+    from repro.kernels.stacks import pair_cube
+
+    return pair_cube(a.mask, b.mask, a.norms, b.norms, threshold)
 
 
 def choose_backend(a: BlockSparseMatrix, b: BlockSparseMatrix,
@@ -223,6 +219,7 @@ def multiply(
     interpret: bool | None = None,
     transport=None,
     assignment=None,
+    envelope=None,
 ) -> BlockSparseMatrix | ShardedBSM:
     """Distributed filtered C = A . B.
 
@@ -267,6 +264,21 @@ def multiply(
                  carry their layout from ``shard_bsm`` and an explicit
                  value here can only confirm it.  Requires a mesh —
                  single-device multiplies have no devices to balance.
+    envelope   — optional ``core.envelope.Envelope``: derive every
+                 pattern-dependent static (stack capacity, transport
+                 capacities, the auto-backend fill) from the envelope
+                 instead of walking THIS call's concrete pattern.  A
+                 stream of drifting patterns inside one envelope then
+                 shares one compiled program (stable capacity buckets,
+                 no per-call host cube walk) — the concrete mask does
+                 the per-call work as data.  Concrete operands are
+                 checked against the envelope (cheap 2D subset test); a
+                 pattern that escaped it falls back to the exact
+                 per-pattern derivation and counts ``drift_retunes`` in
+                 ``cache_stats()``.  Traced operands trust the envelope
+                 (there is no concrete pattern to check — the caller
+                 guarantees coverage, as fused chains do by
+                 construction).
 
     ShardedBSM operands take the device-resident path: the multiply runs
     on the shards (``plan.execute_sharded``) and returns a ShardedBSM —
@@ -277,6 +289,17 @@ def multiply(
         raise ValueError(
             f"unknown engine {engine!r}; one of {ENGINES} or 'auto'"
         )
+    env = envelope
+    if (
+        env is not None
+        and _is_concrete(a.mask, b.mask)
+        and not env.covers(np.asarray(a.mask, bool),
+                           np.asarray(b.mask, bool))
+    ):
+        # the pattern drifted out of its envelope: abandon the warm path
+        # and re-derive everything exactly for this call
+        plan_mod.note_drift_retune()
+        env = None
     # None = the caller left the backend open: static engines get the
     # historical "jnp" default, the tuner gets the full backend space
     pinned = backend if backend not in (None, "auto") else None
@@ -305,7 +328,7 @@ def multiply(
                 a, b, a.mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
                 transport=_transport_pin(transport),
-                assign="identity",
+                assign="identity", envelope=env,
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
@@ -318,23 +341,33 @@ def multiply(
                 # the static crossover and could contradict the trials
                 transport = dec.transport
         elif backend == "auto":
-            # the auto heuristic walks the concrete pattern on the host —
-            # a round-trip the device-resident path exists to avoid
-            backend = "jnp"
-        if (
-            backend in ("stacks", "pallas")
-            and stack_capacity is None
-            and _is_concrete(a.mask, a.norms, b.mask, b.norms)
-        ):
-            # sound per-device bound from the concrete (and, under a
-            # non-identity assignment, already-permuted) shard masks —
-            # without it the compacted program pads every device to the
-            # full cube and the balanced layout's smaller hot device
-            # buys nothing.  Costs the same per-call host mask sync the
-            # auto transport resolution below already pays; pass an
-            # explicit stack_capacity to skip it.
-            stack_capacity = plan_mod.get_device_capacity(
-                _host_pair_filter(a, b, threshold), a.mesh, engine)
+            if env is not None:
+                # envelope fill decides without touching device masks
+                backend = choose_backend(a, b, threshold,
+                                         ok=np.asarray(env.cube))
+            else:
+                # the auto heuristic walks the concrete pattern on the
+                # host — a round-trip the device-resident path avoids
+                backend = "jnp"
+        if backend in ("stacks", "pallas") and stack_capacity is None:
+            if env is not None:
+                # envelope capacity: stable across the whole drifting
+                # stream (one program), no per-call mask sync
+                stack_capacity = plan_mod.get_device_capacity(
+                    env.cube, a.mesh, engine)
+            elif _is_concrete(a.mask, a.norms, b.mask, b.norms):
+                # sound per-device bound from the concrete (and, under a
+                # non-identity assignment, already-permuted) shard masks
+                # — without it the compacted program pads every device to
+                # the full cube and the balanced layout's smaller hot
+                # device buys nothing.  Costs the same per-call host mask
+                # sync the auto transport resolution below already pays;
+                # pass an explicit stack_capacity to skip it.
+                stack_capacity = plan_mod.get_device_capacity(
+                    _host_pair_filter(a, b, threshold), a.mesh, engine)
+        if env is not None:
+            transport = _envelope_transport(
+                env.mask_a, env.mask_b, transport, a.mesh, engine, l)
         c = plan_mod.execute_sharded(
             a, b, engine,
             threshold=threshold, backend=backend, l=l,
@@ -360,7 +393,7 @@ def multiply(
                 a, b, mesh, threshold=threshold, backend=pinned,
                 l=l, interpret=interpret,
                 transport=_transport_pin(transport),
-                assign=_assign_pin(assignment),
+                assign=_assign_pin(assignment), envelope=env,
             )
             engine, l, backend = dec.engine, dec.l, dec.backend
             if stack_capacity is None:
@@ -379,38 +412,59 @@ def multiply(
     if mesh is not None:
         asg = plan_mod.resolve_assignment(assignment, a, b, mesh)
     # one host walk of the concrete filter cube serves both the auto
-    # heuristic and the distributed capacity bound
+    # heuristic and the distributed capacity bound; an envelope replaces
+    # the walk entirely (its union cube is the bound for the stream)
     ok_np = None
     if (
-        (backend == "auto" or (backend in ("stacks", "pallas")
-                               and mesh is not None
-                               and stack_capacity is None))
+        env is None
+        and (backend == "auto" or (backend in ("stacks", "pallas")
+                                   and mesh is not None
+                                   and stack_capacity is None))
         and _is_concrete(a.mask, a.norms, b.mask, b.norms)
     ):
         ok_np = _host_pair_filter(a, b, threshold)
     if backend == "auto":
-        backend = choose_backend(a, b, threshold, ok=ok_np)
+        backend = choose_backend(
+            a, b, threshold,
+            ok=np.asarray(env.cube) if env is not None else ok_np,
+        )
     if mesh is None:
+        if (
+            env is not None
+            and backend in ("stacks", "pallas")
+            and stack_capacity is None
+        ):
+            # static envelope capacity routes the whole stream through
+            # one traced compacted program (mask-as-data, no host walks)
+            stack_capacity = env.local_capacity()
         c = multiply_reference(
             a, b, threshold=threshold, backend=backend,
             stack_capacity=stack_capacity, tile=tile, interpret=interpret,
             ok=ok_np,
         )
     else:
-        if (
-            backend in ("stacks", "pallas")
-            and stack_capacity is None
-            and ok_np is not None
-        ):
+        if backend in ("stacks", "pallas") and stack_capacity is None:
             # capacity must cover the PERMUTED pattern's hottest device —
             # the layout the engine actually partitions
-            ok_cap = ok_np
-            if asg is not None:
-                from repro.core.distribute import permute_cube
+            ok_cap = None
+            if env is not None:
+                ok_cap = np.asarray(env.cube)
+            elif ok_np is not None:
+                ok_cap = ok_np
+            if ok_cap is not None:
+                if asg is not None:
+                    from repro.core.distribute import permute_cube
 
-                ok_cap = permute_cube(ok_np, asg.perm)
-            stack_capacity = plan_mod.get_device_capacity(ok_cap, mesh,
-                                                          engine)
+                    ok_cap = permute_cube(ok_cap, asg.perm)
+                stack_capacity = plan_mod.get_device_capacity(
+                    ok_cap, mesh, engine)
+        if env is not None:
+            em_a, em_b = env.mask_a, env.mask_b
+            if asg is not None:
+                p = np.asarray(asg.perm)
+                em_a, em_b = em_a[p][:, p], em_b[p][:, p]
+            transport = _envelope_transport(
+                em_a, em_b, transport, mesh, engine, l)
         c = plan_mod.execute(
             a, b, mesh, engine,
             threshold=threshold, backend=backend, c_layout=c_layout, l=l,
@@ -421,6 +475,35 @@ def multiply(
     if eps > 0.0:
         c = filter_bsm(c, eps)
     return c
+
+
+def _envelope_transport(mask_a, mask_b, transport, mesh, engine: str,
+                        l: int | None):
+    """Resolve a transport spec against ENVELOPE operand-mask unions.
+
+    Capacities derived from the unions cover every panel any pattern in
+    the stream can ship and stay constant across it — one compiled
+    program instead of per-call derivation from the concrete masks (and
+    no per-call host mask sync on the sharded path).  A ready
+    ``PanelTransport`` passes through untouched."""
+    from repro.core import transport as T
+
+    if isinstance(transport, T.PanelTransport):
+        return transport
+    if transport is None:
+        from repro.config import transport_mode
+
+        mode = transport_mode()
+    else:
+        mode = transport
+    if mode == "dense":
+        return T.DENSE
+    if mode not in ("auto", "compressed"):
+        raise ValueError(
+            f"unknown transport {mode!r}; a PanelTransport or one of "
+            "auto | dense | compressed"
+        )
+    return plan_mod.get_transport(mask_a, mask_b, mesh, engine, l, mode)
 
 
 def _transport_pin(transport) -> str | None:

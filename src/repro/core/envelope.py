@@ -1,0 +1,266 @@
+"""Pattern-envelope forecasting: compile once for a whole drifting chain.
+
+Purification physically changes the sparsity pattern every sweep — the
+mask product fills blocks in, the threshold filter decays them — and the
+paper's central empirical point is that this *effective fill-in upon
+multiplication* decides performance.  Our fused chains (DESIGN.md §5)
+trace one program while the pattern evolves underneath it, which is why
+they pin the dense local backend and dense transport: a static compacted
+capacity taken from the initial pattern would silently drop fill-in
+products mid-iteration (``tuner.model.chain_safe``).
+
+This module removes that restriction by forecasting.  ``forecast_chain``
+propagates a *symbolic* (mask, norm-bound) pair through the Newton-Schulz
+recurrence X <- 1/2 X (3I - X^2) in float64 — thresholded boolean
+mask-product powers, the machinery of ``tuner/features.py`` — and returns
+an :class:`Envelope`: an over-approximation of every per-sweep pattern
+the realized chain can visit.  The plan layer then derives *sound static
+capacities* from the envelope (stack product lists, transport packing
+bounds), compiles ONE program against them, and the concrete per-sweep
+mask enters as runtime *data* — the existing traced-capable mask-AND
+inside ``compact_pair_mask`` / ``pack_panel`` does the per-sweep work.
+A whole drifting-pattern chain then executes with ``builds == 1`` and
+zero host-side stack regeneration, which is DBCSR's cheap per-multiply
+stack regeneration (arXiv:1910.13555) amortized to *zero* per-multiply
+host work, and the ahead-of-execution sparsity-structure prediction of
+Hong et al. (arXiv:2408.14558) applied to a whole iteration.
+
+Soundness
+---------
+
+The forecast is inductive.  Write ``m_s`` / ``n_s`` for the realized mask
+and per-block Frobenius norms entering sweep ``s`` and ``M_s`` / ``N_s``
+for the symbolic pair.  Invariant: ``m_s <= M_s`` (bitwise) and
+``n_s <= (1 + eps_s) N_s`` elementwise, where ``eps_s`` is the
+accumulated floating-point slack.  Each propagation step preserves it:
+
+* a product survives the realized on-the-fly filter only if
+  ``n_ik n_kj > threshold``; the symbolic filter keeps every product with
+  ``N_ik N_kj > threshold / (1 + margin)``, so as long as
+  ``(1 + eps_s)^2 <= 1 + margin`` the realized survivor set is a subset;
+* the symbolic result bound ``N2_ij = sum_k N_ik N_kj`` over surviving
+  products dominates the realized block norm by the triangle inequality;
+* ``Y = 3I - X^2`` bounds as ``N2 + 3 sqrt(bs)`` on the diagonal
+  (``||3 I_bs||_F = 3 sqrt(bs)``) and ``N2`` elsewhere;
+* the post-multiplication filter compares against
+  ``filter_eps / (1 + margin)`` *before* the exact 0.5 scale, mirroring
+  the realized order in ``signiter._make_sweep``.
+
+``margin`` absorbs the floating-point slack: realized f32 norms are
+computed from realized f32 data, so they can exceed the exact-arithmetic
+bound by accumulated rounding.  The default (5%) is generous for f32
+chains of practical depth; reduced-precision storage (bf16) quantizes
+every stored block per sweep and can need a larger margin on deep chains
+— the parameter is exposed for exactly that reason.  Products *near* the
+effective thresholds are kept either way, so a larger margin only makes
+the envelope looser, never unsound.
+
+``union_envelope`` is the stream-shaped constructor (no recurrence):
+given a family of concrete operand masks — serving traffic, MoE expert
+dispatch where no two batches share an exact mask — the envelope is the
+mask union and its product cube, sound for any threshold (the norm
+filter only removes products).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+
+import numpy as np
+
+# default floating-point slack absorbed by the effective thresholds (see
+# the module docstring); 0 disables the relaxation (exact-arithmetic
+# envelope, only sound for exact realized chains)
+DEFAULT_MARGIN = 0.05
+
+
+def _frozen(arr: np.ndarray) -> np.ndarray:
+    arr = np.ascontiguousarray(arr)
+    arr.flags.writeable = False
+    return arr
+
+
+@dataclass(frozen=True)
+class Envelope:
+    """Over-approximating pattern envelope of a multiply chain/stream.
+
+    ``mask_a`` / ``mask_b``  — 2D bool unions of every left / right
+        operand mask a chain multiply can ship (transport capacities).
+    ``cube``                 — (nb_r, nb_k, nb_c) bool union of every
+        per-multiply surviving-product cube (stack capacities).
+    ``sweep_masks``          — per-sweep forecast result masks of a
+        ``forecast_chain`` envelope (the per-sweep over-approximations
+        the property tests check realized masks against); empty for
+        stream envelopes.
+    ``threshold`` / ``filter_eps`` / ``margin`` — the chain spec the
+        forecast ran under (0 / 0 / 0 for stream envelopes).
+    """
+
+    mask_a: np.ndarray
+    mask_b: np.ndarray
+    cube: np.ndarray
+    sweep_masks: tuple = ()
+    threshold: float = 0.0
+    filter_eps: float = 0.0
+    margin: float = 0.0
+
+    @cached_property
+    def signature(self) -> bytes:
+        """Digest identifying this envelope (decision-cache key part)."""
+        import hashlib
+
+        from repro.kernels.stacks import pattern_signature
+
+        h = hashlib.sha1(b"envelope")
+        h.update(pattern_signature(self.cube))
+        h.update(pattern_signature(self.mask_a))
+        h.update(pattern_signature(self.mask_b))
+        h.update(np.float64([self.threshold, self.filter_eps,
+                             self.margin]).tobytes())
+        return h.digest()
+
+    def covers(self, mask_a, mask_b=None) -> bool:
+        """Whether a concrete operand pattern lies inside the envelope —
+        the cheap (2D, no cube walk) drift check the engine runs before
+        trusting envelope-derived capacities."""
+        am = np.asarray(mask_a, bool)
+        if am.shape != self.mask_a.shape or not (am <= self.mask_a).all():
+            return False
+        if mask_b is None:
+            return True
+        bm = np.asarray(mask_b, bool)
+        return bm.shape == self.mask_b.shape and bool((bm <= self.mask_b).all())
+
+    def local_capacity(self) -> int:
+        """Bucketed single-device stack capacity covering every multiply
+        of the chain (the union cube's product count)."""
+        from repro.kernels.stacks import bucket_capacity
+
+        return bucket_capacity(int(self.cube.sum()))
+
+    def device_capacity(self, mesh, engine: str) -> int:
+        """Bucketed per-device stack capacity over the envelope cube —
+        sound for every sweep because capacity bounds are monotone in the
+        cube (``plan.get_device_capacity``, LRU-cached on the envelope's
+        pattern signature like any concrete cube)."""
+        from repro.core import plan as plan_mod
+
+        return plan_mod.get_device_capacity(self.cube, mesh, engine)
+
+    def transport(self, mesh, engine: str, l: int | None = None,
+                  mode: str = "auto"):
+        """Panel transport resolved against the envelope's operand-mask
+        unions: packing capacities that cover every panel any sweep can
+        ship (``plan.get_transport`` — monotone in the masks)."""
+        from repro.core import plan as plan_mod
+
+        return plan_mod.get_transport(self.mask_a, self.mask_b, mesh,
+                                      engine, l, mode)
+
+
+def forecast_chain(
+    mask,
+    norms,
+    *,
+    sweeps: int,
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    bs: int = 1,
+    margin: float = DEFAULT_MARGIN,
+) -> Envelope:
+    """Symbolic fill-in forecast of ``sweeps`` Newton-Schulz sweeps.
+
+    ``mask`` / ``norms`` — the concrete pattern entering the chain (post
+    spectral scale, post storage cast: the operand the first sweep
+    actually multiplies).  ``bs`` — the square block edge (the identity
+    block's Frobenius norm is ``sqrt(bs)``).  Returns the
+    :class:`Envelope` whose cube / mask unions cover every multiply of
+    the chain and whose ``sweep_masks[s]`` covers the realized result
+    mask of sweep ``s`` (see the module docstring for the invariant).
+    """
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if margin < 0.0:
+        raise ValueError(f"margin must be >= 0, got {margin}")
+    m = np.asarray(mask, bool)
+    if m.ndim != 2 or m.shape[0] != m.shape[1]:
+        raise ValueError(f"chain forecasting needs a square 2D mask, "
+                         f"got shape {m.shape}")
+    n = np.where(m, np.asarray(norms, np.float64), 0.0)
+    nb = m.shape[0]
+    # norm-bound ceiling: propagated bounds grow ~3x per sweep and would
+    # overflow float64 on long chains.  Clipping DOWN stays sound because
+    # any REALIZED norm is a finite float32 (<= ~3.4e38 << _NORM_CAP): a
+    # clipped bound still dominates every value the filters compare, and
+    # products of two capped bounds stay finite (1e200 < float64 max).
+    _NORM_CAP = 1e100
+    eye = np.eye(nb, dtype=bool)
+    ident_norm = 3.0 * np.sqrt(float(bs))
+    thr_eff = threshold / (1.0 + margin)
+    eps_eff = filter_eps / (1.0 + margin)
+
+    def product_cube(lm, ln, rm, rn):
+        ok = lm[:, :, None] & rm[None, :, :]
+        if threshold > 0.0:
+            ok &= ln[:, :, None] * rn[None, :, :] > thr_eff
+        return ok
+
+    def contract(ok, ln, rn):
+        cm = ok.any(axis=1)
+        cn = np.where(ok, ln[:, :, None] * rn[None, :, :], 0.0).sum(axis=1)
+        cn = np.minimum(cn, _NORM_CAP)
+        if filter_eps > 0.0:
+            keep = cm & (cn > eps_eff)
+            cm, cn = keep, np.where(keep, cn, 0.0)
+        return cm, cn
+
+    cube = np.zeros((nb, nb, nb), bool)
+    union_a = m.copy()
+    union_b = m.copy()
+    sweep_masks = []
+    for _ in range(sweeps):
+        # multiply 1: X . X (+ post-filter, the realized sweep's order)
+        ok = product_cube(m, n, m, n)
+        x2m, x2n = contract(ok, n, n)
+        # Y = 3I - X^2: diagonal blocks gain the identity's norm bound
+        ym = x2m | eye
+        yn = x2n + ident_norm * eye
+        # multiply 2: X . Y, post-filter BEFORE the exact 0.5 scale
+        ok2 = product_cube(m, n, ym, yn)
+        cm, cn = contract(ok2, n, yn)
+        cube |= ok | ok2
+        union_a |= m
+        union_b |= m | ym
+        m, n = cm, 0.5 * cn
+        sweep_masks.append(_frozen(m))
+    return Envelope(
+        mask_a=_frozen(union_a),
+        mask_b=_frozen(union_b),
+        cube=_frozen(cube),
+        sweep_masks=tuple(sweep_masks),
+        threshold=float(threshold),
+        filter_eps=float(filter_eps),
+        margin=float(margin),
+    )
+
+
+def union_envelope(masks_a, masks_b=None) -> Envelope:
+    """Stream envelope: the union of a family of concrete operand masks.
+
+    ``masks_a`` — iterable of (nb_r, nb_k) left-operand masks (serving
+    batches, MoE dispatch patterns); ``masks_b`` — right-operand masks
+    (defaults to ``masks_a``, the A @ A stream).  The cube is the product
+    cube of the unions — sound for any threshold, since the norm filter
+    only ever removes products from the presence cube.
+    """
+    from repro.tuner.features import mask_union
+
+    ua = mask_union(masks_a)
+    ub = ua if masks_b is None else mask_union(masks_b)
+    if ua.shape[1] != ub.shape[0]:
+        raise ValueError(
+            f"operand mask unions do not chain: {ua.shape} @ {ub.shape}"
+        )
+    cube = ua[:, :, None] & ub[None, :, :]
+    return Envelope(mask_a=_frozen(ua), mask_b=_frozen(ub),
+                    cube=_frozen(cube))

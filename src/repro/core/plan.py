@@ -413,6 +413,9 @@ class CacheStats:
     transport_compressed: int = 0  # ... that chose compressed panels
     assign_hits: int = 0  # block-assignment resolutions served from cache
     assign_misses: int = 0  # resolutions that derived a permutation
+    envelope_hits: int = 0  # chain-envelope forecasts served from cache
+    envelope_misses: int = 0  # forecasts that ran the symbolic propagation
+    drift_retunes: int = 0  # pattern drift that forced a re-tune/re-derive
 
     def as_dict(self) -> dict:
         return {
@@ -433,6 +436,9 @@ class CacheStats:
             "transport_compressed": self.transport_compressed,
             "assign_hits": self.assign_hits,
             "assign_misses": self.assign_misses,
+            "envelope_hits": self.envelope_hits,
+            "envelope_misses": self.envelope_misses,
+            "drift_retunes": self.drift_retunes,
         }
 
 
@@ -442,6 +448,7 @@ _pattern_cache: OrderedDict[bytes, tuple] = OrderedDict()
 _bound_cache: OrderedDict[tuple, int] = OrderedDict()
 _transport_cache: OrderedDict[tuple, object] = OrderedDict()
 _assign_cache: OrderedDict[tuple, object] = OrderedDict()
+_envelope_cache: OrderedDict[tuple, object] = OrderedDict()
 _stats = CacheStats()
 
 
@@ -472,6 +479,7 @@ def clear_cache() -> None:
     _bound_cache.clear()
     _transport_cache.clear()
     _assign_cache.clear()
+    _envelope_cache.clear()
     plan_multiply.cache_clear()
     for fn in _extra_caches:
         fn()
@@ -482,6 +490,8 @@ def clear_cache() -> None:
     _stats.transport_hits = _stats.transport_misses = 0
     _stats.transport_dense = _stats.transport_compressed = 0
     _stats.assign_hits = _stats.assign_misses = 0
+    _stats.envelope_hits = _stats.envelope_misses = 0
+    _stats.drift_retunes = 0
 
 
 # ---------------------------------------------------------------------------
@@ -610,11 +620,7 @@ def get_transport(
         return hit
     _stats.transport_misses += 1
     plan = plan_multiply(mesh, engine, l)
-    (ar, ac), (br, bc) = T.plan_panel_parts(plan)
-    cap_a = T.bucket(T.panel_nnz_bound(am, ar, ac))
-    cap_b = T.bucket(T.panel_nnz_bound(bm, br, bc))
-    blocks_a = (am.shape[0] // ar) * (am.shape[1] // ac)
-    blocks_b = (bm.shape[0] // br) * (bm.shape[1] // bc)
+    cap_a, cap_b, blocks_a, blocks_b = T.capacities_for(am, bm, plan)
     resolved = T.resolve_mode(mode, cap_a, cap_b, blocks_a, blocks_b)
     if resolved == "compressed":
         tr = T.PanelTransport("compressed", cap_a, cap_b)
@@ -779,6 +785,66 @@ def resolve_assignment(spec, a, b, mesh):
     asg.validate(a.nb_r, a.nb_c)
     asg.validate(b.nb_r, b.nb_c)
     return None if asg.is_identity else asg
+
+
+def get_envelope(
+    mask,
+    norms,
+    *,
+    sweeps: int,
+    threshold: float = 0.0,
+    filter_eps: float = 0.0,
+    bs: int = 1,
+    margin: float | None = None,
+):
+    """Forecast (or fetch) the pattern envelope of a purification chain.
+
+    LRU-caches :func:`repro.core.envelope.forecast_chain` on the digest of
+    the concrete entering pattern (mask bits + norm bytes) and the chain
+    spec, so a serving loop that re-runs the same chain — or the warm
+    sweeps of one iteration — pays the symbolic propagation exactly once.
+    Counted by ``envelope_hits`` / ``envelope_misses`` in
+    ``cache_stats()``.
+    """
+    import hashlib
+
+    import numpy as np
+
+    from repro.core import envelope as E
+
+    if margin is None:
+        margin = E.DEFAULT_MARGIN
+    am = np.ascontiguousarray(np.asarray(mask, bool))
+    an = np.ascontiguousarray(np.asarray(norms, np.float32))
+    h = hashlib.sha1(np.packbits(am).tobytes())
+    h.update(an.tobytes())
+    key = (
+        "envelope", h.digest(), am.shape, int(sweeps), float(threshold),
+        float(filter_eps), int(bs), float(margin),
+    )
+    hit = _envelope_cache.get(key)
+    if hit is not None:
+        _stats.envelope_hits += 1
+        _envelope_cache.move_to_end(key)
+        return hit
+    _stats.envelope_misses += 1
+    env = E.forecast_chain(
+        am, an, sweeps=sweeps, threshold=threshold, filter_eps=filter_eps,
+        bs=bs, margin=margin,
+    )
+    _envelope_cache[key] = env
+    if len(_envelope_cache) > _CACHE_MAXSIZE:
+        _envelope_cache.popitem(last=False)
+        _stats.evictions += 1
+    return env
+
+
+def note_drift_retune() -> None:
+    """Count one drift-forced re-resolution (``drift_retunes``): a
+    concrete pattern escaped its envelope, or a tuned decision stream's
+    coarse feature bucket changed — either way the warm path was
+    abandoned and capacities/modes were re-derived."""
+    _stats.drift_retunes += 1
 
 
 def get_local_compiled(

@@ -57,6 +57,10 @@ class SignIterStats:
     mode: str = "legacy"
     sync_every: int = 1
     host_syncs: int = 0  # device->host residual syncs (fused: ~it/sync_every)
+    retraces: int = 0  # program (re)builds this chain triggered: fused =
+    #   chain_misses delta (1 = whole chain ran one program), legacy =
+    #   per-multiply program misses delta
+    envelope: bool = False  # chain ran against a forecast pattern envelope
 
 
 def _scale_any(x, s):
@@ -65,15 +69,18 @@ def _scale_any(x, s):
 
 
 def _resolve_engine(x, mesh, engine: str, threshold: float,
-                    l: int | None) -> tuple[str, int | None]:
+                    l: int | None, envelope=None) -> tuple[str, int | None]:
     """``engine="auto"`` for an iteration: ONE tuner resolution on the
     initial pattern (X ~ X0 . X0, the purification's own multiply shape),
     then every sweep of the chain runs the chosen (engine, L).
 
-    Chains are tuned with ``chain=True``: only chain-safe candidates
-    (dense local backend) are considered, because the fused sweep is
-    traced once while the sparsity pattern evolves underneath it — see
-    ``tuner.model.chain_safe``.
+    Chains are tuned with ``chain=True``: without an envelope only
+    chain-safe candidates (dense local backend, dense transport) are
+    considered, because the fused sweep is traced once while the
+    sparsity pattern evolves underneath it — see
+    ``tuner.model.chain_safe``.  With ``envelope`` the capacities come
+    from the forecast union cube, which covers every sweep's pattern, so
+    the tuner ranks the full candidate space.
     """
     if engine != "auto":
         return engine, l
@@ -81,7 +88,8 @@ def _resolve_engine(x, mesh, engine: str, threshold: float,
         return "twofive", l  # single-device: the engine is vestigial
     from repro import tuner
 
-    dec = tuner.autotune(x, x, mesh, threshold=threshold, l=l, chain=True)
+    dec = tuner.autotune(x, x, mesh, threshold=threshold, l=l, chain=True,
+                         envelope=envelope)
     return dec.engine, dec.l
 
 
@@ -154,12 +162,18 @@ def _make_sweep(mm, dtype, filter_eps: float, *, total_blocks: int,
 
 
 def _sweep_key(mesh, engine, nb_r, nb_c, bs_r, bs_c, dtype, threshold,
-               filter_eps, backend, l, stack_capacity, tile, interpret):
-    return (
+               filter_eps, backend, l, stack_capacity, tile, interpret,
+               transport=None):
+    key = (
         "signiter", mesh, engine, nb_r, nb_c, bs_r, bs_c,
         jnp.dtype(dtype).name, float(threshold), float(filter_eps),
         backend, l, stack_capacity, tile, interpret,
     )
+    # appended ONLY for non-dense transport so pre-envelope chain keys
+    # (and everything that pins them) keep their original shape
+    if transport is not None and transport.mode != "dense":
+        key = key + (transport.key,)
+    return key
 
 
 def get_sweep_program(
@@ -174,6 +188,8 @@ def get_sweep_program(
     stack_capacity: int | None = None,
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
+    envelope=None,
+    transport=None,
 ):
     """The compiled fused sweep for (mesh, shape, engine, backend, ...),
     cached in the plan layer's program cache (``plan.get_chain_compiled``,
@@ -186,6 +202,15 @@ def get_sweep_program(
     run per-shard with no re-partitioning between them, so one sweep is
     one dispatch of one SPMD program — and one program build per distinct
     multiply shape, shared by both multiplies.
+
+    ``envelope`` (a ``core.envelope.Envelope``) lifts the chain-safety
+    pins: ``backend="auto"`` resolves against the envelope's union cube
+    through the analytic cost model, a ``None`` ``stack_capacity`` takes
+    the envelope's (bucketed) capacity, and non-dense ``transport``
+    resolves its per-panel capacities from the envelope's operand-mask
+    unions — all sound for every pattern the envelope covers, so the
+    chain still compiles exactly once.  Without an envelope the historic
+    pins stand: "auto" degrades to "jnp" and non-dense transport raises.
     """
     if engine == "auto":
         raise ValueError(
@@ -193,32 +218,75 @@ def get_sweep_program(
             "(sign_iteration does this via the tuner); the chain key "
             "must carry a concrete engine"
         )
-    if backend == "auto":
-        # auto walks the concrete pattern on the host; inside the fused
-        # (traced) sweep there is no concrete pattern — dense einsum it is
-        backend = "jnp"
-    # panel transport is pinned dense for the same reason: the sweep is
-    # traced once while the sparsity pattern evolves underneath it, so a
-    # compressed capacity derived from the initial pattern would silently
-    # drop fill-in blocks mid-iteration (chain safety — tuner.model.
-    # chain_safe).  Dense transport still gets the norm-free wire format
-    # and the double-buffered pipelining from the shared layer.
+    from repro.core import transport as T
+    if envelope is not None:
+        if backend == "auto":
+            # the envelope's union cube is the chain-wide fill bound:
+            # feed it through the same analytic crossover the tuner uses
+            from repro.tuner.model import choose_local_backend
+
+            backend = choose_local_backend(
+                x.nb_r, x.nb_c, x.nb_c, x.bs_r, x.bs_c, x.bs_c,
+                fill=float(envelope.cube.mean()),
+            )
+        if stack_capacity is None and backend in ("stacks", "pallas"):
+            stack_capacity = (
+                envelope.local_capacity() if mesh is None
+                else envelope.device_capacity(mesh, engine)
+            )
+        if mesh is not None and not isinstance(transport, T.PanelTransport):
+            mode = transport
+            if mode is None or mode == "dense":
+                transport = None  # dense inside build_shard_body
+            elif mode in ("auto", "compressed"):
+                transport = envelope.transport(mesh, engine, l, mode)
+            else:
+                raise ValueError(
+                    f"unknown transport {mode!r}; a PanelTransport or "
+                    "one of auto | dense | compressed"
+                )
+    else:
+        if backend == "auto":
+            # auto walks the concrete pattern on the host; inside the
+            # fused (traced) sweep there is no concrete pattern — dense
+            # einsum it is
+            backend = "jnp"
+        # without an envelope the panel transport is pinned dense for the
+        # same reason: the sweep is traced once while the sparsity
+        # pattern evolves underneath it, so a compressed capacity derived
+        # from the initial pattern would silently drop fill-in blocks
+        # mid-iteration (chain safety — tuner.model.chain_safe).  Dense
+        # transport still gets the norm-free wire format and the
+        # double-buffered pipelining from the shared layer.
+        if transport is not None and not (
+            isinstance(transport, T.PanelTransport)
+            and transport.mode == "dense"
+        ) and transport != "dense":
+            raise ValueError(
+                "non-dense chain transport needs an envelope: a static "
+                "packing capacity derived from the initial pattern would "
+                "silently drop fill-in panels mid-iteration "
+                "(core/envelope.py)"
+            )
+        transport = None
     if backend == "pallas" and interpret is None:
         from repro.kernels.ops import _default_interpret
 
         interpret = _default_interpret()
     key = _sweep_key(mesh, engine, x.nb_r, x.nb_c, x.bs_r, x.bs_c, x.dtype,
                      threshold, filter_eps, backend, l, stack_capacity,
-                     tile, interpret)
+                     tile, interpret, transport)
     mm_kw = dict(threshold=threshold, backend=backend,
                  stack_capacity=stack_capacity, tile=tile,
-                 interpret=interpret)
+                 interpret=interpret, transport=transport)
     total_blocks = x.nb_r * x.nb_c
 
     def builder():
         if mesh is None:
+            local_kw = {k: v for k, v in mm_kw.items() if k != "transport"}
+
             def mm(*args):
-                return local_filtered_mm(*args, **mm_kw)
+                return local_filtered_mm(*args, **local_kw)
 
             return jax.jit(_make_sweep(mm, x.dtype, filter_eps,
                                        total_blocks=total_blocks))
@@ -228,7 +296,8 @@ def get_sweep_program(
 
         plan = plan_mod.plan_multiply(mesh, engine, l)
         plan.validate_blocks(x.nb_r, x.nb_c)
-        # transport=None -> dense inside build_shard_body (chain-safe)
+        # transport=None -> dense inside build_shard_body (chain-safe);
+        # an envelope-resolved PanelTransport rides through untouched
         mm = plan_mod.build_shard_body(plan, **mm_kw)
         sweep = _make_sweep(mm, x.dtype, filter_eps,
                             total_blocks=total_blocks, psum_axes=("r", "c"))
@@ -345,6 +414,7 @@ def sign_iteration_legacy(
     n_mults = 0
     converged = False
     residual = float("inf")
+    misses0 = plan_mod.cache_stats()["misses"]
     it = 0
     for it in range(1, max_iter + 1):
         x2 = multiply(
@@ -381,6 +451,7 @@ def sign_iteration_legacy(
         mode="legacy",
         sync_every=1,
         host_syncs=it,
+        retraces=plan_mod.cache_stats()["misses"] - misses0,
     )
     return x, stats
 
@@ -404,6 +475,8 @@ def sign_iteration(
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     assignment=None,
+    envelope=None,
+    transport=None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """Newton-Schulz iteration X <- 1/2 X (3I - X^2) to sign(x0).
 
@@ -429,6 +502,21 @@ def sign_iteration(
                  (``kernels.ref`` documents the tolerance model).
     tile       — MXU tile override (tm, tk, tn) for the pallas backend
                  (None = ``kernels.block_spgemm.default_tile``).
+    envelope   — fused only: compile the chain against a forecast
+                 pattern envelope (DESIGN.md §7).  ``"auto"`` (or
+                 ``True``) forecasts it here from the finalized operand
+                 via ``plan.get_envelope`` (``sweeps=max_iter``); a
+                 ready ``core.envelope.Envelope`` is used as-is.  The
+                 envelope lifts the chain-safety pins: ``backend="auto"``
+                 resolves through the cost model against the union cube,
+                 compacted backends take the envelope's capacity bound,
+                 and non-dense ``transport`` becomes available — while
+                 the whole drifting-pattern chain still compiles ONCE
+                 (``stats.retraces == 1`` cold, 0 warm).
+    transport  — fused only: panel-transport mode for the sweep's
+                 multiplies ("auto" | "dense" | "compressed" or a ready
+                 ``PanelTransport``).  Non-dense modes require
+                 ``envelope`` (chain safety — see ``get_sweep_program``).
     assignment — block→device distribution for the WHOLE chain: resolved
                  ONCE at the shard boundary (None / a mode string / a
                  ``distribute.Assignment`` — see ``bsm.shard_bsm``).  The
@@ -449,6 +537,12 @@ def sign_iteration(
         if isinstance(x0, B.ShardedBSM):
             raise TypeError("legacy mode operates on replicated matrices; "
                             "unshard first (bsm.unshard_bsm)")
+        if envelope is not None or transport is not None:
+            raise ValueError(
+                "envelope/transport are fused-chain controls; the legacy "
+                "loop re-enters multiply() per pattern (pass them to "
+                "multiply directly if needed)"
+            )
         return sign_iteration_legacy(
             x0, mesh=mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, max_iter=max_iter, tol=tol,
@@ -474,7 +568,6 @@ def sign_iteration(
                 f"{B._assign_name(x0.assignment)}; unshard before "
                 f"iterating under a different layout"
             )
-    engine, l = _resolve_engine(x0, mesh, engine, threshold, l)
     nb, bs = x0.nb_r, x0.bs_r
     ident = B.identity(nb, bs, x0.dtype)
     if mesh is not None:
@@ -494,7 +587,24 @@ def sign_iteration(
         # norms recalibrated from the quantized blocks (bsm.astype)
         x = B.cast_bsm(x, storage_dtype)
         ident = B.cast_bsm(ident, storage_dtype)
+    env = envelope
+    if env is True or env == "auto":
+        # forecast from the FINALIZED operand (post-scale, post-cast, in
+        # chain layout): the envelope's norm bounds must dominate the
+        # norms the filters actually see.  One host sync of (mask, norms)
+        # at the chain boundary; plan.get_envelope memoizes the forecast.
+        import numpy as np
 
+        env = plan_mod.get_envelope(
+            np.asarray(x.mask, bool), np.asarray(x.norms, np.float32),
+            sweeps=max_iter, threshold=threshold, filter_eps=filter_eps,
+            bs=x.bs_r,
+        )
+    # engine resolution sees the finalized operand and the envelope: with
+    # one, autotune(chain=True) ranks the full candidate space
+    engine, l = _resolve_engine(x, mesh, engine, threshold, l, envelope=env)
+
+    chain_misses0 = plan_mod.cache_stats()["chain_misses"]
     sweep = None
     xb, xm, xn = x.blocks, x.mask, x.norms
     ib, im = ident.blocks, ident.mask
@@ -511,6 +621,7 @@ def sign_iteration(
             x, mesh, engine=engine, threshold=threshold,
             filter_eps=filter_eps, backend=backend, l=l,
             stack_capacity=stack_capacity, tile=tile, interpret=interpret,
+            envelope=env, transport=transport,
         )
         xb, xm, xn, res_d, occ_d = sweep(xb, xm, xn, ib, im)
         pending.append((res_d, occ_d))
@@ -542,6 +653,8 @@ def sign_iteration(
         mode="fused",
         sync_every=sync_every,
         host_syncs=syncs,
+        retraces=plan_mod.cache_stats()["chain_misses"] - chain_misses0,
+        envelope=env is not None,
     )
     return result, stats
 
@@ -562,6 +675,8 @@ def density_matrix(
     storage_dtype=None,
     tile: tuple[int, int, int] | None = None,
     assignment=None,
+    envelope=None,
+    transport=None,
 ) -> tuple[B.BlockSparseMatrix | B.ShardedBSM, SignIterStats]:
     """P = 1/2 (I - sign(H - mu I))  (paper Eq. (1) with S = I).
 
@@ -594,6 +709,8 @@ def density_matrix(
         storage_dtype=storage_dtype,
         tile=tile,
         assignment=assignment,
+        envelope=envelope,
+        transport=transport,
     )
     if sgn.dtype != ident.dtype:  # projector algebra in storage dtype
         ident = B.cast_bsm(ident, sgn.dtype)

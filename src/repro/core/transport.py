@@ -346,6 +346,24 @@ def bucket(n: int) -> int:
     return max(MIN_CAPACITY, bucket_capacity(n))
 
 
+def capacities_for(mask_a, mask_b, plan) -> tuple[int, int, int, int]:
+    """Bucketed per-panel packing capacities + panel block counts of one
+    (operand-mask pair, plan): ``(cap_a, cap_b, blocks_a, blocks_b)``.
+
+    The single derivation point behind ``plan.get_transport`` — monotone
+    in the masks, so capacities derived from a pattern *envelope* (the
+    union of every mask a chain can ship, ``core/envelope.py``) soundly
+    cover every concrete per-sweep panel."""
+    am = np.asarray(mask_a, bool)
+    bm = np.asarray(mask_b, bool)
+    (ar, ac), (br, bc) = plan_panel_parts(plan)
+    cap_a = bucket(panel_nnz_bound(am, ar, ac))
+    cap_b = bucket(panel_nnz_bound(bm, br, bc))
+    blocks_a = (am.shape[0] // ar) * (am.shape[1] // ac)
+    blocks_b = (bm.shape[0] // br) * (bm.shape[1] // bc)
+    return cap_a, cap_b, blocks_a, blocks_b
+
+
 def resolve_mode(
     mode: str, cap_a: int, cap_b: int, blocks_a: int, blocks_b: int
 ) -> str:

@@ -86,6 +86,27 @@ def product_count(pair_ok) -> int:
     return int(np.asarray(pair_ok).sum())
 
 
+def pair_cube(
+    mask_a, mask_b, norms_a=None, norms_b=None, threshold: float = 0.0
+) -> np.ndarray:
+    """Concrete (ni, nk, nj) pair-filter cube on the host (pure numpy).
+
+    Presence product of the operand masks, AND — when ``threshold`` is
+    active — the paper's norm-product screen ``|A_ik| |B_kj| > threshold``.
+    The single host-side derivation shared by ``engine.multiply`` (stack
+    capacities of one concrete multiply) and the envelope layer
+    (``core/envelope.py`` unions these cubes over a whole chain).
+    """
+    am = np.asarray(mask_a, bool)
+    bm = np.asarray(mask_b, bool)
+    ok = am[:, :, None] & bm[None, :, :]
+    if threshold > 0.0 and norms_a is not None:
+        an = np.asarray(norms_a, np.float32)
+        bn = np.asarray(norms_b, np.float32)
+        ok &= an[:, :, None] * bn[None, :, :] > threshold
+    return ok
+
+
 def pattern_signature(pair_ok) -> bytes:
     """Digest of a concrete (ni, nk, nj) filter cube — the plan-cache key
     for compacted product lists (repeated sparsity patterns hit)."""

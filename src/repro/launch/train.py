@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
         --steps 200 --mesh 1x1 --ckpt-dir /tmp/run1
 
-Production features (DESIGN.md §8):
+Production features (DESIGN.md §9):
   * auto-resume from the latest complete checkpoint (atomic, keep-k);
   * step-addressable data (restart regenerates the exact stream);
   * straggler watchdog: per-step wall clock vs an EMA threshold; slow steps

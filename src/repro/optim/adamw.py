@@ -2,7 +2,7 @@
 
 Pure pytree-in / pytree-out functions (no optax dependency — the container
 is offline).  Moment dtype is per-arch config: fp32 default, bf16 for the
-400B MoE where fp32 moments would not fit HBM (DESIGN.md §7); master params
+400B MoE where fp32 moments would not fit HBM (DESIGN.md §8); master params
 stay in the model dtype with fp32 update math.
 """
 from __future__ import annotations

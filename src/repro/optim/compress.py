@@ -1,6 +1,6 @@
 """Gradient compression with exact error feedback.
 
-Distributed-optimization trick for the 1000+-node regime (DESIGN.md §8):
+Distributed-optimization trick for the 1000+-node regime (DESIGN.md §9):
 the DP gradient all-reduce is the largest recurring collective; casting the
 payload to bf16 halves it.  Plain casting biases the update; *error
 feedback* (Seide et al. 2014; Karimireddy et al. 2019) keeps an fp32

@@ -1,6 +1,6 @@
 """Parameter / activation / cache sharding rules for the LM stack.
 
-Strategy (DESIGN.md §7):
+Strategy (DESIGN.md §8):
 
 * ``model`` axis — tensor parallel: d_ff of every MLP and expert, attention
   heads (where the head count divides), vocab dim of embedding & LM head.

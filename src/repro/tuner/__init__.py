@@ -92,6 +92,13 @@ class Decision:
 
 _CACHE_MAXSIZE = 128
 _decision_cache: OrderedDict[tuple, Decision] = OrderedDict()
+# pattern-delta detection (DESIGN.md §7): decisions re-usable while the
+# coarse feature bucket holds, keyed on the full DB key (bucket + mesh +
+# constraints); revalidated per pattern like a DB hit
+_bucket_cache: OrderedDict[tuple, Decision] = OrderedDict()
+# last bucket seen per decision *stream* (everything but the pattern):
+# a known stream changing bucket is pattern drift -> drift_retunes
+_stream_last_bucket: OrderedDict[tuple, tuple] = OrderedDict()
 _default_db: TuningDB | None = None
 
 
@@ -111,6 +118,8 @@ def _reset() -> None:
     """Drop all tuner state (registered with ``plan.clear_cache``)."""
     global _default_db
     _decision_cache.clear()
+    _bucket_cache.clear()
+    _stream_last_bucket.clear()
     _default_db = None
 
 
@@ -118,13 +127,17 @@ plan_mod.register_cache(_reset)
 
 
 def _constraints(engines, backends, l, chain: bool,
-                 transport: str | None, assign: str | None = None) -> tuple:
+                 transport: str | None, assign: str | None = None,
+                 envelope: bool = False) -> tuple:
     """Constraint part of the decision/DB key.  The transport and assign
-    elements are appended ONLY when the caller pinned a mode: the
-    unpinned (and chain-default) shapes keep their earlier short forms,
-    so a tuning DB persisted before the transport / distribution layers
+    elements are appended ONLY when the caller pinned a mode (and the
+    ``env`` marker only under an envelope): the unpinned (and
+    chain-default) shapes keep their earlier short forms, so a tuning DB
+    persisted before the transport / distribution / envelope layers
     still warm-hits — its records simply read as ``transport="dense"`` /
-    ``assign="identity"`` (``_db_candidate``)."""
+    ``assign="identity"`` (``_db_candidate``).  Envelope-resolved
+    decisions must never answer for exact-pattern resolutions (their
+    capacities come from different cubes), hence the marker."""
     base = (
         "chain" if chain else "mult",
         ",".join(engines) if engines else "*",
@@ -132,16 +145,20 @@ def _constraints(engines, backends, l, chain: bool,
         0 if l is None else int(l),
     )
     return (base + ((transport,) if transport else ())
-            + (("assign:" + assign,) if assign else ()))
+            + (("assign:" + assign,) if assign else ())
+            + (("env",) if envelope else ()))
 
 
 def _operand_key(a, b, mesh, constraints: tuple, threshold: float,
-                 budget: float, measure: bool, tdb) -> tuple:
+                 budget: float, measure: bool, tdb,
+                 extra: bytes | None = None) -> tuple:
     """Decision-cache key from the operand *masks and norms* — NOT the
     O(nb^3) filter cube, so a decision-cache hit costs two 2D digests
     (the cube is only materialized on the miss path).  Budget, mode and
     DB binding are part of the key: a decision made under one budget (or
-    analytically) must never answer for another."""
+    analytically) must never answer for another.  ``extra`` joins the
+    digest (the envelope signature: a decision resolved against one
+    envelope must never answer for another)."""
     import hashlib
 
     from repro.kernels.stacks import pattern_signature
@@ -151,6 +168,8 @@ def _operand_key(a, b, mesh, constraints: tuple, threshold: float,
     if threshold > 0.0:  # the filter cube depends on norms too
         h.update(np.asarray(a.norms, np.float32).tobytes())
         h.update(np.asarray(b.norms, np.float32).tobytes())
+    if extra is not None:
+        h.update(extra)
     return (h.digest(), mesh_signature(mesh), constraints,
             str(np.dtype(a.dtype)), float(threshold), float(budget),
             bool(measure), id(tdb) if tdb is not None else None)
@@ -267,6 +286,7 @@ def autotune(
     interpret: bool | None = None,
     transport: str | None = None,
     assign: str | None = None,
+    envelope=None,
 ) -> Decision:
     """Resolve ``(engine, L, backend, stack_capacity, transport,
     assignment)`` for one operand pair on one mesh.
@@ -283,21 +303,34 @@ def autotune(
     same reason enumerate skips it on dense-jnp — the layout cannot
     change dense uniform work).  ``measure=False`` stops after the
     analytic ranking (no device work — usable on abstract meshes).
+
+    ``envelope`` — optional ``core.envelope.Envelope``: capacities (and
+    the candidate ranking's fill) are derived from the envelope's union
+    cube instead of THIS pattern's filter cube, so the decision is sound
+    for — and stable across — every pattern the envelope covers.  With
+    ``chain=True`` this lifts the dense-backend/dense-transport pinning:
+    every candidate is chain-safe against an envelope
+    (``model.chain_safe``), which is what lets a fused drifting-pattern
+    chain run compacted backends and compressed transport.
     """
     if mesh is None:
         raise ValueError("autotune requires a mesh (the decision space is "
                          "the distributed engine/depth/backend choice)")
     from repro.core.engine import _host_pair_filter
 
-    backends = (backend,) if backend else (("jnp",) if chain else None)
-    transports = (transport,) if transport else (("dense",) if chain else None)
+    enveloped = envelope is not None
+    backends = (backend,) if backend else (
+        ("jnp",) if chain and not enveloped else None)
+    transports = (transport,) if transport else (
+        ("dense",) if chain and not enveloped else None)
     assigns = (assign,) if assign else (("identity",) if chain else None)
     constraints = _constraints(engines, backends, l, chain, transport,
-                               assign)
+                               assign, envelope=enveloped)
     budget = device_memory_budget() if budget_bytes is None else budget_bytes
     tdb = db if db is not None else _default_db
     key = _operand_key(a, b, mesh, constraints, threshold, budget,
-                       measure, tdb)
+                       measure, tdb,
+                       extra=envelope.signature if enveloped else None)
 
     hit = _decision_cache.get(key)
     if hit is not None:
@@ -306,17 +339,45 @@ def autotune(
         return hit
 
     feats = featurize(a, b, threshold)
-    ok = _host_pair_filter(a, b, threshold)
+    # every capacity below comes from this cube: the concrete pattern's
+    # filter cube, or the envelope's union cube (sound for the stream)
+    ok = np.asarray(envelope.cube) if enveloped else _host_pair_filter(
+        a, b, threshold)
     from repro.core.distribute import product_counts
 
-    counts = product_counts(np.asarray(a.mask, bool), np.asarray(b.mask, bool))
+    if enveloped:
+        counts = product_counts(envelope.mask_a, envelope.mask_b)
+    else:
+        counts = product_counts(np.asarray(a.mask, bool),
+                                np.asarray(b.mask, bool))
     db_key = make_key(feature_bucket(feats), mesh_signature(mesh),
                       constraints, feats.dtype)
+
+    # pattern-delta detection: the bucket history of this decision
+    # *stream* (same mesh/constraints/dtype/..., drifting patterns).  A
+    # known stream whose coarse bucket just changed is drift — whatever
+    # warm level catches it below, modes/capacities get re-derived.
+    stream = key[1:]
+    last = _stream_last_bucket.get(stream)
+    if last is not None and last != db_key:
+        plan_mod.note_drift_retune()
+    _stream_last_bucket[stream] = db_key
+    if len(_stream_last_bucket) > _CACHE_MAXSIZE:
+        _stream_last_bucket.popitem(last=False)
+
+    # the bucket cache additionally keys on the budget: a mode choice
+    # made under one Eq. (6) budget must never answer for another (the
+    # decision-cache invariant, kept at bucket granularity too)
+    bucket_key = (db_key, float(budget))
 
     def finish(dec: Decision) -> Decision:
         _decision_cache[key] = dec
         if len(_decision_cache) > _CACHE_MAXSIZE:
             _decision_cache.popitem(last=False)
+        _bucket_cache[bucket_key] = dec
+        _bucket_cache.move_to_end(bucket_key)
+        if len(_bucket_cache) > _CACHE_MAXSIZE:
+            _bucket_cache.popitem(last=False)
         return dec
 
     if tdb is not None:
@@ -327,7 +388,7 @@ def autotune(
                 cand is not None
                 and estimate_candidate(cand, mesh, feats,
                                        budget_bytes=budget).feasible
-                and (not chain or chain_safe(cand))
+                and (not chain or chain_safe(cand, envelope=enveloped))
             ):
                 plan_mod._stats.tuner_hits += 1
                 return finish(Decision(
@@ -339,13 +400,42 @@ def autotune(
                 ))
             # invalid here / stale (budget, constraints): fall through
 
+    bucket_hit = _bucket_cache.get(bucket_key)
+    if bucket_hit is not None:
+        # warm drift path: a new exact pattern landed in a bucket this
+        # stream already resolved — revalidate the remembered modes like
+        # a DB record (capacities ALWAYS re-derived from ``ok``)
+        cand = _db_candidate({
+            "engine": bucket_hit.engine, "l": bucket_hit.l,
+            "backend": bucket_hit.backend,
+            "transport": bucket_hit.transport,
+            "tile": (list(bucket_hit.tile)
+                     if bucket_hit.tile is not None else None),
+            "assign": bucket_hit.assign,
+        }, ok, mesh, feats, counts)
+        if (
+            cand is not None
+            and estimate_candidate(cand, mesh, feats,
+                                   budget_bytes=budget).feasible
+            and (not chain or chain_safe(cand, envelope=enveloped))
+        ):
+            plan_mod._stats.tuner_hits += 1
+            return finish(Decision(
+                engine=cand.engine, l=cand.l, backend=cand.backend,
+                stack_capacity=cand.stack_capacity, source="bucket",
+                measured_s=bucket_hit.measured_s,
+                transport=cand.transport, tile=cand.tile,
+                assign=cand.assign,
+            ))
+
     report = rank_candidates(
         mesh, feats, ok=ok, counts=counts, engines=engines,
         backends=backends, l=l, transports=transports, assigns=assigns,
         budget_bytes=budget, top_k=top_k if measure else 1,
     )
     if chain:
-        ranked = tuple(e for e in report.ranked if chain_safe(e.candidate))
+        ranked = tuple(e for e in report.ranked
+                       if chain_safe(e.candidate, envelope=enveloped))
         if not ranked:
             raise ValueError("no chain-safe candidate survives the prune")
         report = ModelReport(ranked=ranked, pruned=report.pruned)

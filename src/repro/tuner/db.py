@@ -27,6 +27,15 @@ hand (``tuner._db_assign``) and silently drops to identity when the
 symmetric permutation cannot be derived there (non-square block grid,
 ``nb % lcm(p_r, p_c) != 0``, unknown mode) — a bucket hit reuses the
 engine/backend choice rather than missing the whole record.
+
+Envelope-resolved decisions (``autotune(..., envelope=...)`` — fused
+drifting-pattern chains and traffic streams, DESIGN.md §7) live under
+their own constraint shape (an ``"env"`` marker element), so they never
+answer for exact-pattern resolutions: their capacities were derived from
+an envelope's union cube, and the mode-only persistence rule is what
+makes the records shareable across every pattern an envelope covers —
+capacities are re-derived from whichever cube (exact or envelope) the
+next resolution runs under.
 """
 from __future__ import annotations
 

@@ -100,17 +100,49 @@ def _canonical_imbalance(counts: np.ndarray) -> float:
     return load_imbalance(counts, g_r, g_c)
 
 
+def mask_product(mask_a, mask_b) -> np.ndarray:
+    """Integer boolean-mask product: products per C block.
+
+    One (nb_r, nb_k) x (nb_k, nb_c) int matmul instead of materializing
+    the (nb_r, nb_k, nb_c) filter cube — exact for threshold 0, an upper
+    bound otherwise (the norm filter only removes products).  The
+    mask-power machinery the envelope layer (``core/envelope.py``)
+    iterates to forecast chain fill-in.
+    """
+    am = np.asarray(mask_a, bool)
+    bm = np.asarray(mask_b, bool)
+    return am.astype(np.int64) @ bm.astype(np.int64)
+
+
+def mask_union(masks) -> np.ndarray:
+    """Bitwise union of a family of equal-shape boolean masks (the stream
+    side of the envelope layer: one bound covering every member)."""
+    it = iter(masks)
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("mask_union needs at least one mask") from None
+    out = np.asarray(first, bool).copy()
+    for m in it:
+        mm = np.asarray(m, bool)
+        if mm.shape != out.shape:
+            raise ValueError(
+                f"mask shapes differ: {mm.shape} vs {out.shape}"
+            )
+        out |= mm
+    return out
+
+
 def featurize(a, b, threshold: float = 0.0) -> PairFeatures:
     """Feature vector of a concrete BSM pair (host-side, no device work).
 
-    The product count comes from the integer mask product — one
-    (nb_r, nb_k) x (nb_k, nb_c) matmul instead of materializing the
-    (nb_r, nb_k, nb_c) filter cube, so featurizing stays cheap at block
-    grids far larger than the compaction path walks.
+    The product count comes from the integer mask product
+    (:func:`mask_product`), so featurizing stays cheap at block grids far
+    larger than the compaction path walks.
     """
     am = np.asarray(a.mask, bool)
     bm = np.asarray(b.mask, bool)
-    counts = am.astype(np.int64) @ bm.astype(np.int64)  # products per C block
+    counts = mask_product(am, bm)  # products per C block
     n_products = int(counts.sum())
     nb_r, nb_k = am.shape
     nb_c = bm.shape[1]

@@ -447,13 +447,19 @@ def choose_local_backend(
     return "pallas" if jax.default_backend() == "tpu" else "stacks"
 
 
-def chain_safe(cand: Candidate) -> bool:
+def chain_safe(cand: Candidate, *, envelope: bool = False) -> bool:
     """Whether a candidate is sound for a *fused iteration chain*: the
     sweep is traced once and the sparsity pattern evolves underneath it
     (fill-in), so a static stack capacity derived from the initial
     pattern could silently drop products mid-iteration — and a static
-    compressed-transport capacity could silently drop *panels*.  Only
-    the dense local backend with dense transport is chain-safe."""
+    compressed-transport capacity could silently drop *panels*.  Without
+    further information only the dense local backend with dense
+    transport is chain-safe.  Under ``envelope=True`` the capacities are
+    derived from a forecast pattern envelope that over-approximates
+    every per-sweep pattern (``core/envelope.py``), so *every* candidate
+    is chain-safe — the restriction the envelope layer exists to lift."""
+    if envelope:
+        return True
     return cand.backend == "jnp" and cand.transport == "dense"
 
 

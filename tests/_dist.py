@@ -300,11 +300,14 @@ def check_signiter_sharded():
     assert stats["builds"] == 1, stats
     assert stats["chain_misses"] == 1, stats
     assert stats["chain_hits"] == 9, stats
+    assert st.retraces == 1, st  # the whole chain traced ONE program
     # second chain on the same key: pure chain-cache hits, no new build
-    sign_iteration(x, mesh=mesh2, engine="onesided", threshold=1e-7,
-                   filter_eps=1e-6, max_iter=5, tol=0.0)
+    _, st_warm = sign_iteration(x, mesh=mesh2, engine="onesided",
+                                threshold=1e-7, filter_eps=1e-6,
+                                max_iter=5, tol=0.0)
     s2 = plan_mod.cache_stats()
     assert s2["builds"] == 1 and s2["chain_misses"] == 1, s2
+    assert st_warm.retraces == 0, st_warm  # warm chain: zero retraces
 
     # --- no global gather in the fused step (jaxpr/HLO of one sweep)
     for engine, mesh in (("onesided", mesh2), ("twofive", mesh3)):
@@ -336,6 +339,98 @@ def check_signiter_sharded():
     w = np.linalg.eigvalsh(dense)
     assert abs(float(trace(p)) - int((w < 0.0).sum())) < 0.05
     print("signiter_sharded OK")
+
+
+def check_envelope_sharded():
+    """Pattern-envelope chains on distributed meshes (DESIGN.md §7):
+
+    * a 10-sweep drifting-pattern purification compiled against the
+      forecast envelope runs builds == 1 / chain_misses == 1 /
+      st.retraces == 1, with compacted capacities derived from the
+      envelope's union cube — and matches the plain chain-safe fused
+      chain BIT-EXACT (same engine/backend: identical contraction
+      order, the envelope only pads the compacted product list with
+      zero-contribution slots);
+    * the envelope lifts the chain-safety pins: compressed panel
+      transport inside a fused chain, previously a hard error, now
+      packs against the envelope's operand-mask unions;
+    * warm path: a second chain over the same operand re-hits the
+      envelope cache (envelope_hits) and the chain program — zero
+      retraces, zero new builds;
+    * engine="auto" under an envelope ranks the full candidate space
+      and still keys ONE chain program.
+    """
+    from repro.core import bsm as B
+    from repro.core import plan as plan_mod
+    from repro.core.signiter import sign_iteration
+    from repro.launch.mesh import make_spgemm_mesh
+
+    mesh2 = make_spgemm_mesh(p=2)
+    mesh3 = make_spgemm_mesh(p=2, l=2)
+    x0 = B.random_bsm(jax.random.key(0), nb=8, bs=8, occupancy=0.3,
+                      pattern="decay", symmetric=True)
+    # pre-scale on the host so envelope and baseline chains see the SAME
+    # input bits (scale_input=False: ShardedBSM.frobenius_norm reduces
+    # in psum order, which may differ by a ULP between programs)
+    x = B.scale(x0, float(1.0 / max(float(x0.frobenius_norm()), 1e-30)))
+    kw = dict(threshold=1e-7, filter_eps=1e-6, max_iter=10, tol=0.0,
+              scale_input=False, backend="stacks")
+
+    for engine, mesh, l in (("onesided", mesh2, None),
+                            ("twofive", mesh3, 2)):
+        plan_mod.clear_cache()
+        want, _ = sign_iteration(x, mesh=mesh, engine=engine, l=l, **kw)
+        plan_mod.clear_cache()
+        got, st = sign_iteration(x, mesh=mesh, engine=engine, l=l,
+                                 envelope="auto", **kw)
+        s = plan_mod.cache_stats()
+        assert st.envelope and st.retraces == 1, (engine, st)
+        assert s["builds"] == 1 and s["chain_misses"] == 1, (engine, s)
+        assert s["chain_hits"] == st.iterations - 1, (engine, s)
+        assert s["envelope_misses"] == 1 and s["drift_retunes"] == 0, (
+            engine, s)
+        np.testing.assert_array_equal(np.asarray(got.mask),
+                                      np.asarray(want.mask), err_msg=engine)
+        assert np.array_equal(np.asarray(got.blocks),
+                              np.asarray(want.blocks)), engine
+        # warm: same operand -> envelope cache hit, zero retraces
+        _, st2 = sign_iteration(x, mesh=mesh, engine=engine, l=l,
+                                envelope="auto", **kw)
+        s2 = plan_mod.cache_stats()
+        assert st2.retraces == 0, (engine, st2)
+        assert s2["builds"] == 1 and s2["envelope_hits"] == 1, (engine, s2)
+
+    # compressed transport inside a fused chain — envelope-only territory
+    plan_mod.clear_cache()
+    want, _ = sign_iteration(x, mesh=mesh2, engine="onesided", **kw)
+    plan_mod.clear_cache()
+    got, st = sign_iteration(x, mesh=mesh2, engine="onesided",
+                             envelope="auto", transport="compressed", **kw)
+    s = plan_mod.cache_stats()
+    assert st.retraces == 1 and s["builds"] == 1, (st, s)
+    assert s["transport_compressed"] >= 1, s
+    assert np.array_equal(np.asarray(got.blocks),
+                          np.asarray(want.blocks)), "compressed chain"
+    # without an envelope the same request is a hard error (chain safety)
+    try:
+        sign_iteration(x, mesh=mesh2, engine="onesided",
+                       transport="compressed", **kw)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(
+            "compressed chain transport without an envelope must raise")
+
+    # engine="auto" with an envelope: full candidate space, one chain
+    plan_mod.clear_cache()
+    got, st = sign_iteration(x, mesh=mesh2, engine="auto",
+                             envelope="auto", **kw)
+    s = plan_mod.cache_stats()
+    assert s["chain_misses"] == 1 and st.retraces == 1, (s, st)
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(want.to_dense()),
+                               rtol=1e-5, atol=1e-6)
+    print("envelope_sharded OK")
 
 
 def check_transport():
@@ -984,6 +1079,7 @@ CHECKS = {
     "plan_rectangular": check_plan_rectangular,
     "plan_cache": check_plan_cache,
     "signiter_sharded": check_signiter_sharded,
+    "envelope_sharded": check_envelope_sharded,
     "tuner_auto": check_tuner_auto,
     "comm_volume": check_comm_volume,
     "train_steps": check_train_steps,

@@ -76,6 +76,14 @@ def test_signiter_sharded_device_resident():
     assert "signiter_sharded OK" in out
 
 
+def test_envelope_chain_sharded():
+    """Envelope-compiled drifting-pattern chains on a mesh: builds == 1,
+    bitwise == the chain-safe fused chain, compressed transport unlocked,
+    warm path re-hits the forecast cache with zero retraces."""
+    out = _run("envelope_sharded")
+    assert "envelope_sharded OK" in out
+
+
 def test_tuner_auto_multi_device():
     """engine="auto": tuned multiplies == oracle on 2x2/2x4/stacked
     meshes, warm-DB resolution is measurement-free, autotuned

@@ -1,0 +1,253 @@
+"""Pattern-envelope layer (core/envelope.py, DESIGN.md §7).
+
+The load-bearing property: the forecast envelope SOUNDLY over-approximates
+a drifting-pattern chain — every realized per-sweep mask is a bitwise
+subset of the forecast sweep mask, every realized product cube a subset of
+the envelope cube, across the corpus families x sweep counts x thresholds.
+On top of that: envelope-compiled execution matches the per-pattern
+retrace oracle bitwise, the plan-layer forecast cache counts
+envelope_hits/misses, and a non-covering envelope triggers the drift
+fallback (drift_retunes + exact execution) instead of wrong results.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.core import bsm as B
+from repro.core import envelope as E
+from repro.core import plan as plan_mod
+from repro.core.engine import multiply
+from repro.core.signiter import sign_iteration
+from repro.kernels.stacks import pair_cube
+from repro.tuner.corpus import KINDS, make_mask
+
+
+def _chain_operand(kind: str, nb: int, bs: int, seed: int, occupancy=0.3):
+    """Symmetric purification-shaped operand of one corpus family."""
+    key = jax.random.key(seed)
+    m = make_mask(kind, nb, key, occupancy=occupancy)
+    m = m | m.T
+    blocks = jax.random.normal(jax.random.key(seed + 1),
+                               (nb, nb, bs, bs)) / np.sqrt(bs)
+    blocks = 0.5 * (blocks + blocks.transpose(0, 1, 3, 2).swapaxes(0, 1))
+    x = B.make_bsm(blocks, np.asarray(m))
+    # unit spectral scale on the host: the operand every chain actually
+    # multiplies (and the one the envelope must be forecast from)
+    return B.scale(x, float(1.0 / max(float(x.frobenius_norm()), 1e-30)))
+
+
+def _oracle_sweeps(x, sweeps: int, threshold: float, filter_eps: float):
+    """Per-pattern retrace oracle: the realized per-sweep (mask, cube)
+    sequence of the Newton-Schulz chain, one exact multiply at a time
+    (the algebra order of signiter._make_sweep / the legacy loop)."""
+    nb, bs = x.nb_r, x.bs_r
+    ident = B.identity(nb, bs, x.dtype)
+    masks, cubes = [], []
+    for _ in range(sweeps):
+        cubes.append(pair_cube(x.mask, x.mask, x.norms, x.norms, threshold))
+        x2 = multiply(x, x, threshold=threshold, filter_eps=filter_eps)
+        y = B.add(B.scale(x2, -1.0), B.scale(ident, 3.0))
+        cubes.append(pair_cube(x.mask, y.mask, x.norms, y.norms, threshold))
+        xn = multiply(x, y, threshold=threshold, filter_eps=filter_eps)
+        x = B.scale(xn, 0.5)
+        masks.append(np.asarray(x.mask, bool))
+    return x, masks, cubes
+
+
+# ---- soundness: envelope covers every realized sweep -----------------------
+
+
+@settings(deadline=None, max_examples=24)
+@given(
+    kind=st.sampled_from(KINDS),
+    sweeps=st.integers(min_value=1, max_value=4),
+    threshold=st.sampled_from([0.0, 1e-8, 1e-3]),
+    filter_eps=st.sampled_from([0.0, 1e-7, 1e-3]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_envelope_covers_realized_chain(kind, sweeps, threshold,
+                                        filter_eps, seed):
+    x = _chain_operand(kind, nb=8, bs=4, seed=seed)
+    env = E.forecast_chain(np.asarray(x.mask, bool),
+                           np.asarray(x.norms, np.float32),
+                           sweeps=sweeps, threshold=threshold,
+                           filter_eps=filter_eps, bs=x.bs_r)
+    _, masks, cubes = _oracle_sweeps(x, sweeps, threshold, filter_eps)
+    assert len(env.sweep_masks) == sweeps
+    for s, realized in enumerate(masks):
+        fore = env.sweep_masks[s]
+        assert not (realized & ~fore).any(), (kind, s)
+    for cube in cubes:
+        assert not (cube & ~np.asarray(env.cube)).any(), kind
+    # the operand-mask unions cover every multiply's LEFT operand: the
+    # entering pattern and every intermediate that re-enters as X (the
+    # final sweep's result never multiplies again inside the window)
+    assert env.covers(np.asarray(x.mask, bool))
+    for realized in masks[:-1]:
+        assert not (realized & ~np.asarray(env.mask_a)).any()
+
+
+def test_forecast_is_monotone_in_sweeps():
+    x = _chain_operand("exp_decay", nb=8, bs=4, seed=0)
+    m = np.asarray(x.mask, bool)
+    n = np.asarray(x.norms, np.float32)
+    prev = None
+    for s in (1, 2, 4):
+        env = E.forecast_chain(m, n, sweeps=s, threshold=1e-8,
+                               filter_eps=1e-7, bs=x.bs_r)
+        if prev is not None:
+            assert not (np.asarray(prev.cube)
+                        & ~np.asarray(env.cube)).any()
+        prev = env
+
+
+def test_forecast_validates_inputs():
+    m = np.eye(4, dtype=bool)
+    n = np.ones((4, 4), np.float32)
+    with pytest.raises(ValueError, match="sweeps"):
+        E.forecast_chain(m, n, sweeps=0)
+    with pytest.raises(ValueError, match="margin"):
+        E.forecast_chain(m, n, sweeps=1, margin=-0.1)
+    with pytest.raises(ValueError, match="square"):
+        E.forecast_chain(np.ones((2, 3), bool), np.ones((2, 3)), sweeps=1)
+
+
+# ---- envelope-compiled execution == per-pattern retrace oracle -------------
+
+
+def test_envelope_chain_matches_retrace_oracle_bitwise():
+    """Single-device fused chain against the envelope (ONE traced
+    program, masks as data) == fused chain with per-cube capacity ==
+    legacy per-pattern loop, bitwise on blocks and mask."""
+    x = _chain_operand("exp_decay", nb=8, bs=4, seed=2)
+    kw = dict(max_iter=4, tol=0.0, threshold=1e-8, filter_eps=1e-7,
+              scale_input=False, backend="stacks")
+    plan_mod.clear_cache()
+    want, _ = sign_iteration(x, **kw)
+    plan_mod.clear_cache()
+    got, st = sign_iteration(x, envelope="auto", **kw)
+    assert st.envelope and st.retraces == 1
+    assert np.array_equal(np.asarray(got.blocks), np.asarray(want.blocks))
+    assert np.array_equal(np.asarray(got.mask), np.asarray(want.mask))
+    s = plan_mod.cache_stats()
+    assert s["chain_misses"] == 1 and s["envelope_misses"] == 1, s
+    # result agrees with the eager oracle loop too (values, not bits:
+    # the fused sweep reorders the inter-multiply algebra)
+    oracle, masks, _ = _oracle_sweeps(x, 4, 1e-8, 1e-7)
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(oracle.to_dense()),
+                               rtol=1e-5, atol=1e-6)
+    assert np.array_equal(np.asarray(got.mask), masks[-1])
+
+
+def test_envelope_multiply_single_device_builds_once():
+    """multiply(envelope=...) on one device: every pattern the envelope
+    covers executes through ONE traced program (the jitted reference
+    body with the envelope's static capacity — masks enter as data)."""
+    nb, bs = 8, 4
+    rng = np.random.default_rng(0)
+    masks = []
+    for s in range(4):
+        m = make_mask("uniform", nb, jax.random.key(s), occupancy=0.25)
+        masks.append(m)
+    env = E.union_envelope(masks, [np.asarray(masks[0])])
+    bmat = B.random_bsm(jax.random.key(9), nb=nb, bs=bs, occupancy=0.3)
+    bm = np.asarray(masks[0])
+    bmat = B.make_bsm(bmat.blocks, np.asarray(bm))
+    del rng
+    plan_mod.clear_cache()
+    for m in masks:
+        blocks = jax.random.normal(jax.random.key(17), (nb, nb, bs, bs))
+        a = B.make_bsm(blocks, np.asarray(m))
+        got = multiply(a, bmat, backend="stacks", envelope=env,
+                       threshold=1e-8, filter_eps=1e-7)
+        want = multiply(a, bmat, backend="stacks",
+                        threshold=1e-8, filter_eps=1e-7)
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   np.asarray(want.to_dense()),
+                                   rtol=1e-5, atol=1e-6)
+    s = plan_mod.cache_stats()
+    assert s["drift_retunes"] == 0, s
+
+
+# ---- forecast cache + drift fallback ---------------------------------------
+
+
+def test_get_envelope_counts_hits_and_misses():
+    x = _chain_operand("dft_chain", nb=8, bs=4, seed=1)
+    m = np.asarray(x.mask, bool)
+    n = np.asarray(x.norms, np.float32)
+    plan_mod.clear_cache()
+    e1 = plan_mod.get_envelope(m, n, sweeps=3, threshold=1e-8,
+                               filter_eps=1e-7, bs=x.bs_r)
+    e2 = plan_mod.get_envelope(m, n, sweeps=3, threshold=1e-8,
+                               filter_eps=1e-7, bs=x.bs_r)
+    assert e1 is e2
+    s = plan_mod.cache_stats()
+    assert s["envelope_misses"] == 1 and s["envelope_hits"] == 1, s
+    # different sweep count -> a different forecast
+    plan_mod.get_envelope(m, n, sweeps=4, threshold=1e-8,
+                          filter_eps=1e-7, bs=x.bs_r)
+    s = plan_mod.cache_stats()
+    assert s["envelope_misses"] == 2, s
+
+
+def test_non_covering_envelope_falls_back_exact():
+    """A pattern OUTSIDE the envelope must not execute against it:
+    multiply notes a drift re-tune and runs the exact path — correct
+    results, counter bumped."""
+    nb, bs = 8, 4
+    a = B.random_bsm(jax.random.key(0), nb=nb, bs=bs, occupancy=0.4,
+                     pattern="decay")
+    bmat = B.random_bsm(jax.random.key(1), nb=nb, bs=bs, occupancy=0.4)
+    tiny = E.union_envelope([np.eye(nb, dtype=bool)])
+    assert not tiny.covers(np.asarray(a.mask, bool))
+    plan_mod.clear_cache()
+    got = multiply(a, bmat, backend="stacks", envelope=tiny,
+                   threshold=1e-8, filter_eps=1e-7)
+    want = multiply(a, bmat, backend="stacks",
+                    threshold=1e-8, filter_eps=1e-7)
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(want.to_dense()),
+                               rtol=1e-6, atol=1e-7)
+    s = plan_mod.cache_stats()
+    assert s["drift_retunes"] == 1, s
+
+
+# ---- union envelopes -------------------------------------------------------
+
+
+def test_union_envelope_covers_members():
+    masks = [make_mask("uniform", 8, jax.random.key(s), occupancy=0.2)
+             for s in range(5)]
+    env = E.union_envelope(masks)
+    for m in masks:
+        assert env.covers(np.asarray(m, bool))
+    # a pattern with one block outside the union is NOT covered
+    union = np.asarray(env.mask_a, bool)
+    if not union.all():
+        outside = union.copy()
+        i, j = np.argwhere(~union)[0]
+        outside[i, j] = True
+        assert not env.covers(outside)
+    with pytest.raises(ValueError):
+        E.union_envelope([])
+    with pytest.raises(ValueError):
+        E.union_envelope([np.ones((2, 3), bool)], [np.ones((2, 3), bool)])
+
+
+def test_envelope_capacity_dominates_members():
+    """The envelope's bucketed capacity >= any member pattern's exact
+    surviving-product count — the static bound that makes one compiled
+    program sound for the whole stream."""
+    masks = [make_mask("zipf", 8, jax.random.key(s), occupancy=0.25)
+             for s in range(4)]
+    env = E.union_envelope(masks, [np.asarray(masks[0])])
+    for m in masks:
+        exact = int(pair_cube(m, masks[0]).sum())
+        assert env.local_capacity() >= exact

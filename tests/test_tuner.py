@@ -226,6 +226,12 @@ def test_chain_safety_excludes_compressed_transport():
     assert not chain_safe(Candidate("gather", backend="stacks",
                                     stack_capacity=8))
     assert not chain_safe(Candidate("gather", transport="compressed"))
+    # an envelope lifts the restriction: capacities derived from the
+    # forecast union cube cover every sweep, so EVERY candidate is safe
+    assert chain_safe(Candidate("gather", backend="stacks",
+                                stack_capacity=8), envelope=True)
+    assert chain_safe(Candidate("gather", transport="compressed"),
+                      envelope=True)
 
 
 def test_db_record_persists_transport(tmp_path):
@@ -505,6 +511,49 @@ def test_clear_cache_drops_all_caches(tmp_path):
     multiply(a, b, mesh, engine="auto", threshold=1e-6)
     s = plan_mod.cache_stats()
     assert s["tuner_misses"] == 1 and s["misses"] >= 1
+
+
+def test_clear_cache_drops_envelope_and_drift_levels(tmp_path):
+    """The envelope layer's cache levels obey the same contract: the
+    plan-layer forecast cache, the tuner's bucket/stream caches and the
+    envelope/drift counters are all dropped by ONE clear_cache (mirror
+    of test_clear_cache_drops_all_caches for the levels PR 8 added)."""
+    from repro.core import envelope as E
+
+    mesh = jax.make_mesh((1, 1), ("r", "c"))
+    a, b = _pair(nb=8, bs=8, occupancy=0.3, seed=5)
+    plan_mod.clear_cache()
+    tuner.set_default_db(str(tmp_path / "db.json"))
+    # populate: forecast cache (miss + hit), drift counter (non-covering
+    # envelope -> exact fallback), tuner bucket/stream caches
+    m = np.asarray(a.mask, bool)
+    n = np.asarray(a.norms, np.float32)
+    env = plan_mod.get_envelope(m, n, sweeps=2, threshold=1e-6,
+                                filter_eps=1e-6, bs=a.bs_r)
+    assert plan_mod.get_envelope(m, n, sweeps=2, threshold=1e-6,
+                                 filter_eps=1e-6, bs=a.bs_r) is env
+    tiny = E.union_envelope([np.eye(8, dtype=bool)])
+    multiply(a, b, mesh, engine="gather", threshold=1e-6,
+             backend="stacks", envelope=tiny)
+    autotune(a, b, mesh)
+    stats = plan_mod.cache_stats()
+    assert stats["envelope_misses"] == 1 and stats["envelope_hits"] == 1
+    assert stats["drift_retunes"] == 1, stats
+    assert len(plan_mod._envelope_cache) == 1
+    assert len(tuner._bucket_cache) == 1
+    assert len(tuner._stream_last_bucket) == 1
+
+    plan_mod.clear_cache()
+    assert all(v == 0 for v in plan_mod.cache_stats().values()), (
+        plan_mod.cache_stats())
+    assert len(plan_mod._envelope_cache) == 0
+    assert len(tuner._bucket_cache) == 0
+    assert len(tuner._stream_last_bucket) == 0
+    # and the next forecast really is a cold miss
+    plan_mod.get_envelope(m, n, sweeps=2, threshold=1e-6,
+                          filter_eps=1e-6, bs=a.bs_r)
+    s = plan_mod.cache_stats()
+    assert s["envelope_misses"] == 1 and s["envelope_hits"] == 0, s
 
 
 # ---- tile-shape search axis (MXU-tiled pallas kernel) ----------------------
