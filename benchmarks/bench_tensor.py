@@ -1,0 +1,210 @@
+"""Tensor contraction benchmark: the matricized einsum layer on the
+tall-skinny three-center workload (DESIGN.md §10).
+
+The contraction ``contract("ijk,kl->ijl", T, B)`` of a screened
+three-center integral tensor against a decay-patterned operator is the
+RPA/MP2-shaped workload DBCSR's tensor extension targets (Sivkov et al.
+2019).  Matricized, it is an (nb^2, nb) x (nb, nb) SpGEMM — the
+rectangular block grid that exercises the plan layer's non-square
+plumbing — and every layer underneath (filtering, compacted stacks,
+transport, the tuner) applies verbatim.  Gated:
+
+  * **sparsity pays** — at 10% block occupancy the filtered contraction
+    executes <= 50% of the dense einsum's floating-point work
+    (mask-level accounting: surviving block products x block MACs vs the
+    full ijkl product space);
+  * **the tuner earns its keep** — ``engine="auto"`` (free choice of
+    engine, depth, backend, transport from the measured trials) is
+    >= 1.2x faster than the WORST static (engine, L) choice at the
+    default jnp backend — the combination a hardcoding caller could
+    have shipped on this rectangular shape;
+  * **correctness** — the distributed contraction matches the dense
+    ``np.einsum`` oracle before any number is reported.
+
+Results go to BENCH_tensor.json (CI perf-trajectory series, aggregated
+by ``benchmarks/run.py`` like every BENCH_*.json).
+
+    python benchmarks/bench_tensor.py [--smoke] [--out BENCH_tensor.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import plan as plan_mod  # noqa: E402
+from repro.core import tensor as T  # noqa: E402
+from repro.core.engine import multiply  # noqa: E402
+from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
+from repro.tuner.corpus import CorpusEntry  # noqa: E402
+from repro.tuner.model import valid_square_depths  # noqa: E402
+
+THRESHOLD = 1e-6
+
+
+def walltime(run, reps: int) -> float:
+    out = run()
+    jax.block_until_ready((out.blocks, out.mask, out.norms))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = run()
+        jax.block_until_ready((out.blocks, out.mask, out.norms))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def flop_accounting(a, b) -> dict:
+    """Mask-level work comparison: surviving block products of the
+    filtered SpGEMM vs the dense einsum's full product space."""
+    ma, mb = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
+    nb_r, nb_k = ma.shape
+    _, nb_c = mb.shape
+    bs_r, bs_k = int(a.blocks.shape[2]), int(a.blocks.shape[3])
+    bs_c = int(b.blocks.shape[3])
+    products = int((ma[:, :, None] & mb[None, :, :]).sum())
+    sparse = 2.0 * products * bs_r * bs_k * bs_c
+    dense = 2.0 * (nb_r * bs_r) * (nb_k * bs_k) * (nb_c * bs_c)
+    return {
+        "surviving_products": products,
+        "product_space": nb_r * nb_k * nb_c,
+        "sparse_flops": sparse,
+        "dense_flops": dense,
+        "flop_ratio": sparse / dense,
+    }
+
+
+def static_space(mesh) -> list[tuple[str, int | None]]:
+    """Every static (engine, L) a hardcoding caller could pin on this
+    mesh — the same space ``tuner.model.enumerate_candidates`` fans
+    over (jnp backend)."""
+    p_r, p_c = int(mesh.shape["r"]), int(mesh.shape["c"])
+    pairs: list[tuple[str, int | None]] = []
+    if p_r == p_c:
+        pairs = [("cannon", None), ("onesided", None), ("gather", None)]
+        pairs += [("twofive", d) for d in valid_square_depths(p_r)]
+    else:
+        pairs = [("onesided", None), ("gather", None)]
+    return pairs
+
+
+def run_bench(smoke: bool) -> dict:
+    nb, bs = (8, 8) if smoke else (8, 16)
+    reps = 5 if smoke else 10
+    entry = CorpusEntry("three_center_tall", "three_center", nb, bs,
+                        occupancy=0.10, seed=17)
+    t, bm = entry.build_tensor()
+    b2 = T.make_tensor(bm.blocks, bm.mask)
+    a, b = entry.build()  # the matricized pair (masks == tensor masks)
+    mesh = make_spgemm_mesh(p=2)
+    plan_mod.clear_cache()
+
+    # correctness first: never report numbers off a wrong contraction
+    ref = T.contract_reference("ijk,kl->ijl", t, b2)
+    got = T.contract("ijk,kl->ijl", t, b2, mesh=mesh, engine="auto",
+                     threshold=THRESHOLD)
+    np.testing.assert_allclose(np.asarray(got.to_dense()), ref,
+                               rtol=1e-4, atol=1e-4)
+
+    flops = flop_accounting(a, b)
+
+    # statics at the default jnp backend, measured min-of-reps, two
+    # passes min-merged (pass one also warms every compiled program)
+    statics: dict[str, float] = {}
+    for _ in range(2):
+        for eng, l in static_space(mesh):
+            try:
+                plan_mod.plan_multiply(mesh, eng, l).validate_blocks(
+                    a.nb_r, b.nb_c, a.nb_c)
+            except ValueError:
+                continue  # grid does not divide this topology
+            label = eng if l is None else f"{eng}(L={l})"
+            s = walltime(
+                lambda e=eng, d=l: multiply(a, b, mesh, engine=e, l=d,
+                                            threshold=THRESHOLD), reps)
+            statics[label] = min(s, statics.get(label, float("inf")))
+
+    # the tuner's pick with full freedom (engine, L, backend, transport)
+    auto_s = float("inf")
+    for _ in range(2):
+        auto_s = min(auto_s, walltime(
+            lambda: multiply(a, b, mesh, engine="auto",
+                             threshold=THRESHOLD), reps))
+    stats = plan_mod.cache_stats()
+
+    worst_label = max(statics, key=statics.get)
+    best_label = min(statics, key=statics.get)
+    return {
+        "bench": "tensor_contraction",
+        "smoke": smoke,
+        "mesh": "2x2",
+        "threshold": THRESHOLD,
+        "entry": entry.name,
+        "tensor_nbs": list(t.nbs),
+        "tensor_bss": list(t.bss),
+        "matricized": {"nb_r": a.nb_r, "nb_c": b.nb_c, "nb_k": a.nb_c,
+                       "bs_r": a.bs_r, "bs_c": b.bs_c, "bs_k": a.bs_c},
+        "occupancy_a": float(np.asarray(a.mask, bool).mean()),
+        "occupancy_b": float(np.asarray(b.mask, bool).mean()),
+        "flops": flops,
+        "static_ms": {k: v * 1e3 for k, v in statics.items()},
+        "worst_static": worst_label,
+        "best_static": best_label,
+        "auto_ms": auto_s * 1e3,
+        "auto_vs_worst_static": statics[worst_label] / auto_s,
+        "auto_vs_best_static": statics[best_label] / auto_s,
+        "tuner_hits": stats["tuner_hits"],
+    }
+
+
+def check(result: dict) -> None:
+    # sparsity pays: <= 50% of the dense einsum work at 10% occupancy
+    assert result["flops"]["flop_ratio"] <= 0.50, result["flops"]
+    # the tuner beats the worst static (engine, L) a caller could pin
+    assert result["auto_vs_worst_static"] >= 1.2, {
+        "auto_ms": result["auto_ms"],
+        "static_ms": result["static_ms"],
+    }
+    # ... and never loses materially to the best one
+    assert result["auto_vs_best_static"] >= 0.80, {
+        "auto_ms": result["auto_ms"],
+        "static_ms": result["static_ms"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    result = run_bench(args.smoke)
+    check(result)
+    m = result["matricized"]
+    print(f"tensor/{result['entry']}: ({m['nb_r']}x{m['nb_k']}) x "
+          f"({m['nb_k']}x{m['nb_c']}) blocks, "
+          f"flop ratio {result['flops']['flop_ratio']:.3f}")
+    for lab, ms in sorted(result["static_ms"].items(), key=lambda kv: kv[1]):
+        print(f"  static {lab:>14} {ms:8.3f} ms")
+    print(f"  auto {result['auto_ms']:8.3f} ms "
+          f"(x{result['auto_vs_worst_static']:.2f} vs worst static, "
+          f"x{result['auto_vs_best_static']:.2f} vs best)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

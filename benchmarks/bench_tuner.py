@@ -40,6 +40,7 @@ import numpy as np  # noqa: E402
 
 from repro import tuner  # noqa: E402
 from repro.core import plan as plan_mod  # noqa: E402
+from repro.core.distribute import product_counts  # noqa: E402
 from repro.core.engine import multiply, multiply_reference  # noqa: E402
 from repro.launch.mesh import make_spgemm_mesh  # noqa: E402
 from repro.tuner.corpus import corpus  # noqa: E402
@@ -59,11 +60,14 @@ def bench_entry(entry, mesh, reps: int, db_path: str) -> dict:
     feats = tuner.featurize(a, b, THRESHOLD)
     am, bm = np.asarray(a.mask, bool), np.asarray(b.mask, bool)
     ok = am[:, :, None] & bm[None, :, :]
+    counts = product_counts(am, bm)
 
     # measured oracle over the full candidate space: two passes, min-
     # merged (the first also compiles and warms every program the tuner
-    # will re-time; the min filters one-off scheduler noise)
-    cands = enumerate_candidates(mesh, feats, ok=ok)
+    # will re-time; the min filters one-off scheduler noise).  `counts`
+    # puts the block->device assignment variants in the oracle space too
+    # — the same space autotune ranks, so its pick is always in the table
+    cands = enumerate_candidates(mesh, feats, ok=ok, counts=counts)
     table: dict[str, float] = {}
     for _ in range(2):
         trials = measure_candidates(a, b, mesh, cands, threshold=THRESHOLD,

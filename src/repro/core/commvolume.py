@@ -81,18 +81,21 @@ def scaling_per_process(p: int, l: int, n_elems: float) -> float:
     return 2.0 * n_elems / math.sqrt(p * l)
 
 
-def _panel_bytes(rows: int, cols: int, bs: int, itemsize: float) -> float:
+def _panel_bytes(rows: int, cols: int, bs: int, itemsize: float,
+                 bs2: int | None = None) -> float:
     """Wire bytes of one (rows x cols)-block panel as the engines move it
     under dense transport: blocks (itemsize) + occupation mask (1 byte).
     Norms never ride the wire any more — they are recomputed from the
-    received blocks (``transport.panel_norms``)."""
-    return rows * cols * (bs * bs * itemsize + 1.0)
+    received blocks (``transport.panel_norms``).  ``bs2`` (default ``bs``)
+    is the second atomic-block dim of a rectangular-block panel."""
+    return rows * cols * (bs * (bs if bs2 is None else bs2) * itemsize + 1.0)
 
 
-def _packed_bytes(entries: float, bs: int, itemsize: float) -> float:
+def _packed_bytes(entries: float, bs: int, itemsize: float,
+                  bs2: int | None = None) -> float:
     """Wire bytes of one compressed panel: ``entries`` packed blocks plus
     the one-based int32 index array (``transport.pack_panel``)."""
-    return entries * (bs * bs * itemsize + 4.0)
+    return entries * (bs * (bs if bs2 is None else bs2) * itemsize + 4.0)
 
 
 def _transport_spec(
@@ -129,6 +132,10 @@ def plan_volume(
     transport=None,
     occ_a: float = 1.0,
     occ_b: float = 1.0,
+    nb_k: int | None = None,
+    nb_c: int | None = None,
+    bs_k: int | None = None,
+    bs_c: int | None = None,
 ) -> VolumeReport:
     """Predicted per-device collective wire bytes of one multiplication
     executed from ``plan`` — the paper's volume model evaluated on the
@@ -146,10 +153,21 @@ def plan_volume(
     so ``benchmarks/measure_comm.py`` can compare measured vs. modeled:
     collective-permute costs its full payload; all-gather (n-1)/n of the
     gathered output; all-reduce 2(n-1)/n; reduce-scatter (n-1) x output.
+
+    ``nb_k``/``nb_c``/``bs_k``/``bs_c`` (default: square) price a
+    rectangular matricized product: A panels are (nb x nb_k) grids of
+    bs x bs_k blocks, B (nb_k x nb_c) of bs_k x bs_c, C (nb x nb_c) of
+    bs x bs_c.  Square callers' numbers are unchanged.
     """
     topo = plan.topo
     p_r, p_c, depth = plan.p_r, plan.p_c, topo.l
-    nr, nc = nb // p_r, nb // p_c
+    nb_k = nb if nb_k is None else nb_k
+    nb_c = nb if nb_c is None else nb_c
+    bs_k = bs if bs_k is None else bs_k
+    bs_c = bs if bs_c is None else bs_c
+    ar, ac = nb // p_r, nb_k // p_c  # A home shard (block rows, cols)
+    br, bc = nb_k // p_r, nb_c // p_c  # B home shard
+    cr, cc = nb // p_r, nb_c // p_c  # C home shard
     mode, cap_a, cap_b, wire_item = _transport_spec(transport)
     # A/B panel payloads travel at the WIRE width (bf16 wire on f32
     # storage halves them; bf16 storage halves them natively via the
@@ -160,47 +178,47 @@ def plan_volume(
     def hop_a(rows: int, cols: int) -> float:
         if mode == "compressed":
             n = cap_a if cap_a is not None else occ_a * rows * cols
-            return _packed_bytes(n, bs, ab_item)
-        return _panel_bytes(rows, cols, bs, ab_item)
+            return _packed_bytes(n, bs, ab_item, bs_k)
+        return _panel_bytes(rows, cols, bs, ab_item, bs_k)
 
     def hop_b(rows: int, cols: int) -> float:
         if mode == "compressed":
             n = cap_b if cap_b is not None else occ_b * rows * cols
-            return _packed_bytes(n, bs, ab_item)
-        return _panel_bytes(rows, cols, bs, ab_item)
+            return _packed_bytes(n, bs_k, ab_item, bs_c)
+        return _panel_bytes(rows, cols, bs_k, ab_item, bs_c)
 
     if plan.kind == "pull":
-        wa = nc // plan.ca  # A subpanel block-cols (= nb / V)
-        wb = nr // plan.cb  # B subpanel block-rows
+        wa = ac // plan.ca  # A subpanel block-cols (= nb_k / V)
+        wb = br // plan.cb  # B subpanel block-rows
         ab = 0.0
         for g in range(plan.ticks):
-            ab += len(plan.a_pulls[g]) * hop_a(nr, wa)
-            ab += len(plan.b_pulls[g]) * hop_b(wb, nc)
+            ab += len(plan.a_pulls[g]) * hop_a(ar, wa)
+            ab += len(plan.b_pulls[g]) * hop_b(wb, bc)
         # L-1 partial-C sends: blocks + mask (always dense — the partial
         # panels are accumulator state, not home panels with known bounds)
-        c = len(plan.c_rounds) * (nr * nc * bs * bs * itemsize + nr * nc)
+        c = len(plan.c_rounds) * (cr * cc * bs * bs_c * itemsize + cr * cc)
         name = f"pull-os{depth}"
     elif plan.kind == "ring":
         # pre-shift + (ticks - 1) double-buffered hops of A and B
-        ab = plan.ticks * (hop_a(nr, nc) + hop_b(nr, nc))
+        ab = plan.ticks * (hop_a(ar, ac) + hop_b(br, bc))
         c = 0.0
         name = "ring-ptp"
     elif plan.kind == "gather":
         if mode == "compressed":
             # untiled all-gather of each shard's packed buffer + indices:
             # (p-1)/p of the gathered (p, capacity, ...) output
-            na = cap_a if cap_a is not None else occ_a * nr * nc
-            nb_e = cap_b if cap_b is not None else occ_b * nr * nc
-            ga = (p_c - 1) * _packed_bytes(na, bs, ab_item)
-            gb = (p_r - 1) * _packed_bytes(nb_e, bs, ab_item)
+            na = cap_a if cap_a is not None else occ_a * ar * ac
+            nb_e = cap_b if cap_b is not None else occ_b * br * bc
+            ga = (p_c - 1) * _packed_bytes(na, bs, ab_item, bs_k)
+            gb = (p_r - 1) * _packed_bytes(nb_e, bs_k, ab_item, bs_c)
         else:
-            ga = _panel_bytes(nr, nb, bs, ab_item) * (p_c - 1) / p_c
-            gb = _panel_bytes(nb, nc, bs, ab_item) * (p_r - 1) / p_r
+            ga = _panel_bytes(ar, nb_k, bs, ab_item, bs_k) * (p_c - 1) / p_c
+            gb = _panel_bytes(nb_k, bc, bs_k, ab_item, bs_c) * (p_r - 1) / p_r
         ab, c = ga + gb, 0.0
         name = "gather"
     elif plan.kind == "stacked":
-        ab = plan.ticks * (hop_a(nr, nc) + hop_b(nr, nc))
-        cb = nr * nc * bs * bs * itemsize + nr * nc * 4.0  # blocks + i32 mask
+        ab = plan.ticks * (hop_a(ar, ac) + hop_b(br, bc))
+        cb = cr * cc * bs * bs_c * itemsize + cr * cc * 4.0  # blocks + i32 mask
         if c_layout == "2d":
             c = 2.0 * cb * (depth - 1) / depth  # all-reduce over l
         else:
@@ -223,6 +241,10 @@ def device_memory_bytes(
     itemsize: float = 4.0,
     c_layout: str = "2d",
     stack_capacity: int = 0,
+    nb_k: int | None = None,
+    nb_c: int | None = None,
+    bs_k: int | None = None,
+    bs_c: int | None = None,
 ) -> float:
     """Eq. (6) rendered in bytes: per-device memory footprint of one
     multiplication executed from ``plan``.
@@ -251,36 +273,49 @@ def device_memory_bytes(
     transport: compressed buffers are strictly smaller (packed blocks +
     indices, unpacked transiently for the GEMM), so the dense accounting
     stays a sound upper bound for the prune.
+
+    ``nb_k``/``nb_c``/``bs_k``/``bs_c`` (default: square) account a
+    rectangular matricized product; square callers' numbers are unchanged.
     """
     topo = plan.topo
-    nr, nc = nb // plan.p_r, nb // plan.p_c
-    shard = _panel_bytes(nr, nc, bs, itemsize)
-    total = 3.0 * shard  # A, B, C home shards
+    nb_k = nb if nb_k is None else nb_k
+    nb_c = nb if nb_c is None else nb_c
+    bs_k = bs if bs_k is None else bs_k
+    bs_c = bs if bs_c is None else bs_c
+    ar, ac = nb // plan.p_r, nb_k // plan.p_c
+    br, bc = nb_k // plan.p_r, nb_c // plan.p_c
+    cr, cc = nb // plan.p_r, nb_c // plan.p_c
+    shard_a = _panel_bytes(ar, ac, bs, itemsize, bs_k)
+    shard_b = _panel_bytes(br, bc, bs_k, itemsize, bs_c)
+    shard_c = _panel_bytes(cr, cc, bs, itemsize, bs_c)
+    total = shard_a + shard_b + shard_c  # A, B, C home shards
     if plan.kind == "ring":
         # pipelined ring: three panel generations per operand in flight
         # (current / next / prefetched hop — cannon.ring_body)
-        total += 6.0 * shard
+        total += 3.0 * (shard_a + shard_b)
     elif plan.kind == "gather":
-        total += _panel_bytes(nr, nb, bs, itemsize)  # gathered A row panel
-        total += _panel_bytes(nb, nc, bs, itemsize)  # gathered B col panel
+        # gathered A row panel / B col panel
+        total += _panel_bytes(ar, nb_k, bs, itemsize, bs_k)
+        total += _panel_bytes(nb_k, bc, bs_k, itemsize, bs_c)
     elif plan.kind == "pull":
         sub = max(
-            _panel_bytes(nr, nc // plan.ca, bs, itemsize),  # A subpanel
-            _panel_bytes(nr // plan.cb, nc, bs, itemsize),  # B subpanel
+            _panel_bytes(ar, ac // plan.ca, bs, itemsize, bs_k),  # A subpanel
+            _panel_bytes(br // plan.cb, bc, bs_k, itemsize, bs_c),  # B subpanel
         )
         total += topo.total_buffers * sub
         # the prefetched next tick group's panel set (pull pipelining)
         total += (topo.l_r + topo.l_c) * sub
-        total += (topo.l - 1) * shard  # partial C panels of the L targets
+        total += (topo.l - 1) * shard_c  # partial C panels of the L targets
     elif plan.kind == "stacked":
         # pipelined ring panels: three generations per operand
-        total += 6.0 * shard
+        total += 3.0 * (shard_a + shard_b)
         # reduction buffer over the depth axis
-        total += shard if c_layout == "2d" else shard / topo.l
+        total += shard_c if c_layout == "2d" else shard_c / topo.l
     else:
         raise ValueError(plan.kind)
     if stack_capacity > 0:
-        gemm = (bs * bs * 3) * 4.0  # gathered a, b + f32 product per entry
+        # gathered a, b + f32 product per entry
+        gemm = (bs * bs_k + bs_k * bs_c + bs * bs_c) * 4.0
         total += stack_capacity * (gemm + 7 * 4.0)
     return total
 

@@ -542,6 +542,10 @@ def lower_multiply(
     tile: tuple[int, int, int] | None = None,
     interpret: bool | None = None,
     transport=None,
+    nb_k: int | None = None,
+    nb_c: int | None = None,
+    bs_k: int | None = None,
+    bs_c: int | None = None,
 ):
     """Lower (without executing) one multiplication for HLO inspection —
     the source of the measured collective bytes in the benchmarks.  Shares
@@ -550,7 +554,16 @@ def lower_multiply(
     ``transport`` must be a resolved ``PanelTransport`` (or None = dense):
     lowering is abstract, so there is no pattern to resolve "auto" from —
     derive capacities from a concrete mask via ``plan.get_transport``.
+
+    ``nb_k``/``nb_c``/``bs_k``/``bs_c`` (default: square) lower a
+    rectangular matricized product A (nb x nb_k of bs x bs_k blocks) @
+    B (nb_k x nb_c of bs_k x bs_c blocks).
     """
+    nb_k = nb if nb_k is None else nb_k
+    nb_c = nb if nb_c is None else nb_c
+    bs_k = bs if bs_k is None else bs_k
+    bs_c = bs if bs_c is None else bs_c
+    square = (nb_k, nb_c, bs_k, bs_c) == (nb, nb, bs, bs)
     fn = plan_mod.get_compiled(
         mesh,
         engine,
@@ -565,8 +578,13 @@ def lower_multiply(
         tile=tile,
         interpret=interpret,
         transport=transport,
+        **({} if square else dict(nb_k=nb_k, nb_c=nb_c,
+                                  bs_k=bs_k, bs_c=bs_c)),
     )
-    blk = jax.ShapeDtypeStruct((nb, nb, bs, bs), dtype)
-    m2b = jax.ShapeDtypeStruct((nb, nb), jnp.bool_)
-    m2f = jax.ShapeDtypeStruct((nb, nb), jnp.float32)
-    return fn.lower(blk, m2b, m2f, blk, m2b, m2f)
+    a_blk = jax.ShapeDtypeStruct((nb, nb_k, bs, bs_k), dtype)
+    b_blk = jax.ShapeDtypeStruct((nb_k, nb_c, bs_k, bs_c), dtype)
+    am_b = jax.ShapeDtypeStruct((nb, nb_k), jnp.bool_)
+    am_f = jax.ShapeDtypeStruct((nb, nb_k), jnp.float32)
+    bm_b = jax.ShapeDtypeStruct((nb_k, nb_c), jnp.bool_)
+    bm_f = jax.ShapeDtypeStruct((nb_k, nb_c), jnp.float32)
+    return fn.lower(a_blk, am_b, am_f, b_blk, bm_b, bm_f)

@@ -153,18 +153,46 @@ class MultiplyPlan:
     def l(self) -> int:
         return self.topo.l
 
-    def validate_blocks(self, nb_r: int, nb_c: int) -> None:
-        """Check a (nb_r, nb_c) block grid divides this plan's topology."""
+    def validate_blocks(
+        self, nb_r: int, nb_c: int, nb_k: int | None = None
+    ) -> None:
+        """Check the product's block grids divide this plan's topology.
+
+        ``(nb_r, nb_c)`` is the output grid; ``nb_k`` is the contracted
+        block count (A is ``nb_r x nb_k``, B is ``nb_k x nb_c``).  With
+        ``nb_k=None`` the historical square contract applies (``nb_k`` is
+        implied equal to both, as every pre-tensor caller guaranteed).
+        Rectangular callers MUST pass ``nb_k``: the k axis is the one the
+        engines slice hardest — A's column panels shard over ``p_c``, B's
+        row panels over ``p_r``, and the pull formulation additionally
+        cuts k into V virtual subpanels — and none of that is implied by
+        the output grid.
+        """
         v = self.topo.v
         if nb_r % self.p_r or nb_c % self.p_c:
             raise ValueError(
                 f"block grid {nb_r}x{nb_c} does not divide the "
                 f"{self.p_r}x{self.p_c} process grid"
             )
-        if self.kind == "pull" and (nb_r % v or nb_c % v):
+        if nb_k is None:
+            if self.kind == "pull" and (nb_r % v or nb_c % v):
+                raise ValueError(
+                    f"block grid {nb_r}x{nb_c} does not divide the virtual "
+                    f"grid V={v} (required for one-sided panel pulls)"
+                )
+            return
+        if nb_k % self.p_c or nb_k % self.p_r:
             raise ValueError(
-                f"block grid {nb_r}x{nb_c} does not divide the virtual "
-                f"grid V={v} (required for one-sided panel pulls)"
+                f"contracted block count nb_k={nb_k} does not divide the "
+                f"{self.p_r}x{self.p_c} process grid (A column panels "
+                f"shard over p_c={self.p_c}, B row panels over "
+                f"p_r={self.p_r})"
+            )
+        if self.kind == "pull" and nb_k % v:
+            raise ValueError(
+                f"contracted block count nb_k={nb_k} does not divide the "
+                f"virtual grid V={v} (required for one-sided k-subpanel "
+                f"pulls)"
             )
 
 
@@ -1016,6 +1044,10 @@ def get_compiled(
     interpret: bool | None = None,
     transport=None,
     assignment=None,
+    nb_k: int | None = None,
+    nb_c: int | None = None,
+    bs_k: int | None = None,
+    bs_c: int | None = None,
 ):
     """Jitted multiply program for the key, LRU-cached.
 
@@ -1041,6 +1073,17 @@ def get_compiled(
     the PERMUTED pattern — a permutation changes which products land on
     which device, and an identity-layout bound can under-cover a hot
     permuted panel.
+
+    ``nb_k`` / ``nb_c`` / ``bs_k`` / ``bs_c`` describe a rectangular
+    product (A ``nb_r x nb_k`` of ``bs x bs_k`` blocks, B ``nb_k x nb_c``
+    of ``bs_k x bs_c``).  Left at None they default to the square contract
+    every pre-tensor caller used — the key is unchanged for those callers.
+    When any is set, the full shape joins the key and the k dimension is
+    validated against the plan (the engine bodies themselves are
+    shape-polymorphic: one cache entry per full shape, jit retraces per
+    input shape anyway).  Non-identity assignments are square-only — the
+    symmetric block permutation has no meaning on a rectangular grid — so
+    a rectangular shape plus an assignment is rejected here, loudly.
     """
     import jax
 
@@ -1062,11 +1105,21 @@ def get_compiled(
         )
     if assignment is not None and assignment.is_identity:
         assignment = None
+    rect = (nb_k, nb_c, bs_k, bs_c) != (None, None, None, None)
+    if rect and assignment is not None:
+        raise ValueError(
+            "block->device assignments permute rows and columns "
+            "symmetrically; a rectangular product "
+            f"({nb_r}x{nb_k or nb_r} @ {nb_k or nb_r}x{nb_c or nb_r}) "
+            "has no symmetric layout — use assignment=None/'identity'"
+        )
     key = (
         mesh, engine, nb_r, bs, jnp.dtype(dtype).name,
         float(threshold), backend, c_layout, l, stack_capacity, tile,
         interpret, transport.key,
     )
+    if rect:
+        key = key + (("rect", nb_k, nb_c, bs_k, bs_c),)
     if assignment is not None:
         key = key + (("assign",) + assignment.key,)
     prog = _program_cache.get(key)
@@ -1076,7 +1129,13 @@ def get_compiled(
         return prog
     _stats.misses += 1
     plan = plan_multiply(mesh, engine, l)
-    plan.validate_blocks(nb_r, nb_r)
+    if rect:
+        plan.validate_blocks(
+            nb_r, nb_r if nb_c is None else nb_c,
+            nb_r if nb_k is None else nb_k,
+        )
+    else:
+        plan.validate_blocks(nb_r, nb_r)
     fn = build_program(
         plan, threshold=threshold, backend=backend, c_layout=c_layout,
         stack_capacity=stack_capacity, tile=tile, interpret=interpret,
@@ -1115,6 +1174,25 @@ def get_compiled(
         _program_cache.popitem(last=False)
         _stats.evictions += 1
     return prog
+
+
+def _rect_dims(a, b) -> dict:
+    """Full-shape kwargs for :func:`get_compiled` from an operand pair.
+
+    Square pairs (the entire pre-tensor surface) return ``{}`` so their
+    program-cache keys are byte-identical to before; rectangular pairs —
+    matricized tensor operands — return the four extra dims.  Incompatible
+    inner shapes fail here, before any program is keyed.
+    """
+    if a.nb_c != b.nb_r or a.bs_c != b.bs_r:
+        raise ValueError(
+            f"operand shapes do not contract: A is {a.nb_r}x{a.nb_c} "
+            f"blocks of {a.bs_r}x{a.bs_c}, B is {b.nb_r}x{b.nb_c} "
+            f"blocks of {b.bs_r}x{b.bs_c}"
+        )
+    if (a.nb_c, b.nb_c, a.bs_c, b.bs_c) == (a.nb_r, a.nb_r, a.bs_r, a.bs_r):
+        return {}
+    return dict(nb_k=a.nb_c, nb_c=b.nb_c, bs_k=a.bs_c, bs_c=b.bs_c)
 
 
 def _permuted_mask_views(a, b, asg):
@@ -1162,6 +1240,7 @@ def execute(a, b, mesh, engine: str, **kw):
     kw["transport"] = resolve_transport(
         kw.get("transport"), ta, tb, mesh, engine, kw.get("l")
     )
+    kw.update(_rect_dims(a, b))
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
                       assignment=asg, **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)
@@ -1220,6 +1299,7 @@ def execute_sharded(a, b, engine: str, **kw):
     kw["transport"] = resolve_transport(
         kw.get("transport"), a, b, mesh, engine, kw.get("l")
     )
+    kw.update(_rect_dims(a, b))
     fn = get_compiled(mesh, engine, a.nb_r, a.bs_r, a.dtype,
                       c_layout="2d", **kw)
     cb, cm = fn(a.blocks, a.mask, a.norms, b.blocks, b.mask, b.norms)

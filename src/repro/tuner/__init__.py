@@ -212,7 +212,7 @@ def _db_candidate(rec: dict, ok, mesh, feats, counts=None) -> Candidate | None:
         return None  # schema drift: unknown mode is a miss, not a crash
     try:
         plan = plan_mod.plan_multiply(mesh, cand.engine, cand.l)
-        plan.validate_blocks(feats.nb_r, feats.nb_c)
+        plan.validate_blocks(feats.nb_r, feats.nb_c, feats.nb_k)
     except ValueError:
         return None
     if cand.backend == "jnp":

@@ -36,8 +36,20 @@ benchmarked on:
                 uniform family is where occupancy-proportional wins
                 (compressed transport, compacted stacks) show cleanly.
 
+``three_center`` Tall-skinny matricized tensor operands: the decayed
+                3-index occupation mask of a screened three-center
+                integral tensor ``(ij|k)`` (the RPA/MP2 workload DBCSR's
+                tensor extension targets — Sivkov et al. 2019),
+                flattened block-major to an ``(nb^2, nb)`` block grid
+                against a square decay-patterned ``(k, l)`` operand.
+                ``nb_r >> nb_c``: the family that exercises the
+                rectangular-grid plumbing of the plan layer and the
+                k-dimension divisibility rules hardest.
+
 Each entry builds a reproducible operand pair (symmetric H for the DFT
-families — the corpus mirrors ``H @ H`` of the purification workload).
+families — the corpus mirrors ``H @ H`` of the purification workload;
+the three_center family mirrors the ``contract("ijk,kl->ijl")`` product
+of ``core.tensor``).
 """
 from __future__ import annotations
 
@@ -48,7 +60,11 @@ import numpy as np
 
 from repro.core import bsm as B
 
+# the 2-index mask families make_mask() builds; the three_center tensor
+# family lives at the CorpusEntry level (masks()/build()/build_tensor())
+# because its A mask is a matricized 3-index pattern, not a make_mask kind
 KINDS = ("dft_chain", "exp_decay", "zipf", "uniform")
+ENTRY_KINDS = KINDS + ("three_center",)
 
 
 @dataclass(frozen=True)
@@ -71,9 +87,18 @@ class CorpusEntry:
     def masks(self) -> tuple[np.ndarray, np.ndarray]:
         """The concrete (A, B) occupation masks of this entry — exactly
         the (symmetrized) patterns ``build`` fills with values, without
-        materializing any block data."""
+        materializing any block data.  Three-center entries return the
+        MATRICIZED (nb^2, nb) tensor mask and the square (nb, nb) mask
+        of the ``kl`` operand."""
         key = jax.random.key(self.seed)
         k_mask, _, _ = jax.random.split(key, 3)
+        if self.kind == "three_center":
+            ma = three_center_mask(self.nb, k_mask,
+                                   occupancy=self.occupancy)
+            mb = make_mask("exp_decay", self.nb,
+                           jax.random.fold_in(k_mask, 1),
+                           occupancy=max(self.occupancy, 0.15))
+            return ma, mb
         ma = make_mask(self.kind, self.nb, k_mask,
                        occupancy=self.occupancy, bandwidth=self.bandwidth,
                        zipf_alpha=self.zipf_alpha)
@@ -99,7 +124,17 @@ class CorpusEntry:
         return load_imbalance(product_counts(ma, mb), p_r, p_c)
 
     def build(self) -> tuple[B.BlockSparseMatrix, B.BlockSparseMatrix]:
-        """Reproducible (A, B) operand pair for this entry."""
+        """Reproducible (A, B) operand pair for this entry.
+
+        Three-center entries return the MATRICIZED tensor operand — an
+        (nb^2, nb) tall-skinny ``BlockSparseMatrix`` whose mask is
+        byte-identical to ``masks()[0]`` — so the tuner and benchmarks
+        consume every family through the same matrix interface."""
+        if self.kind == "three_center":
+            from repro.core import tensor as T
+
+            t, b = self.build_tensor()
+            return T.matricize(t, (0, 1), (2,)), b
         key = jax.random.key(self.seed)
         _, k_a, k_b = jax.random.split(key, 3)
         ma, mb = self.masks()
@@ -107,6 +142,27 @@ class CorpusEntry:
         if self.symmetric:
             return a, a
         return a, _fill(mb, k_b, self.bs, symmetric=False)
+
+    def build_tensor(self):
+        """The un-flattened (T, B) operand pair of a three-center entry:
+        the 3-index ``BlockSparseTensor`` (ij|k) and the square (k, l)
+        matrix it contracts with via ``contract("ijk,kl->ijl")``."""
+        if self.kind != "three_center":
+            raise ValueError(
+                f"build_tensor() is only defined for three_center "
+                f"entries, not kind={self.kind!r}")
+        from repro.core import tensor as T
+
+        key = jax.random.key(self.seed)
+        k_mask, k_a, k_b = jax.random.split(key, 3)
+        nb, bs = self.nb, self.bs
+        m3 = _three_center_mask3(nb, k_mask, occupancy=self.occupancy)
+        blocks = jax.random.normal(k_a, (nb, nb, nb, bs, bs, bs)) / bs**1.5
+        t = T.make_tensor(blocks, m3)
+        mb = make_mask("exp_decay", nb, jax.random.fold_in(k_mask, 1),
+                       occupancy=max(self.occupancy, 0.15))
+        b = _fill(mb, k_b, bs, symmetric=False)
+        return t, b
 
 
 def _rng(key) -> np.random.Generator:
@@ -156,11 +212,44 @@ def _fill(mask: np.ndarray, key, bs: int, *, symmetric: bool):
     mask = np.asarray(mask, bool)
     if symmetric:
         mask = mask | mask.T
-    nb = mask.shape[0]
-    blocks = jax.random.normal(key, (nb, nb, bs, bs)) / np.sqrt(bs)
+    nb_r, nb_c = mask.shape
+    blocks = jax.random.normal(key, (nb_r, nb_c, bs, bs)) / np.sqrt(bs)
     if symmetric:
         blocks = 0.5 * (blocks + blocks.transpose(1, 0, 3, 2))
     return B.make_bsm(blocks, np.asarray(mask))
+
+
+def _three_center_mask3(nb: int, key, *, occupancy: float = 0.1,
+                        decay: float = 0.25) -> np.ndarray:
+    """Decayed (nb, nb, nb) occupation mask of a screened three-center
+    integral tensor (ij|k): occupation probability falls exponentially
+    with the normalized index spread max(i,j,k) - min(i,j,k) — the
+    block-grid rendering of Schwarz/overlap screening, where only
+    near-lying atom triples survive.  The i==j==k "diagonal" fiber is
+    kept unconditionally (the on-site integrals), mirroring the
+    dominant diagonal of the 2-index families."""
+    rng = _rng(key)
+    i = np.arange(nb, dtype=np.float64)
+    spread = (np.maximum(np.maximum(i[:, None, None], i[None, :, None]),
+                         i[None, None, :])
+              - np.minimum(np.minimum(i[:, None, None], i[None, :, None]),
+                           i[None, None, :])) / max(nb - 1, 1)
+    shape = np.exp(-spread / decay)
+    # calibrate the amplitude so the MEAN fill matches `occupancy`
+    p = np.clip(shape * (occupancy / shape.mean()), 0.0, 1.0)
+    m = rng.random((nb, nb, nb)) < p
+    m |= spread == 0.0
+    return np.asarray(m, bool)
+
+
+def three_center_mask(nb: int, key, *, occupancy: float = 0.1,
+                      decay: float = 0.25) -> np.ndarray:
+    """The MATRICIZED (nb^2, nb) view of ``_three_center_mask3`` — the
+    block-major flatten of indices (i, j) onto rows and k onto columns,
+    exactly what ``tensor.matricize(t, (0, 1), (2,))`` produces for the
+    mask.  Tall-skinny: nb_r = nb^2 >> nb_c = nb."""
+    m3 = _three_center_mask3(nb, key, occupancy=occupancy, decay=decay)
+    return m3.reshape(nb * nb, nb)
 
 
 def corpus(*, nb: int = 16, bs: int = 16, smoke: bool = False) -> list[CorpusEntry]:
@@ -189,4 +278,7 @@ def corpus(*, nb: int = 16, bs: int = 16, smoke: bool = False) -> list[CorpusEnt
                     occupancy=0.15, zipf_alpha=1.4, seed=15),
         CorpusEntry("dft_chain_bigblock", "dft_chain", big_nb, big_bs,
                     bandwidth=max(1, big_nb // 4), seed=16),
+        # tall-skinny matricized tensor product: (nb^2, nb) @ (nb, nb)
+        CorpusEntry("three_center_tall", "three_center",
+                    4 if smoke else 8, bs, occupancy=0.10, seed=17),
     ]

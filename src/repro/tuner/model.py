@@ -227,7 +227,7 @@ def enumerate_candidates(
     for engine, depth in pairs:
         try:
             plan = plan_mod.plan_multiply(mesh, engine, depth)
-            plan.validate_blocks(feats.nb_r, feats.nb_c)
+            plan.validate_blocks(feats.nb_r, feats.nb_c, feats.nb_k)
         except ValueError:
             continue  # block grid does not divide this topology
         for backend in backends:
@@ -311,6 +311,8 @@ def estimate_candidate(
     vol = commvolume.plan_volume(
         plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
         transport=cand.transport, occ_a=feats.occ_a, occ_b=feats.occ_b,
+        nb_k=feats.nb_k, nb_c=feats.nb_c,
+        bs_k=feats.bs_k, bs_c=feats.bs_c,
     )
     comm_s = vol.total / ICI_BW + plan.ticks * TICK_OVERHEAD_S
 
@@ -338,6 +340,8 @@ def estimate_candidate(
     mem = commvolume.device_memory_bytes(
         plan, feats.nb_r, feats.bs_r, itemsize=itemsize,
         stack_capacity=cand.stack_capacity or 0,
+        nb_k=feats.nb_k, nb_c=feats.nb_c,
+        bs_k=feats.bs_k, bs_c=feats.bs_c,
     )
     feasible = mem <= budget and lc.feasible
     if feasible:

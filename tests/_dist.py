@@ -179,6 +179,85 @@ def check_plan_rectangular():
     print("plan_rectangular OK")
 
 
+def check_tensor():
+    """Distributed blocked tensor contraction (DESIGN.md §10): the
+    matricized ``contract("ijk,kl->ijl")`` of the three_center corpus
+    entry equals the dense np.einsum oracle for every engine on the
+    square 2x2 grid, the rectangular 2x4 grid, and the stacked
+    uneven-L mesh; a sharded chain stays device-resident between
+    contractions; and non-identity block→device assignments on the
+    rectangular matricized product are rejected loudly."""
+    from jax.sharding import Mesh
+
+    from repro.core import tensor as T
+    from repro.core.engine import multiply
+    from repro.launch.mesh import make_spgemm_mesh
+    from repro.tuner.corpus import corpus
+
+    entry = [e for e in corpus(smoke=True) if e.kind == "three_center"][0]
+    t, bm = entry.build_tensor()  # (4,4,4) blocks of 8^3 vs (4,4) of 8^2
+    b2 = T.make_tensor(bm.blocks, bm.mask)  # the (k, l) operand as a tensor
+    ref = T.contract_reference("ijk,kl->ijl", t, b2)
+
+    meshes = {
+        "2x2": (make_spgemm_mesh(p=2),
+                ("cannon", "onesided", "gather", "twofive")),
+        "2x4": (Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("r", "c")),
+                ("onesided", "gather", "twofive")),
+        "stacked": (make_spgemm_mesh(p=2, l=4), ("twofive",)),
+    }
+    for name, (mesh, engines) in meshes.items():
+        for eng in engines:
+            out = T.contract("ijk,kl->ijl", t, b2, mesh=mesh, engine=eng,
+                             threshold=entry.threshold)
+            assert out.nbs == t.nbs and out.bss == t.bss, (name, eng)
+            np.testing.assert_allclose(
+                np.asarray(out.to_dense()), ref, rtol=1e-4, atol=1e-4,
+                err_msg=f"{name}/{eng}")
+
+    # engine="auto": the tuner owns the choice end to end
+    mesh24 = meshes["2x4"][0]
+    out = T.contract("ijk,kl->ijl", t, b2, mesh=mesh24, engine="auto",
+                     threshold=entry.threshold)
+    np.testing.assert_allclose(np.asarray(out.to_dense()), ref,
+                               rtol=1e-4, atol=1e-4, err_msg="auto")
+
+    # sharded chain: shard once, contract twice, gather once — the
+    # intermediate never leaves the devices and its split lines up with
+    # the next contraction's needs
+    mesh = meshes["2x2"][0]
+    b3 = T.random_tensor(jax.random.key(33), (4, 4), 8, occupancy=0.6)
+    st_ = T.shard_tensor(t, mesh, (0, 1), (2,))
+    sb2 = T.shard_tensor(b2, mesh, (0,), (1,))
+    sb3 = T.shard_tensor(b3, mesh, (0,), (1,))
+    mid = T.contract("ijk,kl->ijl", st_, sb2, mesh=mesh, engine="gather")
+    assert isinstance(mid, T.MatricizedTensor) and mid.sharded, mid
+    fin = T.contract("ijl,lm->ijm", mid, sb3, mesh=mesh, engine="gather")
+    assert isinstance(fin, T.MatricizedTensor) and fin.sharded, fin
+    chain_ref = T.contract_reference("ijk,kl,lm->ijm", t, b2, b3)
+    np.testing.assert_allclose(
+        np.asarray(fin.to_tensor().to_dense()), chain_ref,
+        rtol=1e-4, atol=1e-4, err_msg="sharded chain")
+
+    # a sharded intermediate whose split does NOT line up must refuse the
+    # implicit global redistribution, not silently gather
+    try:
+        T.contract("ijl,jm->ilm", mid, sb3, mesh=mesh, engine="gather")
+        raise AssertionError("expected split-mismatch ValueError")
+    except ValueError as e:
+        assert "redistribution" in str(e), e
+
+    # satellite: non-identity assignments have no symmetric layout on the
+    # rectangular matricized product — loud rejection at both entry points
+    ma = T.matricize(t, (0, 1), (2,))
+    try:
+        multiply(ma, bm, mesh, engine="gather", assignment="nnz_greedy")
+        raise AssertionError("expected non-square assignment ValueError")
+    except ValueError as e:
+        assert "square" in str(e), e
+    print("tensor OK")
+
+
 def check_plan_cache():
     """Repeated multiplies reuse one compiled program: the second call hits
     the plan cache (no re-build / re-lower) and dispatches much faster."""
@@ -1090,6 +1169,7 @@ CHECKS = {
     "compressed_allreduce": check_compressed_allreduce,
     "spgemm_scaling": check_spgemm_scaling,
     "assignment": check_assignment,
+    "tensor": check_tensor,
 }
 
 

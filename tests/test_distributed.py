@@ -140,3 +140,8 @@ def test_pipeline_schedule():
 def test_assignment_distributed():
     out = _run("assignment")
     assert "assignment OK" in out
+
+
+def test_tensor_contraction():
+    out = _run("tensor")
+    assert "tensor OK" in out

@@ -126,10 +126,14 @@ def test_corpus_zipf_is_heavy_tailed():
 def test_corpus_entries_build():
     for entry in corpus(smoke=True):
         a, b = entry.build()
-        assert a.nb_r == entry.nb and a.bs_r == entry.bs
+        if entry.kind == "three_center":  # matricized: (nb^2, nb) grid
+            assert (a.nb_r, a.nb_c) == (entry.nb**2, entry.nb)
+            assert (a.bs_r, a.bs_c) == (entry.bs**2, entry.bs)
+        else:
+            assert a.nb_r == entry.nb and a.bs_r == entry.bs
         a2, b2 = entry.build()
         np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(a2.mask))
-        if entry.kind != "zipf":  # DFT families: symmetric H, B is H
+        if entry.symmetric:  # DFT families: symmetric H, B is H
             np.testing.assert_array_equal(
                 np.asarray(a.mask), np.asarray(a.mask).T)
 
@@ -681,6 +685,35 @@ def test_corpus_imbalance_statistic():
     a, b = z.build()
     np.testing.assert_array_equal(ma, np.asarray(a.mask))
     np.testing.assert_array_equal(mb, np.asarray(b.mask))
+
+
+def test_corpus_three_center_tall_skinny():
+    """Satellite of the tensor layer: the three_center family is the
+    rectangular workload — its matricized mask is (nb^2, nb) tall-skinny,
+    carries the on-site diagonal, honors the requested mean occupancy,
+    and is EXACTLY the mask the tensor layer's matricization produces."""
+    from repro.tuner.corpus import CorpusEntry
+
+    e = CorpusEntry("tc", "three_center", 8, 4, occupancy=0.10, seed=17)
+    ma, mb = e.masks()
+    assert ma.shape == (64, 8) and mb.shape == (8, 8)  # nb_r = nb * nb_c
+    i = np.arange(8)
+    assert ma[i * 8 + i, i].all()  # on-site (i==j==k) blocks always kept
+    assert 0.03 < ma.mean() < 0.30  # screened, but not empty
+    ma2, _ = e.masks()
+    np.testing.assert_array_equal(ma, ma2)  # deterministic per key
+    # masks() is exactly what build() fills, post-matricization
+    a, b = e.build()
+    np.testing.assert_array_equal(ma, np.asarray(a.mask))
+    np.testing.assert_array_equal(mb, np.asarray(b.mask))
+    # ... and the tensor mask flattens to the same pattern the entry
+    # advertises (build_tensor -> matricize == build)
+    t, _ = e.build_tensor()
+    np.testing.assert_array_equal(np.asarray(t.mask).reshape(64, 8), ma)
+    # the imbalance statistic computes on the rectangular product grid
+    assert e.imbalance(2, 2) >= 1.0
+    with pytest.raises(ValueError, match="three_center"):
+        CorpusEntry("x", "uniform", 8, 4).build_tensor()
 
 
 def test_candidate_assign_labels():
