@@ -43,24 +43,33 @@ def dispatch_occupancy(
     n_tokens: int, n_experts: int, top_k: int, token_block: int, key
 ) -> float:
     """Occupancy of the (token-block x expert) block mask under uniform-ish
-    routing (worst case for filtering: balanced load)."""
+    routing (worst case for filtering: balanced load).
+
+    Delegates to ``models.moe.dispatch_block_mask`` — the same function
+    the serving ``spgemm`` impl builds its operand from, so this artifact
+    and BENCH_serving.json cannot drift apart.
+    """
+    from repro.models.moe import dispatch_block_mask
+
     top_e = jax.random.randint(key, (n_tokens, top_k), 0, n_experts)
     nb = n_tokens // token_block
-    blocks = top_e[: nb * token_block].reshape(nb, token_block * top_k)
-    onehot = jax.nn.one_hot(blocks, n_experts).max(axis=1)  # (nb, E)
-    return float(onehot.mean())
+    mask = dispatch_block_mask(top_e[: nb * token_block], n_experts,
+                               token_block)
+    return float(mask.mean())
 
 
 def dispatch_mask(nb_tok: int, n_experts: int, top_k: int,
                   tokens_per_block: int, key):
-    """Concrete (nb_tok, E) block dispatch mask of one routed batch."""
+    """Concrete (nb_tok, E) block dispatch mask of one routed batch
+    (``models.moe.dispatch_block_mask`` on sampled routing)."""
     import numpy as np
+
+    from repro.models.moe import dispatch_block_mask
 
     top_e = jax.random.randint(key, (nb_tok * tokens_per_block, top_k),
                                0, n_experts)
-    blocks = top_e.reshape(nb_tok, tokens_per_block * top_k)
-    onehot = jax.nn.one_hot(blocks, n_experts).max(axis=1)
-    return np.asarray(onehot, bool)
+    return np.asarray(dispatch_block_mask(top_e, n_experts,
+                                          tokens_per_block))
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -92,6 +101,11 @@ def check() -> None:
     occ_dense = dispatch_occupancy(4096, 16, 2, 256, jax.random.key(0))
     assert occ_sparse < 0.5
     assert occ_dense > occ_sparse
+    # cross-artifact coupling: the occupancy legs and the serving impl
+    # must be built from the same mask construction
+    m = dispatch_mask(16, 8, 2, 4, jax.random.key(3))
+    occ = dispatch_occupancy(64, 8, 2, 4, jax.random.key(3))
+    assert abs(occ - float(m.mean())) < 1e-6
 
 
 def main() -> None:

@@ -22,6 +22,7 @@ import subprocess
 import sys
 
 from benchmarks import (
+    bench_serving,
     fig1_speedups,
     fig2_message_sizes,
     fig3_comm_ratios,
@@ -40,6 +41,7 @@ MODULES = [
     ("fig3", fig3_comm_ratios, True),
     ("fig4", fig4_weak_scaling, True),
     ("moe_spgemm", moe_spgemm, True),
+    ("serving", bench_serving, True),
     ("roofline", roofline_report, False),
 ]
 

@@ -1,12 +1,15 @@
 """Example: batched serving with prefill + decode against a KV cache.
 
-    python examples/serve_batch.py
+    python examples/serve_batch.py [--tuning-db tuning_db.json]
 
 Drives the ServingEngine (slot-based batching, greedy + temperature
 sampling, EOS early-exit) with a reduced qwen-family model, and verifies
 decode consistency: the engine's greedy continuation equals teacher-forced
-argmax over a full forward pass.
+argmax over a full forward pass.  ``--tuning-db`` binds the tuner database
+(as ``repro.launch.serve`` does) so any dispatch decisions resolved during
+the run persist; without it the static analytic fallback decides.
 """
+import argparse
 import os
 import sys
 
@@ -25,6 +28,17 @@ from repro.serving.engine import GenerationConfig, ServingEngine
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning database path (omitted = static fallback)")
+    args = ap.parse_args()
+    if args.tuning_db:
+        from repro import tuner
+        from repro.core import plan as plan_mod
+
+        plan_mod.clear_cache()
+        tuner.set_default_db(args.tuning_db)
+
     cfg = get_arch("qwen1.5-4b").reduced()
     params = T.init_params(cfg, jax.random.key(0))
 

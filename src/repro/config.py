@@ -25,7 +25,13 @@ class MoEConfig:
     d_expert: int | None = None  # defaults to arch d_ff
     layer_period: int = 1  # MoE every `period` layers (llama4/jamba: 2)
     capacity_factor: float = 1.25
-    impl: str = "tp"  # "tp" (experts TP-sharded) | "ep" (expert parallel)
+    # "tp" (experts TP-sharded) | "ep" (expert parallel) | "dense" (exact
+    # oracle) | "spgemm" (dispatch as block-sparse SpGEMM through
+    # engine.multiply — the serving path, DESIGN.md §11)
+    impl: str = "tp"
+    # block-row size of the (token-block x expert) dispatch BSM the
+    # "spgemm" impl builds (tokens per block; T is padded up to a multiple)
+    token_block: int = 4
 
 
 @dataclass(frozen=True)

@@ -264,3 +264,164 @@ def union_envelope(masks_a, masks_b=None) -> Envelope:
     cube = ua[:, :, None] & ub[None, :, :]
     return Envelope(mask_a=_frozen(ua), mask_b=_frozen(ub),
                     cube=_frozen(cube))
+
+
+# ---------------------------------------------------------------------------
+# DispatchCache: the serving-grade pattern-bucketed program cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DispatchBucket:
+    """One warmed request-mix regime: a union envelope plus the decision
+    resolved for it (local backend + stack capacity), and its counters."""
+
+    envelope: Envelope
+    decision: dict
+    hits: int = 0
+    widenings: int = 0
+
+
+def _analytic_dispatch_decision(env: Envelope, bs_r: int, bs_k: int,
+                                bs_c: int, dtype: str) -> dict:
+    """Backend + capacity for a dispatch envelope, from the cost model.
+
+    The same dense/compacted crossover the engine's ``choose_backend``
+    runs on concrete patterns (``local_mm.backend_local_cost``), evaluated
+    once on the envelope's union cube instead of per batch.
+    """
+    from repro.core.local_mm import backend_local_cost
+
+    ni, nk, nj = env.cube.shape
+    fill = float(env.cube.mean()) if env.cube.size else 0.0
+    dense = backend_local_cost(ni, nk, nj, bs_r, bs_k, bs_c,
+                               fill=1.0, backend="jnp", dtype=dtype)
+    compact = backend_local_cost(ni, nk, nj, bs_r, bs_k, bs_c,
+                                 fill=fill, backend="stacks", dtype=dtype)
+    backend = "jnp" if dense <= compact else "stacks"
+    return {"backend": backend, "capacity": env.local_capacity(),
+            "source": "analytic"}
+
+
+class DispatchCache:
+    """Pattern-bucketed envelope/decision cache for serving streams.
+
+    The serving regime the ROADMAP names: every batch routes tokens
+    differently, so no two dispatch masks are equal — but request MIXES
+    are stable for long stretches.  This cache groups masks into the
+    coarse feature buckets of ``tuner.features.mask_bucket`` (log2 shape
+    classes, occupancy deciles, row-load class) and keeps ONE union
+    envelope per bucket, warmed over a calibration stream:
+
+    * ``resolve(mask)`` on a warmed bucket whose envelope covers the mask
+      is the warm serving path — zero per-batch pattern walks, the
+      envelope's stable capacities route every batch of the mix through
+      one traced program (``dispatch_hits`` in ``plan.cache_stats()``);
+    * a mask that lands in a NEW bucket warms it (``dispatch_misses`` —
+      once per request-mix regime, not per batch);
+    * a mask that escapes its bucket's envelope WIDENS the union and
+      re-resolves the decision (``drift_retunes``) — the bucketed
+      capacities make most widenings land in the same capacity bucket,
+      so the compiled program usually survives the widen.
+
+    The per-bucket decision (local backend + stack capacity) is resolved
+    ONCE per bucket, not per batch; with a tuning DB bound
+    (``tuner.set_default_db`` — the ``--tuning-db`` serving flag) the
+    decision is persisted under a ``dispatch|`` key, so a relaunched
+    server warm-starts every previously-seen mix measurement-free: the
+    tuner DB as a serving-time asset.
+    """
+
+    def __init__(self, mask_b, *, bs_r: int = 1, bs_k: int = 1,
+                 bs_c: int = 1, dtype: str = "float32",
+                 decision_fn=None):
+        self.mask_b = np.asarray(mask_b, bool)
+        self.bs_r, self.bs_k, self.bs_c = int(bs_r), int(bs_k), int(bs_c)
+        self.dtype = str(dtype)
+        self._decision_fn = decision_fn
+        self._buckets: dict[tuple, DispatchBucket] = {}
+
+    # ---- keys ----------------------------------------------------------
+    def bucket_of(self, mask) -> tuple:
+        from repro.tuner.features import mask_bucket
+
+        return mask_bucket(mask, self.bs_r, self.bs_c)
+
+    # ---- decision resolution (once per bucket) -------------------------
+    def _db_key(self, key: tuple) -> str:
+        return "dispatch|" + "|".join(str(p) for p in key)
+
+    def _decide(self, key: tuple, env: Envelope) -> dict:
+        from repro import tuner
+
+        if self._decision_fn is not None:
+            return dict(self._decision_fn(env))
+        db = tuner.get_default_db()
+        need = env.local_capacity()
+        if db is not None:
+            rec = db.lookup(self._db_key(key))
+            # a persisted decision is only reusable if its capacity still
+            # covers this launch's envelope (capacities are monotone in
+            # the union — a looser warm-up needs a re-derive + re-record)
+            if rec is not None and int(rec.get("capacity", 0)) >= need:
+                return {"backend": rec["backend"],
+                        "capacity": int(rec["capacity"]), "source": "db"}
+        dec = _analytic_dispatch_decision(env, self.bs_r, self.bs_k,
+                                          self.bs_c, self.dtype)
+        if db is not None:
+            db.record(self._db_key(key), dict(dec))
+        return dec
+
+    # ---- the serving-path API ------------------------------------------
+    def warm(self, masks) -> "DispatchCache":
+        """Fold a calibration stream into the buckets (no hit/miss
+        accounting — calibration is not serving traffic)."""
+        for m in masks:
+            self._observe(np.asarray(m, bool), calibration=True)
+        return self
+
+    def resolve(self, mask) -> tuple[Envelope, dict]:
+        """Serving-time lookup: (envelope, decision) for one batch's
+        dispatch mask, with warm/miss/drift accounting."""
+        return self._observe(np.asarray(mask, bool), calibration=False)
+
+    def _observe(self, m: np.ndarray, *, calibration: bool):
+        from repro.core import plan as plan_mod
+
+        key = self.bucket_of(m)
+        bkt = self._buckets.get(key)
+        if bkt is None:
+            env = union_envelope([m], [self.mask_b])
+            bkt = DispatchBucket(envelope=env,
+                                 decision=self._decide(key, env))
+            self._buckets[key] = bkt
+            if not calibration:
+                plan_mod.note_dispatch_lookup(False)
+            return bkt.envelope, bkt.decision
+        if not bkt.envelope.covers(m):
+            # in-bucket drift: widen the union, re-resolve the decision
+            bkt.envelope = union_envelope(
+                [bkt.envelope.mask_a, m], [self.mask_b])
+            bkt.decision = self._decide(key, bkt.envelope)
+            bkt.widenings += 1
+            if not calibration:
+                plan_mod.note_drift_retune()
+            return bkt.envelope, bkt.decision
+        if not calibration:
+            bkt.hits += 1
+            plan_mod.note_dispatch_lookup(True)
+        return bkt.envelope, bkt.decision
+
+    # ---- introspection -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._buckets)
+
+    def stats(self) -> dict:
+        return {
+            "buckets": len(self._buckets),
+            "hits": sum(b.hits for b in self._buckets.values()),
+            "widenings": sum(b.widenings for b in self._buckets.values()),
+            "capacities": sorted(
+                {int(b.decision["capacity"]) for b in self._buckets.values()}
+            ),
+        }

@@ -443,6 +443,8 @@ class CacheStats:
     assign_misses: int = 0  # resolutions that derived a permutation
     envelope_hits: int = 0  # chain-envelope forecasts served from cache
     envelope_misses: int = 0  # forecasts that ran the symbolic propagation
+    dispatch_hits: int = 0  # serving-dispatch bucket lookups served warm
+    dispatch_misses: int = 0  # ... that warmed a new bucket
     drift_retunes: int = 0  # pattern drift that forced a re-tune/re-derive
 
     def as_dict(self) -> dict:
@@ -466,6 +468,8 @@ class CacheStats:
             "assign_misses": self.assign_misses,
             "envelope_hits": self.envelope_hits,
             "envelope_misses": self.envelope_misses,
+            "dispatch_hits": self.dispatch_hits,
+            "dispatch_misses": self.dispatch_misses,
             "drift_retunes": self.drift_retunes,
         }
 
@@ -519,6 +523,7 @@ def clear_cache() -> None:
     _stats.transport_dense = _stats.transport_compressed = 0
     _stats.assign_hits = _stats.assign_misses = 0
     _stats.envelope_hits = _stats.envelope_misses = 0
+    _stats.dispatch_hits = _stats.dispatch_misses = 0
     _stats.drift_retunes = 0
 
 
@@ -873,6 +878,19 @@ def note_drift_retune() -> None:
     coarse feature bucket changed — either way the warm path was
     abandoned and capacities/modes were re-derived."""
     _stats.drift_retunes += 1
+
+
+def note_dispatch_lookup(hit: bool) -> None:
+    """Count one serving-dispatch bucket lookup (``dispatch_hits`` /
+    ``dispatch_misses``): the pattern-bucketed serving cache
+    (``core.envelope.DispatchCache``) resolved a per-batch dispatch mask
+    against its warmed per-bucket envelopes — a hit means zero per-batch
+    pattern walks (the warm serving path), a miss means a new bucket was
+    warmed (once per request-mix regime, not per batch)."""
+    if hit:
+        _stats.dispatch_hits += 1
+    else:
+        _stats.dispatch_misses += 1
 
 
 def get_local_compiled(

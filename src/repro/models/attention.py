@@ -168,7 +168,7 @@ def decode_attention(
     q: jax.Array,  # (B, H, 1, D)
     k_cache: jax.Array,  # (B, Hkv, Smax, D)
     v_cache: jax.Array,
-    length: jax.Array,  # scalar: number of valid cache positions
+    length: jax.Array,  # scalar or (B,): number of valid cache positions
     *,
     window: int | None = None,
     softcap: float | None = None,
@@ -191,10 +191,19 @@ def decode_attention(
     if softcap is not None:
         s_ = jnp.tanh(s_ / softcap) * softcap
     kpos = jnp.arange(smax)
-    msk = kpos < length
-    if window is not None:
-        msk &= kpos > length - 1 - window
-    s_ = jnp.where(msk[None, None, None], s_, NEG_INF)
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        msk = kpos < length
+        if window is not None:
+            msk &= kpos > length - 1 - window
+        s_ = jnp.where(msk[None, None, None], s_, NEG_INF)
+    else:
+        # per-slot cache fill levels: continuous-batching refill leaves
+        # each batch slot at its own decode position
+        msk = kpos[None, :] < length[:, None]  # (B, Smax)
+        if window is not None:
+            msk &= kpos[None, :] > length[:, None] - 1 - window
+        s_ = jnp.where(msk[:, None, None, :], s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1)
     out = jnp.einsum(
         "bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,

@@ -51,9 +51,15 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)  # (hd/2,)
     ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
-    # broadcast ang over leading dims of x
-    while ang.ndim < x.ndim:
-        ang = ang[None]
+    # broadcast ang over leading dims of x; batched positions (B, S) keep
+    # their batch dim aligned with x's leading axis and broadcast over the
+    # head axes in between (per-slot decode positions, serving refill)
+    if positions.ndim == 1:
+        while ang.ndim < x.ndim:
+            ang = ang[None]
+    else:
+        while ang.ndim < x.ndim:
+            ang = ang[:, None]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -23,12 +23,27 @@ batched expert matmuls.  Buffer size is top_k * capacity_factor * input —
 the memory the technique inherently trades.
 
 The (token-block x expert) structure is block-sparse: the paper's SpGEMM
-view of MoE is benchmarked in benchmarks/moe_spgemm.py.
+view of MoE is benchmarked in benchmarks/moe_spgemm.py, and the fourth
+implementation executes it:
+
+* ``spgemm``  — the serving path (DESIGN.md §11).  The per-batch routing
+  decision becomes a (token-block x expert) dispatch BSM and the expert
+  matmuls run through ``core.engine.multiply`` against block-diagonal
+  expert weight banks, so the serving hot loop exercises the same
+  compacted stacks / envelope / tuner machinery as the scientific
+  workloads.  Under a :class:`DispatchSpec` (installed by the serving
+  engine via :func:`dispatch_scope`) the multiplies reuse a warmed
+  pattern envelope: one compiled program across a drifting request
+  stream, zero per-batch pattern walks.
 """
 from __future__ import annotations
 
+import contextlib
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.config import ArchConfig, MoEConfig
@@ -121,6 +136,75 @@ def load_balance_loss(probs: jax.Array, top_e: jax.Array, n_experts: int) -> jax
 
 
 # ---------------------------------------------------------------------------
+# serving dispatch scope (models <-> serving glue, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DispatchSpec:
+    """A serving-resolved dispatch decision for the ``spgemm`` impl.
+
+    Installed around tracing with :func:`dispatch_scope`; everything here
+    is a trace-time static, so the serving engine keys its compiled
+    programs by ``envelope.signature`` — envelope capacities join the jit
+    key.  ``envelope`` only applies when its ``mask_a`` shape matches the
+    (nb_tok, E) dispatch grid of the call (prefill and decode see
+    different nb_tok); non-matching calls take the structural-bound cold
+    path.  A covering envelope clips nothing, so the spgemm impl stays
+    bit-close to the dense oracle; routed choices outside the envelope
+    are dropped and counted (the serving analogue of capacity drops).
+    """
+
+    envelope: object | None = None  # core.envelope.Envelope
+    backend: str | None = None  # None -> "stacks"
+    stack_capacity: int | None = None  # None -> envelope/structural bound
+
+
+_DISPATCH_SPEC: DispatchSpec | None = None
+
+
+@contextlib.contextmanager
+def dispatch_scope(spec: DispatchSpec | None):
+    """Install ``spec`` as the ambient dispatch decision while tracing."""
+    global _DISPATCH_SPEC
+    prev = _DISPATCH_SPEC
+    _DISPATCH_SPEC = spec
+    try:
+        yield spec
+    finally:
+        _DISPATCH_SPEC = prev
+
+
+def current_dispatch_spec() -> DispatchSpec | None:
+    return _DISPATCH_SPEC
+
+
+def dispatch_block_mask(top_e: jax.Array, n_experts: int, token_block: int,
+                        valid: jax.Array | None = None) -> jax.Array:
+    """(T, K) routed expert ids -> (T // token_block, E) bool dispatch mask.
+
+    Block (i, e) is occupied iff any (valid) token in block i routed one
+    of its K choices to expert e — the block-sparse operand structure of
+    the SpGEMM view of MoE (benchmarks/moe_spgemm.py builds its occupancy
+    sweeps from this same function).  Traceable: works on traced ids
+    inside the serving decode program as well as on concrete host arrays.
+    """
+    t, k = top_e.shape
+    if t % token_block:
+        raise ValueError(
+            f"token count {t} not divisible by token_block {token_block}"
+        )
+    nb = t // token_block
+    oh = jax.nn.one_hot(top_e.reshape(nb, token_block * k), n_experts,
+                        dtype=jnp.float32)  # (nb, tb*K, E)
+    if valid is not None:
+        v = jnp.repeat(valid.astype(jnp.float32), k).reshape(
+            nb, token_block * k)
+        oh = oh * v[..., None]
+    return jnp.max(oh, axis=1) > 0.5
+
+
+# ---------------------------------------------------------------------------
 # dispatch paths
 # ---------------------------------------------------------------------------
 
@@ -198,11 +282,120 @@ def _apply_capacity(cfg: ArchConfig, p, x: jax.Array, top_w, top_e, *, ep: bool)
         w = (wr * kr.astype(wr.dtype)).astype(y.dtype)
         return jnp.sum(y * w[..., None], axis=1)
 
-    return jax.vmap(combine)(yb, top_e, slot, keep, top_w)
+    dropped = jnp.sum(1 - keep.astype(jnp.int32))
+    return jax.vmap(combine)(yb, top_e, slot, keep, top_w), dropped
 
 
-def apply_moe(cfg: ArchConfig, p, x: jax.Array):
-    """x (B, S, d) -> (y (B, S, d), aux load-balance loss)."""
+def _diag_expert_bsm(w: jax.Array):
+    """(E, din, dout) expert bank -> (E, E) block-diagonal BSM.
+
+    Diagonal B means every occupied dispatch block contributes exactly one
+    product, so the multiply's product count equals nnz(dispatch mask).
+    """
+    from repro.core import bsm as B
+
+    e = w.shape[0]
+    blocks = jnp.zeros((e, e) + w.shape[1:], w.dtype)
+    blocks = blocks.at[jnp.arange(e), jnp.arange(e)].set(w)
+    return B.make_bsm(blocks, jnp.eye(e, dtype=bool))
+
+
+def _apply_spgemm(cfg: ArchConfig, p, x: jax.Array, top_w, top_e):
+    """Expert dispatch as block-sparse SpGEMM through ``engine.multiply``.
+
+    Tokens are grouped into blocks of ``moe.token_block``; the routing
+    decision becomes an (nb_tok, E) dispatch BSM A whose occupied blocks
+    replicate the token block across its routed expert columns, and the
+    three expert matmuls (in / gate / out) run A against block-diagonal
+    weight banks.  The combine gathers each token's K expert outputs back
+    with the router weights, so the result matches the dense oracle
+    exactly (no capacity drops) whenever the ambient envelope covers the
+    pattern — the bit-closeness the serving bench gates on.
+    """
+    from repro.core import bsm as B
+    from repro.core import engine as core_engine
+    from repro.kernels.stacks import bucket_capacity
+
+    moe = cfg.moe
+    e, de = moe_dims(cfg)
+    b, s, d = x.shape
+    k = moe.top_k
+    tpb = moe.token_block
+    t = b * s
+    xt = x.reshape(t, d)
+    te = top_e.reshape(t, k)
+    tw = top_w.reshape(t, k)
+    pad = (-t) % tpb
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+        te = jnp.pad(te, ((0, pad), (0, 0)))
+        tw = jnp.pad(tw, ((0, pad), (0, 0)))
+    tt = t + pad
+    nb = tt // tpb
+    valid = jnp.arange(tt) < t
+    mask = dispatch_block_mask(te, e, tpb, valid=valid)  # (nb, E)
+
+    spec = current_dispatch_spec()
+    env = spec.envelope if spec is not None else None
+    if env is not None and tuple(np.asarray(env.mask_a).shape) != (nb, e):
+        env = None  # prefill vs decode grid mismatch: structural fallback
+    keep = jnp.ones((tt, k), bool)
+    if env is not None:
+        # clip the dispatch to the envelope so the warmed capacity is
+        # sound under tracing (compact_pair_mask silently drops excess
+        # products); clipped routed choices are the serving drop stat
+        clip = jnp.asarray(np.asarray(env.mask_a, bool))
+        mask = mask & clip
+        blk = jnp.arange(tt) // tpb
+        keep = clip[blk[:, None], te]
+    dropped = jnp.sum((valid[:, None] & ~keep).astype(jnp.int32))
+
+    backend = (spec.backend if spec is not None and spec.backend
+               else "stacks")
+    cap = spec.stack_capacity if spec is not None else None
+    if cap is None and env is None:
+        # structural bound: every block row occupies at most min(tb*K, E)
+        # expert columns, diagonal B gives one product per occupied block
+        cap = bucket_capacity(nb * min(tpb * k, e))
+
+    a_blocks = jnp.broadcast_to(
+        xt.reshape(nb, tpb, d)[:, None], (nb, e, tpb, d))
+    A = B.make_bsm(a_blocks, mask)
+
+    def mult(a_bsm, w_bank):
+        return core_engine.multiply(
+            a_bsm, _diag_expert_bsm(w_bank), backend=backend,
+            stack_capacity=cap, envelope=env)
+
+    h = mult(A, p["w_in"])  # (nb, E) blocks of (tb, de)
+    if cfg.mlp == "swiglu":
+        g = mult(A, p["w_gate"])
+        hb = jax.nn.silu(g.blocks) * h.blocks
+    elif cfg.mlp == "geglu":
+        g = mult(A, p["w_gate"])
+        hb = jax.nn.gelu(g.blocks) * h.blocks
+    else:
+        hb = jax.nn.gelu(h.blocks)
+    # act(0) = 0 for gelu/silu, so masked blocks stay zero; make_bsm
+    # re-zeroes and refreshes norms to keep the BSM consistent anyway
+    out = mult(B.make_bsm(hb, h.mask), p["w_out"])  # (nb, E) x (tb, d)
+
+    yt = out.blocks.transpose(0, 2, 1, 3).reshape(tt, e, d)
+    y = yt[jnp.arange(tt)[:, None], te]  # (tt, K, d)
+    w = (tw * keep.astype(tw.dtype)).astype(y.dtype)
+    y = jnp.sum(y * w[..., None], axis=1)[:t]
+    return y.reshape(b, s, d), dropped
+
+
+def apply_moe(cfg: ArchConfig, p, x: jax.Array, *, collect_stats: bool = False):
+    """x (B, S, d) -> (y (B, S, d), aux load-balance loss).
+
+    With ``collect_stats=True`` returns ``(y, aux, stats)`` where stats
+    carries ``dropped`` (routed (token, choice) pairs lost to capacity /
+    envelope clipping; always 0 for the dense oracle) and ``routed``
+    (total routed pairs) — the drop-rate the serving bench reports
+    against ``capacity_factor``.
+    """
     moe = cfg.moe
     e, _ = moe_dims(cfg)
     logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
@@ -210,13 +403,21 @@ def apply_moe(cfg: ArchConfig, p, x: jax.Array):
     aux = load_balance_loss(probs, top_e, e)
     top_w = top_w.astype(x.dtype)
 
+    dropped = jnp.zeros((), jnp.int32)
     if moe.impl == "dense":
         y = _apply_dense(cfg, p, x, top_w, top_e)
     elif moe.impl in ("tp", "ep"):
-        y = _apply_capacity(cfg, p, x, top_w, top_e, ep=(moe.impl == "ep"))
+        y, dropped = _apply_capacity(cfg, p, x, top_w, top_e,
+                                     ep=(moe.impl == "ep"))
+    elif moe.impl == "spgemm":
+        y, dropped = _apply_spgemm(cfg, p, x, top_w, top_e)
     else:
         raise ValueError(f"unknown moe impl {moe.impl!r}")
 
     if moe.n_shared:
         y = y + _shared_ffn(cfg, p, x)
+    if collect_stats:
+        stats = {"dropped": dropped,
+                 "routed": jnp.asarray(top_e.size, jnp.int32)}
+        return y, aux, stats
     return y, aux

@@ -234,9 +234,19 @@ def _apply_block_train(cfg, kind, p, x, positions, enc_out=None):
 
 
 def _update_kv(cache_k, cache_v, k, v, position):
-    """Write new K/V at `position` (decode) or [0, S) (prefill)."""
-    ck = lax.dynamic_update_slice(cache_k, k, (0, 0, position, 0))
-    cv = lax.dynamic_update_slice(cache_v, v, (0, 0, position, 0))
+    """Write new K/V at `position` (decode) or [0, S) (prefill).
+
+    A vector position (B,) writes each batch slot's single new row at its
+    own fill level — continuous-batching refill desynchronizes the slots.
+    """
+    pos = jnp.asarray(position)
+    if pos.ndim == 0:
+        ck = lax.dynamic_update_slice(cache_k, k, (0, 0, position, 0))
+        cv = lax.dynamic_update_slice(cache_v, v, (0, 0, position, 0))
+        return ck, cv
+    bidx = jnp.arange(cache_k.shape[0])
+    ck = cache_k.at[bidx, :, pos, :].set(k[:, :, 0, :])
+    cv = cache_v.at[bidx, :, pos, :].set(v[:, :, 0, :])
     return ck, cv
 
 
@@ -244,7 +254,8 @@ def _apply_block_decode(cfg, kind, p, x, cache, position, enc_out=None):
     """Single-token decode body. Returns (x, new_cache)."""
     if kind["mixer"] == "attention":
         xn = L.apply_norm(cfg, p["ln1"], x)
-        pos = jnp.full((1,), position)
+        pv = jnp.asarray(position)
+        pos = pv[:, None] if pv.ndim else jnp.full((1,), position)
         q, k, v = A.qkv_proj(cfg, p["attn"], xn, pos if cfg.rope else None)
         ck, cv = _update_kv(cache["k"], cache["v"], k, v, position)
         o = A.decode_attention(
@@ -487,20 +498,26 @@ def decode_step(
     params: Params,
     tokens: jax.Array,  # (B, 1)
     cache: Params,
-    position: jax.Array,  # scalar int32: write offset == cache fill level
+    position: jax.Array,  # int32 scalar or (B,): write offset == fill level
 ) -> tuple[jax.Array, Params]:
-    """One serving step: (logits (B, 1, V), updated cache)."""
+    """One serving step: (logits (B, 1, V), updated cache).
+
+    ``position`` may be a (B,) vector of per-slot fill levels: continuous
+    batching refills slots mid-stream, so slots decode at different
+    positions within one step.
+    """
     x = L.embed_tokens(params["embed"], tokens)
     if not cfg.rope:
-        # absolute sinusoidal at the current position (whisper)
+        # absolute sinusoidal at the current position(s) (whisper)
         d = cfg.d_model
-        pos = position.astype(jnp.float32)
+        pos = jnp.asarray(position, jnp.float32).reshape(-1)  # (1,) or (B,)
         div = jnp.exp(
             jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d)
         )
-        pe = jnp.zeros((d,), jnp.float32)
-        pe = pe.at[0::2].set(jnp.sin(pos * div)).at[1::2].set(jnp.cos(pos * div))
-        x = x + pe.astype(x.dtype)
+        ang = pos[:, None] * div  # (n, d/2)
+        pe = jnp.zeros((pos.shape[0], d), jnp.float32)
+        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe[:, None, :].astype(x.dtype)
     x = shard_act(x, "btd")
     kinds = cfg.layer_kinds()
 

@@ -7,10 +7,30 @@ step always runs the full batch — finished slots just carry padding, the
 standard static-batch serving compromise on TPU where shapes must not
 change).  Every jit boundary (prefill / decode_step / sample) compiles once
 per shape.
+
+Two entry points:
+
+* ``generate``  — one fully-batched round: same-length prompts in, decoded
+  continuations out (the original static round, kept for tests/examples);
+* ``serve``     — drain a request queue through the slots: eos / length
+  exhaustion frees a slot, the next queued request prefills into it, and
+  decode proceeds with per-slot cache positions (``decode_step`` takes a
+  (B,) position vector).  Per-step wall times and occupancy land in
+  ``last_serve_stats`` for the traffic bench.
+
+Serving dispatch (DESIGN.md §11): ``set_dispatch`` installs a
+``models.moe.DispatchSpec`` — a warmed pattern envelope plus the decision
+resolved for its bucket — and prefill/decode are re-jitted under
+``dispatch_scope`` with the spec's statics baked in.  Programs are cached
+per spec (envelope signature, backend, capacity), so envelope capacities
+join the jit key and a drifting request stream inside one envelope reuses
+one compiled program.
 """
 from __future__ import annotations
 
 import functools
+import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -18,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ArchConfig
+from repro.models import moe as MoE
 from repro.models import transformer as T
 
 
@@ -33,6 +54,7 @@ class GenerationConfig:
 class _Request:
     rid: int
     prompt: np.ndarray
+    arrival: int = 0  # decode-step index at which the request exists
     out: list[int] = field(default_factory=list)
     done: bool = False
 
@@ -53,11 +75,45 @@ class ServingEngine:
         self.max_len = max_len
         self.gen = gen
         self._key = jax.random.key(gen.seed)
+        self._dispatch: MoE.DispatchSpec | None = None
+        # compiled (prefill, decode) pairs keyed by the dispatch spec's
+        # statics — the envelope signature IS part of the jit key
+        self._programs: dict[tuple, tuple] = {}
+        self.last_serve_stats: dict = {}
 
-        self._prefill = jax.jit(
-            functools.partial(T.prefill, cfg)
-        )
-        self._decode = jax.jit(functools.partial(T.decode_step, cfg))
+    # -- dispatch spec (serving path, DESIGN.md §11) -----------------------
+    def set_dispatch(self, spec: MoE.DispatchSpec | None) -> None:
+        """Install the ambient dispatch decision for the MoE spgemm impl.
+
+        Programs traced under a previous spec stay cached; switching back
+        to an already-seen envelope reuses its compiled pair.
+        """
+        self._dispatch = spec
+
+    def _spec_key(self) -> tuple:
+        s = self._dispatch
+        if s is None:
+            return (None,)
+        sig = s.envelope.signature if s.envelope is not None else None
+        return (sig, s.backend, s.stack_capacity)
+
+    def _program(self) -> tuple:
+        key = self._spec_key()
+        prog = self._programs.get(key)
+        if prog is None:
+            cfg, spec = self.cfg, self._dispatch
+
+            def pf(params, toks, cache, _spec=spec):
+                with MoE.dispatch_scope(_spec):
+                    return T.prefill(cfg, params, toks, cache)
+
+            def df(params, toks, cache, position, _spec=spec):
+                with MoE.dispatch_scope(_spec):
+                    return T.decode_step(cfg, params, toks, cache, position)
+
+            prog = (jax.jit(pf), jax.jit(df))
+            self._programs[key] = prog
+        return prog
 
     # -- sampling ----------------------------------------------------------
     def _sample(self, logits: jax.Array) -> jax.Array:
@@ -72,13 +128,14 @@ class ServingEngine:
     def generate(self, prompts: list[np.ndarray]) -> list[list[int]]:
         """Generate for up to `batch` same-length prompts (padded equal)."""
         assert len(prompts) <= self.batch
+        prefill_fn, decode_fn = self._program()
         plen = max(len(p) for p in prompts)
         toks = np.zeros((self.batch, plen), np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p) :] = p  # left-pad
 
         cache = T.init_cache(self.cfg, self.batch, self.max_len)
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        logits, cache = prefill_fn(self.params, jnp.asarray(toks), cache)
         next_tok = self._sample(logits)
 
         outs: list[list[int]] = [[] for _ in range(self.batch)]
@@ -92,9 +149,120 @@ class ServingEngine:
                         done[i] = True
             if done[: len(prompts)].all():
                 break
-            logits, cache = self._decode(
+            logits, cache = decode_fn(
                 self.params, next_tok[:, None], cache, position
             )
             next_tok = self._sample(logits)
             position = position + 1
         return outs[: len(prompts)]
+
+    # -- continuous batching -----------------------------------------------
+    def _refill(self, queue, active, cache, next_tok, pos_dev, plen,
+                prefill_fn, step: int):
+        """Prefill queued requests into free slots and splice their rows.
+
+        One full-batch prefill program regardless of how many slots refill
+        (shapes must not change); the fresh cache rows are scattered into
+        the live cache along the batch axis (axis 1 of every leaf).
+        """
+        free = [i for i, r in enumerate(active) if r is None]
+        slots: list[int] = []
+        toks = np.zeros((self.batch, plen), np.int32)
+        for slot in free:
+            if not queue or queue[0].arrival > step:
+                break
+            req = queue.popleft()
+            toks[slot, plen - len(req.prompt):] = req.prompt
+            active[slot] = req
+            slots.append(slot)
+        if not slots:
+            return cache, next_tok, pos_dev, 0
+        fresh = T.init_cache(self.cfg, self.batch, self.max_len)
+        logits, fresh = prefill_fn(self.params, jnp.asarray(toks), fresh)
+        first = self._sample(logits)
+        sel = jnp.zeros((self.batch,), bool).at[jnp.asarray(slots)].set(True)
+
+        def mix(old, new):
+            s = sel.reshape((1, self.batch) + (1,) * (old.ndim - 2))
+            return jnp.where(s, new, old)
+
+        cache = jax.tree.map(mix, cache, fresh)
+        idx = jnp.asarray(slots)
+        next_tok = next_tok.at[idx].set(first[idx])
+        pos_dev = pos_dev.at[idx].set(plen)
+        return cache, next_tok, pos_dev, len(slots)
+
+    def serve(self, prompts: list[np.ndarray],
+              arrivals: list[int] | None = None) -> list[list[int]]:
+        """Drain a request queue through the ``batch`` slots.
+
+        ``arrivals`` (optional, decode-step units, non-decreasing) holds
+        request i back until that step — the traffic-shaping hook the
+        serving bench drives Poisson/bursty processes through.  Returns
+        the generated token lists in request order; per-step wall times,
+        occupancy and refill counts land in ``last_serve_stats``.
+        """
+        if arrivals is None:
+            arrivals = [0] * len(prompts)
+        assert len(arrivals) == len(prompts)
+        prefill_fn, decode_fn = self._program()
+        plen = max(len(p) for p in prompts)
+        assert plen + 1 < self.max_len
+        max_new = self.gen.max_new_tokens
+        limit = min(max_new, self.max_len - plen - 1)
+
+        queue = deque(
+            _Request(i, np.asarray(p, np.int32), arrival=int(a))
+            for i, (p, a) in enumerate(zip(prompts, arrivals))
+        )
+        active: list[_Request | None] = [None] * self.batch
+        results: dict[int, list[int]] = {}
+        cache = T.init_cache(self.cfg, self.batch, self.max_len)
+        next_tok = jnp.zeros((self.batch,), jnp.int32)
+        pos_dev = jnp.zeros((self.batch,), jnp.int32)
+
+        step = 0
+        steps: list[dict] = []
+        n_refills = 0
+        while queue or any(r is not None for r in active):
+            t0 = time.perf_counter()
+            cache, next_tok, pos_dev, filled = self._refill(
+                queue, active, cache, next_tok, pos_dev, plen,
+                prefill_fn, step)
+            n_refills += 1 if filled else 0
+            occupied = [i for i, r in enumerate(active) if r is not None]
+            if not occupied:
+                # idle gap before the next arrival: jump the clock
+                step = max(step + 1, queue[0].arrival if queue else step + 1)
+                continue
+            logits, cache = decode_fn(
+                self.params, next_tok[:, None], cache, pos_dev)
+            sampled = self._sample(logits)
+            host_prev = np.asarray(next_tok)
+            jax.block_until_ready(sampled)
+            dt = time.perf_counter() - t0
+            # the token decoded THIS step is the one that was in next_tok
+            for i in occupied:
+                req = active[i]
+                tok = int(host_prev[i])
+                req.out.append(tok)
+                eos = (self.gen.eos_token is not None
+                       and tok == self.gen.eos_token)
+                if eos or len(req.out) >= limit:
+                    results[req.rid] = req.out
+                    active[i] = None
+            next_tok = sampled
+            pos_dev = jnp.minimum(pos_dev + 1, self.max_len - 1)
+            steps.append({
+                "step": step,
+                "occupancy": len(occupied) / self.batch,
+                "wall_s": dt,
+                "refilled": filled,
+            })
+            step += 1
+        self.last_serve_stats = {
+            "steps": steps,
+            "n_refills": n_refills,
+            "n_requests": len(prompts),
+        }
+        return [results[i] for i in range(len(prompts))]

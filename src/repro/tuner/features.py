@@ -180,6 +180,38 @@ def _decile(x: float, step: float = 0.1) -> int:
     return min(int(x / step), int(round(1.0 / step)))
 
 
+def mask_bucket(mask, bs_r: int = 1, bs_c: int = 1) -> tuple:
+    """Coarse bucket of a SINGLE operand mask — the serving-dispatch key.
+
+    The pattern-bucketed serving cache (``core.envelope.DispatchCache``)
+    keys its per-bucket union envelopes on this: the same log2 shape
+    classes and occupancy deciles as :func:`feature_bucket`, plus a
+    row-load class (max/mean occupied blocks per block row — how peaked
+    the expert demand is).  Request mixes whose dispatch masks drift
+    *within* a bucket share one warmed envelope (and its compiled
+    program); a mix that moves the occupancy or row-load class lands in a
+    new bucket and warms it once.
+    """
+    m = np.asarray(mask, bool)
+    if m.ndim != 2:
+        raise ValueError(f"mask_bucket needs a 2D mask, got shape {m.shape}")
+    nb_r, nb_c = m.shape
+    occ = float(m.mean()) if m.size else 0.0
+    row = m.sum(axis=1).astype(np.float64)
+    mean = row.mean() if row.size else 0.0
+    peak = float(row.max() / mean) if mean > 0 else 1.0
+    return (
+        "db1",  # dispatch-bucket schema version
+        _log2_class(nb_r), _log2_class(nb_c),
+        _log2_class(bs_r), _log2_class(bs_c),
+        _decile(occ),
+        # half-integer row-load classes, capped at 4x (hot-expert mixes
+        # must not share an envelope with balanced ones: their union
+        # would be needlessly loose for both)
+        min(int(round(peak * 2)), 8),
+    )
+
+
 def feature_bucket(f: PairFeatures) -> tuple:
     """Coarse, stable bucket of a feature vector — the tuning-DB key part.
 

@@ -251,3 +251,126 @@ def test_envelope_capacity_dominates_members():
     for m in masks:
         exact = int(pair_cube(m, masks[0]).sum())
         assert env.local_capacity() >= exact
+
+
+# ---- DispatchCache: the serving-grade pattern-bucketed cache ---------------
+
+
+def _routing_mask(nb, e, cols):
+    """(nb, e) dispatch mask: every block row routes to ``cols``."""
+    m = np.zeros((nb, e), bool)
+    m[:, list(cols)] = True
+    return m
+
+
+def test_dispatch_cache_warm_then_all_hits():
+    """A calibration-warmed bucket serves its whole mix as hits: no
+    misses, no drift, and the envelope covers every stream mask."""
+    rng = np.random.default_rng(0)
+    eye = np.eye(8, dtype=bool)
+    masks = [rng.random((8, 8)) < 0.4 for _ in range(6)]
+    cache = E.DispatchCache(eye).warm(masks)
+    assert cache.stats()["hits"] == 0  # calibration is not traffic
+
+    plan_mod.clear_cache()
+    for m in masks:
+        env, dec = cache.resolve(m)
+        assert env.covers(m, eye)
+        assert dec["backend"] in ("jnp", "stacks", "pallas")
+        assert dec["capacity"] >= 1
+    st = plan_mod.cache_stats()
+    assert st["dispatch_hits"] == 6, st
+    assert st["dispatch_misses"] == 0, st
+    assert st["drift_retunes"] == 0, st
+    assert cache.stats()["hits"] == 6
+
+
+def test_dispatch_cache_miss_then_widen_then_hit():
+    """Cold bucket: first mask is a miss; an uncovered same-bucket mask
+    widens the union (drift retune) and re-resolves the decision; the
+    widened envelope then covers both mixes."""
+    eye = np.eye(8, dtype=bool)
+    m1 = _routing_mask(8, 8, (0, 1))
+    m2 = _routing_mask(8, 8, (2, 3))  # same occupancy/row-load bucket
+    cache = E.DispatchCache(eye)
+    assert cache.bucket_of(m1) == cache.bucket_of(m2)
+
+    plan_mod.clear_cache()
+    cache.resolve(m1)
+    st = plan_mod.cache_stats()
+    assert (st["dispatch_misses"], st["drift_retunes"]) == (1, 0), st
+
+    env, _ = cache.resolve(m2)
+    st = plan_mod.cache_stats()
+    assert st["drift_retunes"] == 1, st
+    assert cache.stats()["widenings"] == 1
+    assert env.covers(m1, eye) and env.covers(m2, eye)
+
+    cache.resolve(m2)
+    st = plan_mod.cache_stats()
+    assert st["dispatch_hits"] == 1, st
+    assert len(cache) == 1
+
+
+def test_dispatch_cache_new_bucket_per_regime():
+    """A mix whose occupancy moves a decile lands in a NEW bucket (its
+    own envelope) instead of loosening the first bucket's union."""
+    eye = np.eye(8, dtype=bool)
+    sparse = _routing_mask(8, 8, (0,))  # occupancy 1/8
+    dense = _routing_mask(8, 8, range(7))  # occupancy 7/8
+    cache = E.DispatchCache(eye)
+    assert cache.bucket_of(sparse) != cache.bucket_of(dense)
+    plan_mod.clear_cache()
+    cache.resolve(sparse)
+    cache.resolve(dense)
+    st = plan_mod.cache_stats()
+    assert st["dispatch_misses"] == 2 and st["drift_retunes"] == 0, st
+    assert len(cache) == 2
+
+
+def test_dispatch_cache_db_roundtrip_capacity_monotone(tmp_path):
+    """The tuner DB as a serving asset: a persisted dispatch decision
+    warm-starts a relaunch (source == "db"), but only while its recorded
+    capacity still covers the new launch's envelope."""
+    import repro.tuner as tuner
+
+    eye = np.eye(8, dtype=bool)
+    mask = _routing_mask(8, 8, (1, 4))
+    path = str(tmp_path / "db.json")
+    plan_mod.clear_cache()
+    tuner.set_default_db(path)
+    try:
+        cache = E.DispatchCache(eye)
+        env, dec = cache.resolve(mask)
+        assert dec["source"] == "analytic"
+        key = cache._db_key(cache.bucket_of(mask))
+        rec = tuner.get_default_db().lookup(key)
+        assert rec is not None and rec["capacity"] == dec["capacity"]
+
+        # relaunch: fresh cache, same DB -> measurement-free warm start
+        relaunch = E.DispatchCache(eye)
+        _, dec2 = relaunch.resolve(mask)
+        assert dec2["source"] == "db"
+        assert dec2["capacity"] == dec["capacity"]
+
+        # a stale record whose capacity no longer covers the envelope is
+        # re-derived and re-recorded, not trusted
+        tuner.get_default_db().record(
+            key, {"backend": dec["backend"], "capacity": 1})
+        stale = E.DispatchCache(eye)
+        _, dec3 = stale.resolve(mask)
+        assert dec3["source"] == "analytic"
+        assert dec3["capacity"] == dec["capacity"]
+        assert tuner.get_default_db().lookup(key)["capacity"] == dec["capacity"]
+    finally:
+        plan_mod.clear_cache()  # drops the DB binding
+
+
+def test_dispatch_cache_decision_fn_override():
+    """An injected decision_fn pins the decision (no DB, no cost model)."""
+    eye = np.eye(8, dtype=bool)
+    cache = E.DispatchCache(
+        eye, decision_fn=lambda env: {"backend": "jnp", "capacity": 64,
+                                      "source": "pinned"})
+    _, dec = cache.resolve(_routing_mask(8, 8, (0, 5)))
+    assert dec == {"backend": "jnp", "capacity": 64, "source": "pinned"}

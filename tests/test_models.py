@@ -208,3 +208,94 @@ def test_training_reduces_loss():
         params, state, loss = step(params, state, b)
         losses.append(float(loss))
     assert losses[-1] < losses[0] - 0.1, losses
+
+
+# ---------------------------------------------------------------------------
+# MoE drop accounting + spgemm serving impl
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(impl, capacity_factor=1.25, token_block=4):
+    from repro.config import ArchConfig, MoEConfig
+
+    moe = MoEConfig(n_experts=8, top_k=2, d_expert=32, impl=impl,
+                    capacity_factor=capacity_factor, token_block=token_block)
+    return ArchConfig(name=f"test-moe-{impl}", family="llama", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab=128, mlp="swiglu", moe=moe)
+
+
+def _moe_fixture(impl, seed=0, b=2, s=24, **kw):
+    from repro.models import moe as M
+
+    cfg = _moe_cfg(impl, **kw)
+    p = M.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, cfg.d_model),
+                          jnp.float32)
+    return cfg, p, x
+
+
+def test_moe_drop_accounting_dense_vs_tp():
+    """The dense oracle never drops; the tp buffer impl drops exactly the
+    over-capacity routed pairs, and with generous capacity drops nothing
+    and matches dense."""
+    from repro.models import moe as M
+
+    cfg, p, x = _moe_fixture("tp", capacity_factor=0.5)
+    cfg_d = _moe_cfg("dense")
+
+    yd, _, st_d = M.apply_moe(cfg_d, p, x, collect_stats=True)
+    assert int(st_d["dropped"]) == 0
+    assert int(st_d["routed"]) == x.shape[0] * x.shape[1] * cfg.moe.top_k
+
+    yt, _, st_t = M.apply_moe(cfg, p, x, collect_stats=True)
+    # oracle drop count straight from the router: per batch row, routed
+    # pairs land in token order, so expert e keeps min(count_e, capacity)
+    b, s, _ = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    cap = max(int(s * k * cfg.moe.capacity_factor / e), 1)
+    logits = (x.astype(jnp.float32).reshape(-1, cfg.d_model)
+              @ p["router"]).reshape(b, s, e)
+    _, top_e, _ = M.router_probs(cfg.moe, logits.reshape(-1, e))
+    te = np.asarray(top_e).reshape(b, s, k)
+    want_dropped = sum(
+        max(0, int((te[r] == ex).sum()) - cap)
+        for r in range(b) for ex in range(e))
+    assert int(st_t["dropped"]) == want_dropped
+    assert want_dropped > 0  # capacity_factor 0.5 must actually clip
+    assert int(st_t["routed"]) == int(st_d["routed"])
+
+    # generous capacity: nothing dropped, tp == dense
+    cfg_big = _moe_cfg("tp", capacity_factor=float(e))
+    yb, _, st_b = M.apply_moe(cfg_big, p, x, collect_stats=True)
+    assert int(st_b["dropped"]) == 0
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(yd),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_spgemm_matches_dense_oracle():
+    """The serving spgemm impl (dispatch mask -> BSM -> multiply) equals
+    the dense oracle with zero drops, including ragged T (padding)."""
+    from repro.models import moe as M
+
+    for s in (24, 27):  # 27: not a token_block multiple -> padded tail
+        cfg, p, x = _moe_fixture("spgemm", s=s)
+        cfg_d = _moe_cfg("dense")
+        yd, aux_d = M.apply_moe(cfg_d, p, x)
+        ys, aux_s, st = M.apply_moe(cfg, p, x, collect_stats=True)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yd),
+                                   rtol=1e-4, atol=1e-5)
+        assert int(st["dropped"]) == 0
+        np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_moe_unknown_impl_raises():
+    from repro.models import moe as M
+
+    cfg, p, x = _moe_fixture("dense")
+    import dataclasses
+
+    bad = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, impl="nope"))
+    with pytest.raises(ValueError, match="unknown moe impl"):
+        M.apply_moe(bad, p, x)
